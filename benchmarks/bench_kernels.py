@@ -1,0 +1,74 @@
+"""Kernel-layer bench: shape sweep of each Pallas kernel (interpret mode)
+against its jnp oracle — max abs error + oracle wall time (the CPU execution
+path's cost; TPU timings are the dry-run/roofline's business)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_xla import flash_attention_xla
+
+from benchmarks.common import emit, timeit
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run() -> list[dict]:
+    rows = []
+
+    # qn_apply sweep — THE SHINE op
+    for (m, b, d) in [(8, 4, 256), (16, 8, 1024), (30, 4, 4096)]:
+        ks = jax.random.split(jax.random.fold_in(KEY, m + d), 3)
+        u = jax.random.normal(ks[0], (m, b, d))
+        v = jax.random.normal(ks[1], (m, b, d))
+        x = jax.random.normal(ks[2], (b, d))
+        mask = jnp.ones((m, b), jnp.float32)
+        want = ref.qn_apply_ref(u, v, x, jnp.float32(1.0), mask)
+        got = ops.qn_apply(u, v, x, jnp.float32(1.0), mask,
+                           impl="pallas_interpret")
+        t = timeit(jax.jit(lambda u, v, x: ref.qn_apply_ref(
+            u, v, x, jnp.float32(1.0), mask)), u, v, x, iters=3)
+        rows.append({"kernel": "qn_apply", "shape": f"m{m}xB{b}xD{d}",
+                     "max_abs_err": float(jnp.abs(got - want).max()),
+                     "oracle_ms": round(t * 1e3, 3)})
+
+    # flash_xla sweep vs dense oracle
+    for (s, h, kv, hd) in [(256, 4, 4, 64), (512, 8, 2, 64), (1024, 4, 4, 128)]:
+        ks = jax.random.split(jax.random.fold_in(KEY, s + hd), 3)
+        q = jax.random.normal(ks[0], (2, s, h, hd), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (2, s, kv, hd), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (2, s, kv, hd), jnp.bfloat16)
+        want = ref.attention_ref(q, k, v, causal=True)
+        got = flash_attention_xla(q, k, v, causal=True, block_q=128,
+                                  block_kv=256)
+        t_ref = timeit(jax.jit(lambda q, k, v: ref.attention_ref(
+            q, k, v, causal=True)), q, k, v, iters=3)
+        t_fx = timeit(jax.jit(lambda q, k, v: flash_attention_xla(
+            q, k, v, causal=True, block_q=128, block_kv=256)), q, k, v,
+            iters=3)
+        rows.append({"kernel": "flash_attention", "shape": f"S{s}xH{h}/{kv}xhd{hd}",
+                     "max_abs_err": float(jnp.abs(
+                         got.astype(jnp.float32) - want.astype(jnp.float32)).max()),
+                     "oracle_ms": round(t_ref * 1e3, 3),
+                     "flash_xla_ms": round(t_fx * 1e3, 3)})
+
+    # rmsnorm
+    from repro.kernels.rmsnorm import rmsnorm_pallas
+    for shape in [(8, 1024), (4, 128, 2048)]:
+        x = jax.random.normal(KEY, shape, jnp.bfloat16)
+        w = jax.random.normal(jax.random.fold_in(KEY, 1), shape[-1:], jnp.bfloat16)
+        want = ref.rmsnorm_ref(x, w, 1e-6)
+        got = rmsnorm_pallas(x, w, eps=1e-6, interpret=True)
+        rows.append({"kernel": "rmsnorm", "shape": "x".join(map(str, shape)),
+                     "max_abs_err": float(jnp.abs(
+                         got.astype(jnp.float32) - want.astype(jnp.float32)).max())})
+
+    emit("kernels", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""Paper Table E.1: nonlinear spectral radius of the fixed-point-defining
+sub-network, estimated with the power method applied to the nonlinear map
+(the paper's contractivity check — E.3 shows DEQs are NOT contractive, which
+is why SHINE's fallback guard exists)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.mdeq_cifar import MDEQConfig
+from repro.core.deq import pack_state
+from repro.models import mdeq
+
+from benchmarks.common import emit
+
+
+def nonlinear_spectral_radius(f, z0, key, iters: int = 30, eps: float = 1e-3):
+    """Power method on u -> (f(z* + eps u) - f(z*)) / eps."""
+    fz = f(z0)
+    u = jax.random.normal(key, z0.shape)
+    u = u / jnp.linalg.norm(u)
+    sigma = jnp.float32(0.0)
+    for _ in range(iters):
+        v = (f(z0 + eps * u) - fz) / eps
+        sigma = jnp.linalg.norm(v)
+        u = v / jnp.maximum(sigma, 1e-12)
+    return float(sigma)
+
+
+def run() -> list[dict]:
+    cfg = MDEQConfig(image_size=16, channels=(12, 24))
+    rows = []
+    for tag, seed in [("init", 0), ("init_seed1", 1)]:
+        params = mdeq.init_mdeq(cfg, jax.random.PRNGKey(seed))
+        images, _ = mdeq.synthetic_cifar(4, cfg, seed=seed)
+        x1 = jax.nn.relu(mdeq._conv(images, params["stem"]))
+        x2 = jax.nn.relu(mdeq._conv(x1, params["inj2"], stride=2))
+        c1, c2 = cfg.channels
+        s1 = (4, cfg.image_size, cfg.image_size, c1)
+        s2 = (4, cfg.image_size // 2, cfg.image_size // 2, c2)
+        z0, unpack = pack_state([jnp.zeros(s1), jnp.zeros(s2)])
+
+        @jax.jit
+        def f(z):
+            z1, z2 = unpack(z)
+            z1n, z2n = mdeq.mdeq_f(params, (x1, x2), (z1, z2), cfg)
+            return pack_state([z1n, z2n])[0]
+
+        # radius at z0 and at the (approximate) fixed point
+        from repro.core.solvers import SolverConfig, broyden_solve
+        res = broyden_solve(lambda z: z - f(z), z0,
+                            SolverConfig(max_steps=25, tol=1e-5, memory=25))
+        r_z0 = nonlinear_spectral_radius(f, z0, jax.random.PRNGKey(10 + seed))
+        r_zstar = nonlinear_spectral_radius(f, res.z,
+                                            jax.random.PRNGKey(20 + seed))
+        rows.append({"model": tag, "radius_at_z0": round(r_z0, 3),
+                     "radius_at_zstar": round(r_zstar, 3),
+                     "contractive": bool(r_zstar < 1.0)})
+    emit("spectral_tableE1", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Shared benchmark utilities: timing, CSV emission, result directory."""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+
+RESULTS = Path("results/benchmarks")
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall time (s) of ``fn(*args)`` with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, rows: list[dict]) -> None:
+    """Print a CSV block and persist JSON under results/benchmarks/."""
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(json.dumps(rows, indent=2))
+    if not rows:
+        print(f"# {name}: no rows")
+        return
+    cols = list(rows[0].keys())
+    print(f"# ---- {name} ----")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(_fmt(r.get(c)) for c in cols))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)

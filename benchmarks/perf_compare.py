@@ -1,0 +1,93 @@
+"""Render §Perf before/after rows from tagged dry-run cells.
+
+Baselines come from results/dryrun_baseline_snapshot (the pre-optimization
+artifacts); iterations from results/dryrun/*__<tag>.json.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.roofline import HBM_BW, LINK_BW, PEAK_FLOPS
+
+SNAP = Path("results/dryrun_baseline_snapshot")
+CUR = Path("results/dryrun")
+
+
+def _cell(base: Path, arch, shape, variant, tag="", deq=False):
+    name = f"{arch}__{shape}__single__{variant}" + ("__deq" if deq else "")
+    if tag:
+        name += f"__{tag}"
+    p = base / f"{name}.json"
+    return json.loads(p.read_text()) if p.exists() else None
+
+
+def terms(cost):
+    ex = cost["extrapolated"]
+    return {
+        "compute_s": ex["flops"] / PEAK_FLOPS,
+        "memory_s": ex["bytes"] / HBM_BW,
+        "collective_s": ex["collective_bytes"] / LINK_BW,
+        "flops": ex["flops"], "bytes": ex["bytes"],
+        "coll": ex["collective_bytes"],
+    }
+
+
+def resident(mem):
+    m = mem["memory"]
+    return (m["temp_bytes"] + m["argument_bytes"] + m["output_bytes"]
+            - m.get("alias_bytes", 0)) / 2**30
+
+
+def row(label, arch, shape, tag, deq=False, base_dir=SNAP, cur_dir=CUR):
+    src = base_dir if not tag else cur_dir
+    cost = _cell(src, arch, shape, "cost", tag, deq)
+    mem = _cell(src, arch, shape, "memory", tag, deq)
+    out = {"label": label}
+    if cost:
+        t = terms(cost)
+        out.update({k: round(v, 4) for k, v in t.items()
+                    if k.endswith("_s")})
+        out["dominant"] = max(("compute", t["compute_s"]),
+                              ("memory", t["memory_s"]),
+                              ("collective", t["collective_s"]),
+                              key=lambda kv: kv[1])[0]
+    if mem:
+        out["resident_gib"] = round(resident(mem), 2)
+    return out
+
+
+def main():
+    sections = {
+        "A: minicpm-2b x train_4k (memory-dominated, paper-representative dense)": [
+            ("A0 baseline (f32 ref tiles, no SP)", "minicpm-2b", "train_4k", "", False),
+            ("A1 mixed-precision flash tiles", "minicpm-2b", "train_4k", "perfA1", False),
+            ("A2 A1 + sequence parallelism", "minicpm-2b", "train_4k", "perfA2", False),
+            ("A3 A2 + remat=dots", "minicpm-2b", "train_4k", "perfA3", False),
+            ("A4 A2 + grad-accum 4 (memory only)", "minicpm-2b", "train_4k", "perfA4", False),
+        ],
+        "B: internlm2-20b x decode_32k (collective-bound)": [
+            ("B0 baseline (q heads on model)", "internlm2-20b", "decode_32k", "", False),
+            ("B1 replicated decode heads + mixed-precision", "internlm2-20b",
+             "decode_32k", "perfB1", False),
+        ],
+        "C: deepseek-moe-16b x train_4k DEQ (the paper's technique)": [
+            ("C0 baseline", "deepseek-moe-16b", "train_4k", "", True),
+            ("C1 mixed-precision tiles", "deepseek-moe-16b", "train_4k", "perfC1", True),
+            ("C2 C1 + sequence parallelism", "deepseek-moe-16b", "train_4k", "perfC2", True),
+        ],
+    }
+    for title, rows in sections.items():
+        print(f"\n#### Cell {title}\n")
+        print("| iteration | compute s | memory s | collective s | dominant | resident GiB |")
+        print("|---|---|---|---|---|---|")
+        for label, arch, shape, tag, deq in rows:
+            r = row(label, arch, shape, tag, deq)
+            print(f"| {r.get('label')} | {r.get('compute_s', '—')} | "
+                  f"{r.get('memory_s', '—')} | {r.get('collective_s', '—')} | "
+                  f"{r.get('dominant', '—')} | {r.get('resident_gib', '—')} |")
+
+
+if __name__ == "__main__":
+    main()

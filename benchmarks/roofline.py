@@ -1,0 +1,135 @@
+"""Roofline analysis (deliverable g): derive the three roofline terms per
+(arch x shape) cell from the dry-run artifacts under results/dryrun/.
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_link_bytes_per_device / link_bw
+
+(The dry-run compiles the per-device SPMD program, so its cost_analysis IS
+per-chip; dividing the global aggregate by `chips` is the same number.)
+
+FLOPs/bytes come from the COST variant (python-unrolled layers + attention
+tiles at two depths, extrapolated exactly — XLA counts loop bodies once so
+the scanned program cannot be used for costing). Memory-fit comes from the
+MEMORY variant (the production scanned program).
+
+Also reports MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference) with N the
+(active) parameter count, the ratio MODEL_FLOPS / HLO_FLOPs, and the
+roofline fraction = model-flops-time / dominant-term time (the MFU bound
+the compiled program could reach if perfectly overlapped).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs.registry import ARCHS
+from repro.configs.shapes import SHAPES
+
+from benchmarks.common import emit
+
+PEAK_FLOPS = 197e12       # bf16 / chip (TPU v5e-ish)
+HBM_BW = 819e9            # bytes/s
+LINK_BW = 50e9            # bytes/s per ICI link
+HBM_BYTES = 16 * 2**30    # per chip
+
+DRYRUN = Path("results/dryrun")
+
+
+def _load(arch, shape, mesh, variant, deq=False):
+    name = f"{arch}__{shape}__{mesh}__{variant}" + ("__deq" if deq else "")
+    p = DRYRUN / f"{name}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def model_flops_per_device(arch: str, shape_name: str, chips: int,
+                           deq: bool = False) -> float:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    n = cfg.num_params(active_only=True)
+    if deq:
+        # weight-tied: effective depth = num_blocks * solver steps
+        d = cfg.deq
+        n = n  # parameter count unchanged; flops handled by HLO side anyway
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n * shape.global_batch
+    return total / chips
+
+
+def analyze(mesh: str = "single", deq: bool = False) -> list[dict]:
+    rows = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            cost = _load(arch, shape, mesh, "cost", deq)
+            memo = _load(arch, shape, mesh, "memory", deq)
+            if cost is None and memo is None:
+                continue
+            if (cost and cost.get("skipped")) or (memo and memo.get("skipped")):
+                rows.append({"arch": arch, "shape": shape, "skipped":
+                             (cost or memo)["skipped"]})
+                continue
+            if not cost or not memo:
+                continue
+            chips = cost["chips"]
+            ex = cost["extrapolated"]
+            t_comp = ex["flops"] / PEAK_FLOPS
+            t_mem = ex["bytes"] / HBM_BW
+            t_coll = ex["collective_bytes"] / LINK_BW
+            dominant = max(("compute", t_comp), ("memory", t_mem),
+                           ("collective", t_coll), key=lambda kv: kv[1])
+            mf = model_flops_per_device(arch, shape, chips, deq)
+            t_model = mf / PEAK_FLOPS
+            mem = memo["memory"]
+            resident = (mem["temp_bytes"] + mem["argument_bytes"]
+                        + mem["output_bytes"] - mem.get("alias_bytes", 0))
+            rows.append({
+                "arch": arch, "shape": shape,
+                "t_compute_ms": round(t_comp * 1e3, 2),
+                "t_memory_ms": round(t_mem * 1e3, 2),
+                "t_collective_ms": round(t_coll * 1e3, 2),
+                "dominant": dominant[0],
+                "model_flops_ratio": round(mf / max(ex["flops"], 1), 3),
+                "roofline_fraction": round(t_model / max(dominant[1], 1e-12), 3),
+                "resident_gib": round(resident / 2**30, 2),
+                "fits_16g": bool(resident <= HBM_BYTES),
+                "hlo_gflops": round(ex["flops"] / 1e9, 1),
+                "hlo_gbytes": round(ex["bytes"] / 1e9, 1),
+                "coll_gbytes": round(ex["collective_bytes"] / 1e9, 2),
+            })
+    return rows
+
+
+def run() -> list[dict]:
+    rows = analyze("single")
+    emit("roofline_single_pod", rows)
+    deq_rows = analyze("single", deq=True)
+    if deq_rows:
+        emit("roofline_deq", deq_rows)
+    # multi-pod: memory variants only (compile proof); report fit + compile
+    multi = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            memo = _load(arch, shape, "multi", "memory")
+            if memo is None or memo.get("skipped"):
+                continue
+            mem = memo["memory"]
+            resident = (mem["temp_bytes"] + mem["argument_bytes"]
+                        + mem["output_bytes"] - mem.get("alias_bytes", 0))
+            multi.append({"arch": arch, "shape": shape, "chips": memo["chips"],
+                          "resident_gib": round(resident / 2**30, 2),
+                          "compile_s": memo["compile_s"]})
+    emit("dryrun_multi_pod", multi)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

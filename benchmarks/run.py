@@ -1,0 +1,77 @@
+"""Benchmark orchestrator: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One section per paper table/figure (DESIGN.md §7) plus the roofline report
+(deliverable g). Each section prints a CSV block and persists JSON under
+results/benchmarks/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: bilevel,opa,deq,spectral,"
+                         "nlls,kernels,roofline")
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced iteration counts")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    sections = []
+    if want("bilevel"):
+        from benchmarks import bench_bilevel
+        sections.append(("bilevel (Fig 1 / Fig 2-left)",
+                         lambda: bench_bilevel.run(
+                             outer_steps=6 if args.fast else 12)))
+    if want("opa"):
+        from benchmarks import bench_opa_inversion
+        sections.append(("opa inversion (Fig 2-right)",
+                         lambda: bench_opa_inversion.run(
+                             n_runs=6 if args.fast else 20)))
+    if want("deq"):
+        from benchmarks import bench_deq_backward
+        sections.append(("deq backward (Fig 3 / Table E.2)",
+                         lambda: bench_deq_backward.run(
+                             batch=4 if args.fast else 8)))
+        sections.append(("deq opa quality (Table E.3 / Fig E.3)",
+                         lambda: bench_deq_backward.run_opa_quality(
+                             n_batches=3 if args.fast else 8)))
+    if want("spectral"):
+        from benchmarks import bench_spectral
+        sections.append(("spectral radius (Table E.1)", bench_spectral.run))
+    if want("nlls"):
+        from benchmarks import bench_nlls
+        sections.append(("nonlinear least squares (E.2)",
+                         lambda: bench_nlls.run(
+                             outer_steps=5 if args.fast else 10)))
+    if want("kernels"):
+        from benchmarks import bench_kernels
+        sections.append(("kernels vs oracles", bench_kernels.run))
+    if want("roofline"):
+        from benchmarks import roofline
+        sections.append(("roofline (dry-run derived)", roofline.run))
+
+    failures = []
+    for name, fn in sections:
+        t0 = time.time()
+        print(f"\n==== {name} ====")
+        try:
+            fn()
+            print(f"==== {name}: done in {time.time()-t0:.0f}s ====")
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        raise SystemExit(f"benchmark sections failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Example: hyperparameter optimization with SHINE (paper §3.1).
+
+Optimizes the l2-regularization strength of a logistic-regression model on a
+synthetic 20news-shaped dataset with the HOAG outer loop, comparing the
+full-CG backward against SHINE's shared L-BFGS inverse (zero backward HVPs)
+and SHINE-OPA (Theorem 3 guarantees).
+
+Run:  PYTHONPATH=src python examples/bilevel_hpo.py
+"""
+
+import dataclasses
+
+from repro.core.bilevel import HOAGConfig, make_logreg_problem, run_hoag
+from repro.core.solvers import SolverConfig
+
+
+def main():
+    problem = make_logreg_problem(n_train=1500, n_val=400, n_test=400,
+                                  dim=500, density=0.05, seed=0)
+    for mode in ("full_cg", "shine", "shine_opa", "jfb"):
+        cfg = HOAGConfig(
+            mode=mode, outer_steps=10, outer_lr=0.5,
+            tol_decrease=0.99 if mode == "full_cg" else 0.78,
+            inner=SolverConfig(max_steps=300, tol=1e-4, memory=30))
+        hist = run_hoag(problem, theta0=1.0, cfg=cfg, verbose=False)
+        last = hist[-1]
+        print(f"{mode:10s} theta*={last.theta:.3e} "
+              f"val={last.val_loss:.4f} test={last.test_loss:.4f} "
+              f"wall={last.wall_time:.1f}s "
+              f"bwd_hvp_calls={sum(h.backward_hvp_calls for h in hist)}")
+
+
+if __name__ == "__main__":
+    main()

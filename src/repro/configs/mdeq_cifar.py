@@ -1,0 +1,25 @@
+"""The paper's own model: Multiscale DEQ for CIFAR-scale image classification
+(Bai et al. 2020 setting, §3.2). Scaled to this container for the
+benchmarks — the *mechanics* (Broyden forward, SHINE/JFB/refine backward)
+are exactly the paper's; see DESIGN.md §8.
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class MDEQConfig:
+    image_size: int = 32
+    channels: tuple = (24, 48)     # two scales (paper uses 4 at d=50k)
+    num_classes: int = 10
+    groups: int = 8                # group-norm groups
+    max_steps: int = 18
+    tol: float = 1e-3
+    memory: int = 18
+    backward: str = "shine"
+    refine_steps: int = 5
+    backward_max_steps: int = 24
+    solver: str = "broyden"
+
+
+CONFIG = MDEQConfig()

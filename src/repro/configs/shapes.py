@@ -1,0 +1,174 @@
+"""Assigned input-shape suites and ``input_specs`` (ShapeDtypeStruct
+stand-ins — weak-type-correct, shardable, no device allocation).
+
+Shapes (assignment):
+    train_4k     seq=4096   global_batch=256   (training)
+    prefill_32k  seq=32768  global_batch=32    (inference-prefill)
+    decode_32k   seq=32768  global_batch=128   (one token vs 32k KV cache)
+    long_500k    seq=524288 global_batch=1     (long-context decode)
+
+Skip rules (assignment + DESIGN.md §6):
+  * ``long_500k`` runs only for sub-quadratic archs (ssm/hybrid); pure
+    full-attention archs skip it.
+  * encoder-only archs (hubert) have no autoregressive decode: skip
+    ``decode_32k`` and ``long_500k``; its ``prefill_32k`` is a full encode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.parallel.sharding import (
+    DECODE_RULES,
+    LONG_CONTEXT_RULES,
+    PREFILL_RULES,
+    ShardCtx,
+    ShardingRules,
+    TRAIN_RULES,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSuite:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeSuite] = {
+    "train_4k": ShapeSuite("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSuite("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSuite("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSuite("long_500k", "decode", 524288, 1),
+}
+
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def cell_skip_reason(cfg: ModelConfig, shape: ShapeSuite) -> str | None:
+    if cfg.family == "audio" and shape.kind == "decode":
+        return "encoder-only: no autoregressive decode"
+    if shape.name == "long_500k" and cfg.family not in SUBQUADRATIC_FAMILIES:
+        return "pure full-attention arch: 500k cell reserved for sub-quadratic archs"
+    return None
+
+
+def valid_cells(cfg: ModelConfig) -> list[str]:
+    return [s for s in SHAPES if cell_skip_reason(cfg, SHAPES[s]) is None]
+
+
+def rules_for_shape(shape: ShapeSuite) -> ShardingRules:
+    if shape.name == "long_500k":
+        return LONG_CONTEXT_RULES
+    if shape.kind == "decode":
+        return DECODE_RULES
+    if shape.kind == "prefill":
+        # writes the decode-layout (kv_seq-sharded) cache, attention stays
+        # head-sharded on the pre-write k/v
+        return PREFILL_RULES
+    return TRAIN_RULES
+
+
+def make_ctx(cfg: ModelConfig, mesh: Mesh | None, shape: ShapeSuite,
+             rules: ShardingRules | None = None) -> ShardCtx:
+    """ShardCtx for a cell, with per-arch rule fixups: KV heads that don't
+    divide the TP degree are replicated (weights and activations) instead of
+    forcing GSPMD reshards (internlm2/pixtral kv=8 on tp=16)."""
+    rules = rules or rules_for_shape(shape)
+    if mesh is not None and "model" in mesh.axis_names:
+        tp = mesh.shape["model"]
+        if cfg.num_kv_heads % tp != 0:
+            rules = rules.replace(kv_heads_act=None, kv=None)
+        if cfg.family in ("ssm", "hybrid") and cfg.num_heads % tp != 0:
+            # xLSTM's 4 heads cannot shard over tp=16: replicate the small
+            # per-head block-diagonal weights; the inner axis stays sharded.
+            rules = rules.replace(ssm_heads=None)
+        if cfg.seq_parallel and shape.kind == "train":
+            rules = rules.replace(seq_res="model")
+    return ShardCtx.for_mesh(mesh, rules)
+
+
+def _sds(shape, dtype, ctx: ShardCtx, axes) -> jax.ShapeDtypeStruct:
+    sh = ctx.sharding(axes)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSuite, ctx: ShardCtx) -> dict:
+    """ShapeDtypeStructs for every model input of this (arch, shape) cell.
+
+    train/prefill: the batch dict. decode: batch + KV/SSM cache stand-ins
+    (built with eval_shape -> zero allocation) + per-sample cache indices.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    act_dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    if shape.kind in ("train", "prefill"):
+        batch: dict[str, Any] = {}
+        if cfg.family == "audio":
+            batch["embeds"] = _sds((b, s, cfg.d_model), act_dt, ctx,
+                                   ("batch", "seq", "embed_act"))
+        elif cfg.family == "vlm":
+            n_img = cfg.num_image_tokens
+            batch["tokens"] = _sds((b, s - n_img), jnp.int32, ctx, ("batch", "seq"))
+            batch["image_embeds"] = _sds((b, n_img, cfg.d_model), act_dt, ctx,
+                                         ("batch", "seq", "embed_act"))
+        else:
+            batch["tokens"] = _sds((b, s), jnp.int32, ctx, ("batch", "seq"))
+        if shape.kind == "train":
+            tgt_s = s - cfg.num_image_tokens if cfg.family == "vlm" else s
+            batch["targets"] = _sds((b, tgt_s), jnp.int32, ctx, ("batch", "seq"))
+        return {"batch": batch}
+
+    # ---- decode ----
+    cache_shapes = jax.eval_shape(lambda: lm.init_cache(cfg, b, s))
+    spec_tree = cache_sharding(cfg, ctx, cache_shapes)
+    caches = jax.tree_util.tree_map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh),
+        cache_shapes, spec_tree,
+    )
+    return {
+        "caches": caches,
+        "tokens": _sds((b,), jnp.int32, ctx, ("batch",)),
+        "cache_index": _sds((b,), jnp.int32, ctx, ("batch",)),
+    }
+
+
+def cache_sharding(cfg: ModelConfig, ctx: ShardCtx, cache_shapes) -> Any:
+    """NamedSharding tree for a cache pytree, keyed on the tree path (cache
+    layouts are known per block kind; see models/lm.py::init_cache)."""
+    if ctx.mesh is None:
+        return jax.tree_util.tree_map(lambda _: None, cache_shapes)
+
+    def spec_for(path, sds: jax.ShapeDtypeStruct):
+        p = jax.tree_util.keystr(path)
+        nd = len(sds.shape)
+
+        def pad(axes):
+            return tuple(axes) + (None,) * (nd - len(axes))
+
+        if "mamba" in p:
+            if nd >= 6:  # (L, inner, B, H, P, N) state
+                return ctx.sharding(pad(("layers", None, "batch", "ssm_heads_act")))
+            return ctx.sharding(pad(("layers", None, "batch")))  # conv window
+        if "mlstm" in p:  # (L, inner, B, H, ...) — cell replicated over model
+            return ctx.sharding(pad(("layers", None, "batch")))
+        if "slstm" in p:  # (L, B, H, hd)
+            return ctx.sharding(pad(("layers", "batch")))
+        # attention KV caches: gqa (L,B,T,KV,hd) / mla (L,B,T,rank)
+        if nd == 5:
+            kv_ok = cfg.num_kv_heads % max(1, ctx.axis_size("kv_heads_act")) == 0
+            kv_ax = "kv_heads_act" if kv_ok else None
+            return ctx.sharding(("layers", "batch", "kv_seq", kv_ax, None))
+        if nd == 4:
+            return ctx.sharding(("layers", "batch", "kv_seq", None))
+        return ctx.sharding(pad(("layers", "batch")))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shapes)

@@ -1,0 +1,294 @@
+"""Bi-level / hyperparameter optimization with SHINE (paper §3.1, Eq. 2).
+
+HOAG-style outer loop (Pedregosa 2016): at outer step k the inner problem
+``z*(theta) = argmin_z r_theta(z)`` is solved inexactly with (L)BFGS to a
+decreasing tolerance, then the hypergradient
+
+    dL/dtheta = - (dg/dtheta)^T q,     q = (Hess_z r_theta(z*))^{-1} dL/dz*
+
+is estimated by one of:
+
+  * full_cg      — CG on Hessian-vector products (the HOAG baseline),
+  * shine        — q = H_lbfgs · dL/dz via the two-loop recursion: the
+                   inverse estimate is SHARED from the forward pass,
+  * shine_opa    — shine, with OPA extra secant pairs in the dg/dtheta
+                   direction injected during the forward LBFGS (Thm 3),
+  * jfb          — q = dL/dz (Jacobian-free),
+  * shine_refine — CG warm-started at the shine estimate.
+
+Hyperparameters are optimized in log space (positivity).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.solvers import (
+    LBFGSMemory,
+    SolverConfig,
+    lbfgs_solve,
+    lbfgs_two_loop,
+    _lbfgs_gamma,
+)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class BilevelProblem:
+    """Inner objective r(z, theta); outer losses are functions of z only."""
+
+    inner_value: Callable[[Array, Array], Array]
+    outer_loss: Callable[[Array], Array]
+    test_loss: Callable[[Array], Array]
+    dim: int
+
+    def inner_grad(self, z: Array, theta: Array) -> Array:
+        return jax.grad(self.inner_value, argnums=0)(z, theta)
+
+    def dg_dtheta(self, z: Array, theta: Array) -> Array:
+        """(D,) partial of the inner gradient w.r.t. a scalar theta."""
+        return jax.jacfwd(lambda t: self.inner_grad(z, t))(theta).reshape(-1)
+
+    def hvp(self, z: Array, theta: Array, v: Array) -> Array:
+        return jax.jvp(lambda zz: self.inner_grad(zz, theta), (z,), (v,))[1]
+
+
+@dataclasses.dataclass(frozen=True)
+class HOAGConfig:
+    mode: str = "shine"            # full_cg | shine | shine_opa | jfb | shine_refine
+    outer_steps: int = 30
+    outer_lr: float = 1.0
+    inner: SolverConfig = dataclasses.field(
+        default_factory=lambda: SolverConfig(max_steps=200, tol=1e-6, memory=30)
+    )
+    tol_decrease: float = 0.78     # paper App. C: 0.78 accelerated, 0.99 HOAG
+    cg_steps: int = 100
+    cg_tol: float = 1e-8
+    refine_steps: int = 5
+
+
+def _cg(hvp: Callable[[Array], Array], b: Array, x0: Array, steps: int, tol: float) -> tuple[Array, Array]:
+    """Plain conjugate gradient on a PD system; returns (x, iters)."""
+
+    def cond(state):
+        _, r, _, k, done = state
+        return (k < steps) & ~done
+
+    def body(state):
+        x, r, p, k, _ = state
+        hp = hvp(p)
+        rr = jnp.dot(r, r)
+        alpha = rr / jnp.maximum(jnp.dot(p, hp), 1e-30)
+        x = x + alpha * p
+        r_new = r - alpha * hp
+        beta = jnp.dot(r_new, r_new) / jnp.maximum(rr, 1e-30)
+        p = r_new + beta * p
+        done = jnp.linalg.norm(r_new) < tol
+        return (x, r_new, p, k + 1, done)
+
+    r0 = b - hvp(x0)
+    state = (x0, r0, r0, jnp.int32(0),
+             jnp.linalg.norm(r0) < tol)
+    x, r, p, k, done = jax.lax.while_loop(cond, body, state)
+    return x, k
+
+
+class OuterRecord(NamedTuple):
+    step: int
+    wall_time: float
+    theta: float
+    val_loss: float
+    test_loss: float
+    inner_steps: int
+    backward_hvp_calls: int
+
+
+def hypergradient(
+    problem: BilevelProblem,
+    theta: Array,
+    z_star: Array,
+    mem: LBFGSMemory,
+    cfg: HOAGConfig,
+) -> tuple[Array, Array]:
+    """Returns (dL/dtheta estimate, #HVP calls used by the backward)."""
+    w = jax.grad(problem.outer_loss)(z_star)
+    hvp = lambda v: problem.hvp(z_star, theta, v)
+
+    if cfg.mode == "jfb":
+        q, calls = w, jnp.int32(0)
+    elif cfg.mode in ("shine", "shine_opa"):
+        q = lbfgs_two_loop(mem, w, _lbfgs_gamma(mem))
+        calls = jnp.int32(0)
+    elif cfg.mode == "shine_refine":
+        q0 = lbfgs_two_loop(mem, w, _lbfgs_gamma(mem))
+        q, calls = _cg(hvp, w, q0, cfg.refine_steps, cfg.cg_tol)
+    elif cfg.mode == "full_cg":
+        q, calls = _cg(hvp, w, jnp.zeros_like(w), cfg.cg_steps, cfg.cg_tol)
+    else:
+        raise ValueError(f"unknown mode {cfg.mode!r}")
+
+    # dL/dtheta = - q^T dg/dtheta   (VJP of the inner gradient w.r.t. theta)
+    _, vjp = jax.vjp(lambda t: problem.inner_grad(z_star, t), theta)
+    (gt,) = vjp(q)
+    return -gt, calls
+
+
+def run_hoag(
+    problem: BilevelProblem,
+    theta0: float,
+    cfg: HOAGConfig,
+    *,
+    seed: int = 0,
+    verbose: bool = False,
+) -> list[OuterRecord]:
+    """Outer gradient descent on log-theta with warm-started inner solves."""
+    log_theta = jnp.asarray(np.log(theta0), jnp.float32)
+    z = jnp.zeros((problem.dim,), jnp.float32)
+    mem = None
+    history: list[OuterRecord] = []
+    t0 = time.perf_counter()
+    tol = cfg.inner.tol
+    lr = cfg.outer_lr
+
+    use_opa = cfg.mode == "shine_opa"
+
+    # tolerance must be static for jit; pre-build one solver per tol level
+    solver_cache: dict[float, Callable] = {}
+
+    def solve_at(z0, log_t, tol_now: float):
+        key = round(float(np.log10(max(tol_now, 1e-12))), 3)
+        if key not in solver_cache:
+            icfg = dataclasses.replace(
+                cfg.inner, tol=float(tol_now), opa_freq=(5 if use_opa else 0)
+            )
+
+            @jax.jit
+            def _solve(z0, log_t, _icfg=icfg):
+                theta = jnp.exp(log_t)
+                return lbfgs_solve(
+                    lambda zz: problem.inner_grad(zz, theta),
+                    z0,
+                    _icfg,
+                    value_fn=lambda zz: problem.inner_value(zz, theta),
+                    dg_dtheta=(
+                        (lambda zz: problem.dg_dtheta(zz, theta)) if use_opa else None
+                    ),
+                )
+
+            solver_cache[key] = _solve
+        return solver_cache[key](z0, log_t)
+
+    hyper_jit = jax.jit(
+        lambda th, z_, mem_: hypergradient(problem, th, z_, mem_, cfg)
+    )
+
+    for k in range(cfg.outer_steps):
+        res = solve_at(z, log_theta, tol)
+        z = res.z
+        mem = res.memory
+        theta = jnp.exp(log_theta)
+        hg, hvp_calls = hyper_jit(theta, z, mem)
+        # chain rule through theta = exp(log_theta)
+        g_log = hg * theta
+        log_theta = log_theta - lr * jnp.clip(g_log, -5.0, 5.0)
+        tol = max(tol * cfg.tol_decrease, 1e-12)
+
+        rec = OuterRecord(
+            step=k,
+            wall_time=time.perf_counter() - t0,
+            theta=float(theta),
+            val_loss=float(problem.outer_loss(z)),
+            test_loss=float(problem.test_loss(z)),
+            inner_steps=int(res.n_steps),
+            backward_hvp_calls=int(hvp_calls),
+        )
+        history.append(rec)
+        if verbose:
+            print(
+                f"[{cfg.mode}] k={k:3d} t={rec.wall_time:7.2f}s theta={rec.theta:.3e} "
+                f"val={rec.val_loss:.4f} test={rec.test_loss:.4f} "
+                f"inner={rec.inner_steps} hvp={rec.backward_hvp_calls}"
+            )
+    return history
+
+
+# ---------------------------------------------------------------------------
+# Synthetic problems shaped like the paper's (offline container: DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+def make_logreg_problem(
+    n_train: int = 2000,
+    n_val: int = 500,
+    n_test: int = 500,
+    dim: int = 800,
+    density: float = 0.05,
+    seed: int = 0,
+) -> BilevelProblem:
+    """l2-regularized logistic regression (Eq. 2), 20news-like sparse design."""
+    rng = np.random.default_rng(seed)
+    n = n_train + n_val + n_test
+    X = rng.normal(size=(n, dim)) * (rng.random((n, dim)) < density)
+    w_true = rng.normal(size=(dim,)) * (rng.random(dim) < 0.2)
+    logits = X @ w_true + 0.5 * rng.normal(size=n)
+    y = np.sign(logits)
+    X = jnp.asarray(X, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    Xtr, ytr = X[:n_train], y[:n_train]
+    Xv, yv = X[n_train:n_train + n_val], y[n_train:n_train + n_val]
+    Xte, yte = X[n_train + n_val:], y[n_train + n_val:]
+
+    def log_loss(z, Xs, ys):
+        margins = ys * (Xs @ z)
+        return jnp.mean(jax.nn.softplus(-margins))
+
+    def inner_value(z, theta):
+        return log_loss(z, Xtr, ytr) + 0.5 * theta * jnp.dot(z, z)
+
+    return BilevelProblem(
+        inner_value=inner_value,
+        outer_loss=lambda z: log_loss(z, Xv, yv),
+        test_loss=lambda z: log_loss(z, Xte, yte),
+        dim=dim,
+    )
+
+
+def make_nlls_problem(
+    n_train: int = 1000,
+    n_val: int = 300,
+    n_test: int = 300,
+    dim: int = 400,
+    seed: int = 0,
+) -> BilevelProblem:
+    """Regularized nonlinear least squares (paper E.2): nonconvex inner."""
+    rng = np.random.default_rng(seed)
+    n = n_train + n_val + n_test
+    X = rng.normal(size=(n, dim)) / np.sqrt(dim)
+    w_true = rng.normal(size=(dim,))
+    y = 1.0 / (1.0 + np.exp(-(X @ w_true))) + 0.05 * rng.normal(size=n)
+    X = jnp.asarray(X, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    Xtr, ytr = X[:n_train], y[:n_train]
+    Xv, yv = X[n_train:n_train + n_val], y[n_train:n_train + n_val]
+    Xte, yte = X[n_train + n_val:], y[n_train + n_val:]
+
+    def nlls(z, Xs, ys):
+        pred = jax.nn.sigmoid(Xs @ z)
+        return 0.5 * jnp.mean((ys - pred) ** 2)
+
+    def inner_value(z, theta):
+        return nlls(z, Xtr, ytr) + 0.5 * theta * jnp.dot(z, z)
+
+    return BilevelProblem(
+        inner_value=inner_value,
+        outer_loss=lambda z: nlls(z, Xv, yv),
+        test_loss=lambda z: nlls(z, Xte, yte),
+        dim=dim,
+    )

@@ -1,0 +1,143 @@
+"""Limited-memory low-rank representation of quasi-Newton inverse matrices.
+
+Quasi-Newton methods (Broyden, BFGS, adjoint Broyden) maintain an
+approximation ``B_n`` of the Jacobian/Hessian as ``B_0`` plus a sum of
+rank-one terms. Via Sherman–Morrison the *inverse* has the same structure:
+
+    H_n = B_n^{-1} = alpha * I + sum_i a_i b_i^T            (rank <= m)
+
+SHINE's whole point is that this object — built as a by-product of the
+forward pass — can be applied to a vector in O(m d) and *shared* with the
+backward pass instead of running a second iterative inversion.
+
+TPU / SPMD adaptation (DESIGN.md §3):
+  * The rank-one chain is stored as two stacked ``(m, B, *F)`` buffers so
+    applying ``H`` (or ``H^T``) is two batched contractions — MXU work —
+    rather than a sequence of axpys.
+  * The feature dims ``*F`` are NEVER flattened: a DEQ over ``(B, S, d)``
+    activations keeps ``d`` TP-sharded; all contractions use einsum
+    ellipses, so GSPMD reduces the (m, B) coefficients with one small
+    all-reduce instead of gathering the state.
+  * The memory is a ring buffer with a per-sample valid count — static
+    shapes under XLA, per-sample freezing for convergence.
+
+All coefficient math (dot products, denominators) runs in float32 even when
+the bulk tensors are bf16.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kernel_ops
+
+
+def _expand(mask: jax.Array, ref: jax.Array) -> jax.Array:
+    """Broadcast a (B,) mask against (B, *F)."""
+    return mask.reshape(mask.shape + (1,) * (ref.ndim - 1))
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("alpha", "u", "v", "count"),
+    meta_fields=(),
+)
+@dataclasses.dataclass
+class LowRank:
+    """``H = alpha * I + sum_i u[i] v[i]^T`` with per-sample ring memory.
+
+    Shapes: ``u, v: (m, B, *F)``, ``alpha: scalar``, ``count: (B,)``.
+    Entries with ring index >= count are invalid (zero-masked on apply).
+    """
+
+    alpha: jax.Array
+    u: jax.Array
+    v: jax.Array
+    count: jax.Array
+
+    @property
+    def memory(self) -> int:
+        return self.u.shape[0]
+
+    # -- construction -------------------------------------------------------
+
+    @staticmethod
+    def identity(batch: int, feat: tuple[int, ...] | int, memory: int,
+                 alpha: float = 1.0, dtype=jnp.float32) -> "LowRank":
+        feat = (feat,) if isinstance(feat, int) else tuple(feat)
+        return LowRank(
+            alpha=jnp.asarray(alpha, jnp.float32),
+            u=jnp.zeros((memory, batch) + feat, dtype),
+            v=jnp.zeros((memory, batch) + feat, dtype),
+            count=jnp.zeros((batch,), jnp.int32),
+        )
+
+    # -- algebra -------------------------------------------------------------
+
+    def _valid_mask(self) -> jax.Array:
+        # (m, B) mask of live ring slots
+        m = self.memory
+        idx = jnp.arange(m, dtype=jnp.int32)[:, None]
+        return (idx < jnp.minimum(self.count, m)[None, :]).astype(jnp.float32)
+
+    def matvec(self, x: jax.Array) -> jax.Array:
+        """``H @ x`` batched over B: (B, *F) -> (B, *F)."""
+        return kernel_ops.qn_apply(self.u, self.v, x, self.alpha, self._valid_mask())
+
+    def rmatvec(self, x: jax.Array) -> jax.Array:
+        """``H^T @ x`` — equivalently ``(x^T H)^T`` — batched over B."""
+        return kernel_ops.qn_apply(self.v, self.u, x, self.alpha, self._valid_mask())
+
+    def transpose(self) -> "LowRank":
+        return LowRank(alpha=self.alpha, u=self.v, v=self.u, count=self.count)
+
+    # -- updates -------------------------------------------------------------
+
+    def append(self, a: jax.Array, b: jax.Array, update_mask: jax.Array) -> "LowRank":
+        """Append rank-one term ``a b^T`` for samples where ``update_mask``.
+
+        ``a, b: (B, *F)``; ``update_mask: (B,)`` bool. Ring overwrite beyond
+        ``memory`` (standard limited-memory approximation).
+        """
+        m = self.memory
+        bsz = self.u.shape[1]
+        slot = (self.count % m).astype(jnp.int32)  # (B,)
+        barange = jnp.arange(bsz)
+        mask = _expand(update_mask, a).astype(self.u.dtype)
+        new_u = self.u.at[slot, barange].set(
+            mask * a.astype(self.u.dtype) + (1.0 - mask) * self.u[slot, barange]
+        )
+        new_v = self.v.at[slot, barange].set(
+            mask * b.astype(self.v.dtype) + (1.0 - mask) * self.v[slot, barange]
+        )
+        new_count = self.count + update_mask.astype(jnp.int32)
+        return LowRank(alpha=self.alpha, u=new_u, v=new_v, count=new_count)
+
+    # -- diagnostics ----------------------------------------------------------
+
+    def dense(self) -> jax.Array:
+        """Materialize H as (B, D, D) — tests/small problems only (1-D F)."""
+        m, bsz, dim = self.u.shape
+        eye = jnp.eye(dim, dtype=jnp.float32)[None]
+        mask = self._valid_mask()  # (m, B)
+        terms = jnp.einsum(
+            "mb,mbi,mbj->bij",
+            mask,
+            self.u.astype(jnp.float32),
+            self.v.astype(jnp.float32),
+        )
+        return self.alpha * eye + terms
+
+
+def bdot(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Per-sample dot product in f32 over all feature dims: -> (B,)."""
+    prod = x.astype(jnp.float32) * y.astype(jnp.float32)
+    return jnp.sum(prod, axis=tuple(range(1, prod.ndim)))
+
+
+def bnorm(x: jax.Array) -> jax.Array:
+    return jnp.sqrt(jnp.maximum(bdot(x, x), 0.0))

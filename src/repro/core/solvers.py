@@ -1,0 +1,514 @@
+"""Quasi-Newton root solvers whose inverse estimates SHINE shares backward.
+
+Implements Algorithm 1 of the paper in three flavours:
+
+  * ``broyden_solve``          Broyden's "good" method (DEQ forward pass;
+                               Bai et al. 2019/2020 setting), batched, limited
+                               memory, per-sample freeze masks.
+  * ``adjoint_broyden_solve``  Schlenkrich et al. adjoint Broyden, with the
+                               paper's OPA extra updates in the direction
+                               v_n^T = dL/dz(z_n) B_n^{-1}   (Eq. 7-8, Thm 4).
+  * ``lbfgs_solve``            (L)BFGS for the bi-level/hyperparameter
+                               setting (Pedregosa 2016), with OPA extra
+                               secant pairs in the direction
+                               e_n = t_n B_n^{-1} dg/dtheta  (Eq. 5, Thm 3).
+
+plus ``fixed_point_solve`` (Picard/damped iteration; the Jacobian-Free
+baseline's forward) and ``anderson_solve``.
+
+TPU adaptation (DESIGN.md §3): every solver is a ``lax.while_loop`` over the
+*whole batch* with a fixed iteration budget; converged samples freeze (their
+updates are masked out), which emulates per-sample early stopping without
+dynamic shapes. All inner products/denominators are f32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lowrank import LowRank, _expand, bdot, bnorm
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverConfig:
+    max_steps: int = 30
+    tol: float = 1e-4
+    memory: int = 30
+    step_size: float = 1.0
+    # residual stop criterion: ||g(z)|| < tol * max(stop_scale(z), 1)
+    relative: bool = True
+    eps: float = 1e-8
+    # OPA (outer-problem awareness): frequency M of extra updates; 0 = off
+    opa_freq: int = 0
+    opa_t0: float = 1.0
+    # record the residual trajectory (max_steps,) for diagnostics
+    trace: bool = True
+    # unroll the solver loop (python for; no early exit). Used by the dry-run:
+    # XLA cost analysis counts while-loop bodies ONCE, so roofline cells lower
+    # the unrolled form (DESIGN.md / EXPERIMENTS.md §Dry-run).
+    unroll: bool = False
+
+
+class SolveResult(NamedTuple):
+    z: Array                 # (B, D) best iterate
+    lowrank: LowRank         # inverse estimate H ~= J_g(z*)^{-1}
+    residual: Array          # (B,) final ||g||
+    n_steps: Array           # () iterations executed
+    converged: Array         # (B,) bool
+    trace: Array             # (max_steps, B) residual history (inf-padded)
+    aux: dict
+
+
+def _stop_threshold(g0_norm: Array, z_norm: Array, cfg: SolverConfig) -> Array:
+    if cfg.relative:
+        return cfg.tol * jnp.maximum(z_norm, 1.0)
+    return jnp.full_like(g0_norm, cfg.tol)
+
+
+# ---------------------------------------------------------------------------
+# Broyden's good method (paper Alg. 1 with b = true)
+# ---------------------------------------------------------------------------
+
+
+def broyden_solve(
+    g: Callable[[Array], Array],
+    z0: Array,
+    cfg: SolverConfig,
+    *,
+    init_lowrank: LowRank | None = None,
+    alpha0: float = 1.0,
+) -> SolveResult:
+    """Solve ``g(z) = 0`` for a batch ``z0: (B, D)``.
+
+    Maintains ``H_n ~= J_g^{-1}`` via the Sherman–Morrison form of Broyden's
+    good update:
+
+        H_{n+1} = H_n + (s_n - H_n y_n) (s_n^T H_n) / (s_n^T H_n y_n)
+
+    i.e. one appended rank-one pair per step:
+        a_n = (s_n - H_n y_n) / (s_n^T H_n y_n),    b_n = H_n^T s_n.
+
+    ``init_lowrank`` warm-starts the chain (the paper's *refine* strategy
+    re-uses the forward chain, transposed, for the backward linear solve).
+    """
+    bsz, feat = z0.shape[0], z0.shape[1:]
+    H0 = init_lowrank
+    if H0 is None:
+        H0 = LowRank.identity(bsz, feat, cfg.memory, alpha=alpha0, dtype=z0.dtype)
+
+    g0 = g(z0)
+    res0 = bnorm(g0)
+    thresh = _stop_threshold(res0, bnorm(z0), cfg)
+
+    trace0 = jnp.full((max(cfg.max_steps, 1), bsz), jnp.inf, jnp.float32)
+
+    def cond(state):
+        k, _, _, _, conv, _, _, _ = state
+        return (k < cfg.max_steps) & ~jnp.all(conv)
+
+    def body(state):
+        k, z, gz, H, conv, best_z, best_res, trace = state
+        p = -H.matvec(gz)
+        active = ~conv
+        am = _expand(active, z)
+        z_new = jnp.where(am, z + cfg.step_size * p.astype(z.dtype), z)
+        gz_new = jnp.where(am, g(z_new), gz)
+
+        s = (z_new - z).astype(jnp.float32)
+        y = (gz_new - gz).astype(jnp.float32)
+        Hy = H.matvec(y)
+        den = bdot(s, Hy)                             # (B,)
+        safe = jnp.abs(den) > cfg.eps
+        denom = jnp.where(safe, den, 1.0)
+        a = (s - Hy) / _expand(denom, s)
+        b = H.rmatvec(s)
+        H = H.append(a, b, active & safe)
+
+        res = bnorm(gz_new)
+        improved = res < best_res
+        best_z = jnp.where(_expand(improved, z_new), z_new, best_z)
+        best_res = jnp.minimum(res, best_res)
+        conv = conv | (res < thresh)
+        trace = trace.at[k].set(jnp.where(active, res, trace[k]))
+        return (k + 1, z_new, gz_new, H, conv, best_z, best_res, trace)
+
+    state0 = (
+        jnp.int32(0), z0, g0, H0,
+        res0 < thresh, z0, res0, trace0,
+    )
+    if cfg.unroll:
+        state = state0
+        for _ in range(cfg.max_steps):
+            state = body(state)
+        k, z, gz, H, conv, best_z, best_res, trace = state
+    else:
+        k, z, gz, H, conv, best_z, best_res, trace = jax.lax.while_loop(
+            cond, body, state0
+        )
+    return SolveResult(best_z, H, best_res, k, conv, trace, {})
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point / Anderson (Jacobian-Free baseline forward)
+# ---------------------------------------------------------------------------
+
+
+def fixed_point_solve(
+    f: Callable[[Array], Array],
+    z0: Array,
+    cfg: SolverConfig,
+    *,
+    damping: float = 1.0,
+) -> SolveResult:
+    """Damped Picard iteration on ``z <- (1-d) z + d f(z)``; residual f(z)-z."""
+    bsz = z0.shape[0]
+    H = LowRank.identity(bsz, 1, 1, alpha=1.0)  # placeholder (JFB shares I)
+    res0 = bnorm(f(z0) - z0)
+    thresh = _stop_threshold(res0, bnorm(z0), cfg)
+    trace0 = jnp.full((max(cfg.max_steps, 1), bsz), jnp.inf, jnp.float32)
+
+    def cond(state):
+        k, _, conv, _, _ = state
+        return (k < cfg.max_steps) & ~jnp.all(conv)
+
+    def body(state):
+        k, z, conv, best_res, trace = state
+        fz = f(z)
+        z_new = jnp.where(_expand(conv, z), z, (1 - damping) * z + damping * fz)
+        res = bnorm(fz - z)
+        trace = trace.at[k].set(jnp.where(conv, trace[k], res))
+        best_res = jnp.minimum(best_res, res)
+        conv = conv | (res < thresh)
+        return (k + 1, z_new, conv, best_res, trace)
+
+    state0 = (jnp.int32(0), z0, res0 < thresh, res0, trace0)
+    if cfg.unroll:
+        state = state0
+        for _ in range(cfg.max_steps):
+            state = body(state)
+        k, z, conv, best_res, trace = state
+    else:
+        k, z, conv, best_res, trace = jax.lax.while_loop(cond, body, state0)
+    return SolveResult(z, H, best_res, k, conv, trace, {})
+
+
+def anderson_solve(
+    f: Callable[[Array], Array],
+    z0: Array,
+    cfg: SolverConfig,
+    *,
+    mixing: float = 1.0,
+    ridge: float = 1e-8,
+) -> SolveResult:
+    """Anderson acceleration with window m = cfg.memory (type-II)."""
+    bsz, feat = z0.shape[0], z0.shape[1:]
+    m = min(cfg.memory, 8)
+    res0 = bnorm(f(z0) - z0)
+    thresh = _stop_threshold(res0, bnorm(z0), cfg)
+    trace0 = jnp.full((max(cfg.max_steps, 1), bsz), jnp.inf, jnp.float32)
+
+    Z = jnp.zeros((m, bsz) + feat, z0.dtype)   # iterate history
+    F = jnp.zeros((m, bsz) + feat, z0.dtype)   # residual history
+
+    def cond(state):
+        k, *_, conv, _ = state
+        return (k < cfg.max_steps) & ~jnp.all(conv)
+
+    def body(state):
+        k, z, Z, F, conv, trace = state
+        fz = f(z)
+        r = fz - z
+        slot = k % m
+        Z = Z.at[slot].set(fz)
+        F = F.at[slot].set(r)
+        nk = jnp.minimum(k + 1, m)
+        valid = (jnp.arange(m) < nk).astype(jnp.float32)           # (m,)
+        # solve min ||sum_i w_i F_i|| s.t. sum w = 1  (normal equations)
+        G = jnp.einsum("ib...,jb...->bij", F.astype(jnp.float32), F.astype(jnp.float32))
+        G = G * valid[None, :, None] * valid[None, None, :]
+        G = G + (ridge + (1 - valid[None, :, None] * valid[None, None, :])) * jnp.eye(m)[None]
+        ones = valid[None, :].repeat(bsz, 0)
+        w = jnp.linalg.solve(G, ones[..., None])[..., 0]
+        w = w * valid[None, :]
+        w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-12)
+        z_and = jnp.einsum("bi,ib...->b...", w, Z.astype(jnp.float32)).astype(z.dtype)
+        z_new = jnp.where(_expand(conv, z), z, (1 - mixing) * z + mixing * z_and)
+        res = bnorm(r)
+        trace = trace.at[k].set(jnp.where(conv, trace[k], res))
+        conv = conv | (res < thresh)
+        return (k + 1, z_new, Z, F, conv, trace)
+
+    k, z, Z, F, conv, trace = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), z0, Z, F, res0 < thresh, trace0)
+    )
+    H = LowRank.identity(bsz, 1, 1, alpha=1.0)
+    return SolveResult(z, H, bnorm(f(z) - z), k, conv, trace, {})
+
+
+# ---------------------------------------------------------------------------
+# Adjoint Broyden with OPA (paper §2.3, Thm 4)
+# ---------------------------------------------------------------------------
+
+
+def adjoint_broyden_solve(
+    g: Callable[[Array], Array],
+    z0: Array,
+    cfg: SolverConfig,
+    *,
+    outer_grad: Callable[[Array], Array] | None = None,
+    sigma_mode: str = "residual",
+) -> SolveResult:
+    """Adjoint Broyden: secant ``sigma^T B_{n+1} = sigma^T J_g(z_{n+1})``.
+
+    Maintains BOTH chains exactly (B as ``alpha I + sum sigma_i w_i^T`` and
+    H = B^{-1} via Sherman–Morrison), since the update coefficient needs
+    ``sigma^T B`` — cheap on the B-chain — while steps need ``H g``.
+
+    OPA: every ``cfg.opa_freq`` steps an extra update is applied with
+    ``sigma = H^T dL/dz(z_n)`` (Eq. 8), which is exactly the direction the
+    hypergradient (3) consumes. Requires ``outer_grad``.
+    """
+    bsz, feat = z0.shape[0], z0.shape[1:]
+    B = LowRank.identity(bsz, feat, cfg.memory, alpha=1.0, dtype=jnp.float32)
+    H = LowRank.identity(bsz, feat, cfg.memory, alpha=1.0, dtype=jnp.float32)
+
+    g0 = g(z0)
+    res0 = bnorm(g0)
+    thresh = _stop_threshold(res0, bnorm(z0), cfg)
+    trace0 = jnp.full((max(cfg.max_steps, 1), bsz), jnp.inf, jnp.float32)
+
+    def update_chains(B, H, z_new, sigma, active):
+        # sigma^T J at z_new via VJP; sigma^T B via the B-chain (rmatvec).
+        _, vjp = jax.vjp(g, z_new)
+        sJT = vjp(sigma.astype(z_new.dtype))[0].astype(jnp.float32)
+        sB = B.rmatvec(sigma)
+        ss = bdot(sigma, sigma)
+        safe = ss > cfg.eps
+        w_row = (sJT - sB) / _expand(jnp.where(safe, ss, 1.0), sJT)
+        # H update: H <- H - (H sigma)(w^T H) / (1 + w^T H sigma)
+        Hs = H.matvec(sigma)
+        wH = H.rmatvec(w_row)
+        den = 1.0 + bdot(w_row, Hs)
+        safe = safe & (jnp.abs(den) > cfg.eps)
+        a = -Hs / _expand(jnp.where(safe, den, 1.0), Hs)
+        B = B.append(sigma, w_row, active & safe)
+        H = H.append(a, wH, active & safe)
+        return B, H
+
+    def cond(state):
+        k, *_rest, conv, _t = state
+        return (k < cfg.max_steps) & ~jnp.all(conv)
+
+    def body(state):
+        k, z, gz, B, H, conv, trace = state
+        active = ~conv
+        am = _expand(active, z)
+        p = -H.matvec(gz.astype(jnp.float32))
+        z_new = jnp.where(am, z + cfg.step_size * p.astype(z.dtype), z)
+        gz_new = jnp.where(am, g(z_new), gz)
+
+        if sigma_mode == "residual":
+            sigma = gz_new.astype(jnp.float32)
+        else:  # step direction
+            sigma = (z_new - z).astype(jnp.float32)
+        B2, H2 = update_chains(B, H, z_new, sigma, active)
+
+        if outer_grad is not None and cfg.opa_freq > 0:
+            def do_opa(BH):
+                B_, H_ = BH
+                w = outer_grad(z_new).astype(jnp.float32)
+                sigma_e = H_.rmatvec(w)  # v_n = (dL/dz B^{-1})^T   (Eq. 8)
+                return update_chains(B_, H_, z_new, sigma_e, active)
+            B2, H2 = jax.lax.cond(
+                (k % cfg.opa_freq) == cfg.opa_freq - 1,
+                do_opa, lambda BH: BH, (B2, H2),
+            )
+
+        res = bnorm(gz_new)
+        trace = trace.at[k].set(jnp.where(active, res, trace[k]))
+        conv = conv | (res < thresh)
+        return (k + 1, z_new, gz_new, B2, H2, conv, trace)
+
+    state0 = (jnp.int32(0), z0, g0, B, H, res0 < thresh, trace0)
+    k, z, gz, B, H, conv, trace = jax.lax.while_loop(cond, body, state0)
+    return SolveResult(z, H, bnorm(gz), k, conv, trace, {"B": B})
+
+
+# ---------------------------------------------------------------------------
+# (L)BFGS with OPA extra secant pairs (paper Alg. LBFGS, Thm 3)
+# ---------------------------------------------------------------------------
+
+
+class LBFGSMemory(NamedTuple):
+    s: Array     # (m, D)
+    y: Array     # (m, D)
+    rho: Array   # (m,)
+    count: Array  # () int32 — total pairs ever stored (ring)
+
+
+def lbfgs_two_loop(mem: LBFGSMemory, v: Array, gamma: Array | float = 1.0) -> Array:
+    """Apply the LBFGS inverse-Hessian estimate H to v (two-loop recursion).
+
+    This is THE SHINE operation for the bi-level setting: sharing H with the
+    hypergradient instead of running a fresh CG/Newton solve.
+    """
+    m = mem.s.shape[0]
+    n = jnp.minimum(mem.count, m)
+    # iterate newest -> oldest: ring order
+    order_new_to_old = (mem.count - 1 - jnp.arange(m)) % m
+
+    def first_loop(carry, i):
+        q, alphas = carry
+        idx = order_new_to_old[i]
+        valid = i < n
+        alpha = jnp.where(valid, mem.rho[idx] * jnp.dot(mem.s[idx], q), 0.0)
+        q = q - alpha * jnp.where(valid, mem.y[idx], 0.0)
+        return (q, alphas.at[i].set(alpha)), None
+
+    q0 = v.astype(jnp.float32)
+    (q, alphas), _ = jax.lax.scan(
+        first_loop, (q0, jnp.zeros((m,), jnp.float32)), jnp.arange(m)
+    )
+    r = gamma * q
+
+    def second_loop(r, i):
+        j = m - 1 - i
+        idx = order_new_to_old[j]
+        valid = j < n
+        beta = jnp.where(valid, mem.rho[idx] * jnp.dot(mem.y[idx], r), 0.0)
+        r = r + (alphas[j] - beta) * jnp.where(valid, mem.s[idx], 0.0)
+        return r, None
+
+    r, _ = jax.lax.scan(second_loop, r, jnp.arange(m))
+    return r
+
+
+def _mem_push(mem: LBFGSMemory, s: Array, y: Array, accept: Array) -> LBFGSMemory:
+    sy = jnp.dot(s, y)
+    ok = accept & (sy > 1e-12)
+    slot = mem.count % mem.s.shape[0]
+    s_new = jnp.where(ok, s, mem.s[slot])
+    y_new = jnp.where(ok, y, mem.y[slot])
+    rho_new = jnp.where(ok, 1.0 / jnp.maximum(sy, 1e-12), mem.rho[slot])
+    return LBFGSMemory(
+        s=mem.s.at[slot].set(s_new),
+        y=mem.y.at[slot].set(y_new),
+        rho=mem.rho.at[slot].set(rho_new),
+        count=mem.count + ok.astype(jnp.int32),
+    )
+
+
+class LBFGSResult(NamedTuple):
+    z: Array
+    memory: LBFGSMemory
+    grad_norm: Array
+    n_steps: Array
+    converged: Array
+    trace: Array
+
+
+def lbfgs_solve(
+    grad_fn: Callable[[Array], Array],
+    z0: Array,                       # (D,)
+    cfg: SolverConfig,
+    *,
+    value_fn: Callable[[Array], Array] | None = None,
+    dg_dtheta: Callable[[Array], Array] | None = None,  # OPA direction source
+    max_ls: int = 20,
+) -> LBFGSResult:
+    """L-BFGS minimization via its gradient ``grad_fn`` (= g_theta of Eq. 2).
+
+    Line search: backtracking Armijo on ``value_fn`` when given, else fixed
+    unit step (Thm 3 remark covers alpha_n = 1 near the solution).
+
+    OPA (cfg.opa_freq = M > 0, requires ``dg_dtheta``): every M steps an extra
+    secant pair ``(e_n, g(z+e_n) - g(z))`` with
+    ``e_n = t_n H_n dg/dtheta|_{z_n}`` is pushed into the same ring memory the
+    two-loop recursion reads — improving H exactly in the direction the
+    hypergradient needs. t_n = ||s_{n-1}|| (summable by superlinearity).
+    """
+    dim = z0.shape[0]
+    m = cfg.memory
+    mem0 = LBFGSMemory(
+        s=jnp.zeros((m, dim), jnp.float32),
+        y=jnp.zeros((m, dim), jnp.float32),
+        rho=jnp.zeros((m,), jnp.float32),
+        count=jnp.int32(0),
+    )
+    g0 = grad_fn(z0)
+    gn0 = jnp.linalg.norm(g0)
+    trace0 = jnp.full((max(cfg.max_steps, 1),), jnp.inf, jnp.float32)
+
+    def cond(state):
+        k, _, _, _, _, done, _ = state
+        return (k < cfg.max_steps) & ~done
+
+    def line_search(z, p, gz, fz):
+        """Backtracking Armijo; returns step length alpha."""
+        gp = jnp.dot(gz, p)
+
+        def ls_cond(carry):
+            alpha, it = carry
+            fa = value_fn(z + alpha * p)
+            armijo = fa <= fz + 1e-4 * alpha * gp
+            return (~armijo) & (it < max_ls)
+
+        def ls_body(carry):
+            alpha, it = carry
+            return alpha * 0.5, it + 1
+
+        alpha, _ = jax.lax.while_loop(ls_cond, ls_body, (jnp.float32(1.0), 0))
+        return alpha
+
+    def body(state):
+        k, z, gz, mem, t_prev, done, trace = state
+        gamma = _lbfgs_gamma(mem)
+        p = -lbfgs_two_loop(mem, gz, gamma)
+        if value_fn is not None:
+            fz = value_fn(z)
+            alpha = line_search(z, p, gz, fz)
+        else:
+            alpha = jnp.float32(cfg.step_size)
+        z_new = z + alpha * p
+        g_new = grad_fn(z_new)
+        s = (z_new - z).astype(jnp.float32)
+        y = (g_new - gz).astype(jnp.float32)
+        mem = _mem_push(mem, s, y, jnp.bool_(True))
+
+        if dg_dtheta is not None and cfg.opa_freq > 0:
+            def do_opa(mem):
+                t_n = jnp.minimum(jnp.linalg.norm(s), cfg.opa_t0)
+                d = dg_dtheta(z_new).astype(jnp.float32)
+                e = t_n * lbfgs_two_loop(mem, d, _lbfgs_gamma(mem))
+                y_hat = (grad_fn(z_new + e) - g_new).astype(jnp.float32)
+                return _mem_push(mem, e, y_hat, jnp.bool_(True))
+            mem = jax.lax.cond(
+                (k % cfg.opa_freq) == cfg.opa_freq - 1, do_opa, lambda m_: m_, mem
+            )
+
+        gn = jnp.linalg.norm(g_new)
+        trace = trace.at[k].set(gn)
+        done = gn < cfg.tol
+        return (k + 1, z_new, g_new, mem, jnp.linalg.norm(s), done, trace)
+
+    state0 = (jnp.int32(0), z0.astype(jnp.float32), g0.astype(jnp.float32),
+              mem0, jnp.float32(cfg.opa_t0), gn0 < cfg.tol, trace0)
+    k, z, gz, mem, _, done, trace = jax.lax.while_loop(cond, body, state0)
+    return LBFGSResult(z, mem, jnp.linalg.norm(gz), k, done, trace)
+
+
+def _lbfgs_gamma(mem: LBFGSMemory) -> Array:
+    """Standard H0 scaling gamma = s'y / y'y of the newest pair."""
+    m = mem.s.shape[0]
+    has = mem.count > 0
+    idx = (mem.count - 1) % m
+    sy = jnp.dot(mem.s[idx], mem.y[idx])
+    yy = jnp.dot(mem.y[idx], mem.y[idx])
+    return jnp.where(has & (yy > 1e-12), jnp.maximum(sy, 1e-12) / jnp.maximum(yy, 1e-12), 1.0)

@@ -1,0 +1,7 @@
+from repro.data.pipeline import (
+    SyntheticTokenDataset,
+    make_lm_batch_iterator,
+    shard_batch,
+)
+
+__all__ = ["SyntheticTokenDataset", "make_lm_batch_iterator", "shard_batch"]

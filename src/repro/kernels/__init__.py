@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the performance hot spots SHINE creates or keeps:
+
+  qn_apply.py         low-rank quasi-Newton inverse application (SHINE core)
+  flash_attention.py  causal flash attention + single-token decode variant
+  rmsnorm.py          fused RMSNorm
+
+Each kernel has a pure-jnp oracle in ref.py; ops.py holds the jit'd,
+backend-dispatching public wrappers.
+"""

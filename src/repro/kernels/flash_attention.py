@@ -1,0 +1,184 @@
+"""Pallas TPU flash attention (forward) with GQA and causal block skipping.
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks), executed sequentially on
+TPU — the online-softmax running max/denominator/accumulator live in VMEM
+scratch and carry across the kv-block grid dimension. Causality is enforced
+at two granularities: whole kv-blocks strictly above the diagonal are skipped
+via ``pl.when`` (no FLOPs once the compiler hoists the branch), and the
+diagonal block applies an element mask.
+
+GQA is handled in the index_map: kv blocks for q-head ``h`` come from kv-head
+``h // group``, so no materialized head broadcast.
+
+The block sizes (128, 128) align the MXU contraction dims; head_dim is
+expected to be a multiple of 8 (all assigned architectures satisfy this).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,      # (1, blk_q, 1, hd)
+    k_ref,      # (1, blk_k, 1, hd)
+    v_ref,      # (1, blk_k, 1, hd)
+    len_ref,    # (1, 1) valid kv length for this batch row
+    out_ref,    # (1, blk_q, 1, hd)
+    m_scr,      # (blk_q, 1) f32 running max
+    l_scr,      # (blk_q, 1) f32 running denominator
+    acc_scr,    # (blk_q, hd) f32 accumulator
+    *,
+    scale: float,
+    causal: bool,
+    blk_q: int,
+    blk_k: int,
+    q_offset_blocks: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # absolute block row (in kv coordinates) of this q block
+    q_blk_abs = iq + q_offset_blocks
+    run = (ik <= q_blk_abs) if causal else (ik >= 0)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale   # (blk_q, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)           # (blk_k, hd)
+        s = q @ k.T                                          # (blk_q, blk_k)
+
+        kpos = ik * blk_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = kpos < len_ref[0, 0]
+        if causal:
+            qpos = (q_blk_abs * blk_q
+                    + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0))
+            valid = valid & (kpos <= qpos)
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_scr[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = corr * l_scr[:, 0] + jnp.sum(p, axis=1)
+        vv = v_ref[0, :, 0, :].astype(jnp.float32)           # (blk_k, hd)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + p @ vv
+        m_scr[:, 0] = m_new
+        l_scr[:, 0] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[:, 0], 1e-30)
+        out_ref[0, :, 0, :] = (acc_scr[...] / denom[:, None]).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,                   # (B, S, H, hd)
+    k: jax.Array,                   # (B, T, KV, hd)
+    v: jax.Array,                   # (B, T, KV, hd)
+    kv_length: jax.Array | None = None,  # (B,)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    group = h // kvh
+    scale = (hd ** -0.5) if scale is None else scale
+    blk_q = min(block_q, s)
+    blk_k = min(block_k, t)
+    if s % blk_q or t % blk_k:
+        raise ValueError(f"seq {s}/{t} must divide block sizes {blk_q}/{blk_k}")
+    nq, nk = s // blk_q, t // blk_k
+    # When q is the tail of a longer kv axis (chunked prefill), q block 0 sits
+    # at kv block (t - s) / blk_q. For self-attention t == s -> offset 0.
+    q_offset_blocks = (t - s) // blk_q if causal else 0
+    if kv_length is None:
+        kv_length = jnp.full((b,), t, jnp.int32)
+    len2d = kv_length.reshape(b, 1).astype(jnp.int32)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale,
+        causal=causal,
+        blk_q=blk_q,
+        blk_k=blk_k,
+        q_offset_blocks=q_offset_blocks,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, 1, hd), lambda b_, h_, iq, ik: (b_, iq, h_, 0)),
+            pl.BlockSpec(
+                (1, blk_k, 1, hd),
+                lambda b_, h_, iq, ik, g=group: (b_, ik, h_ // g, 0),
+            ),
+            pl.BlockSpec(
+                (1, blk_k, 1, hd),
+                lambda b_, h_, iq, ik, g=group: (b_, ik, h_ // g, 0),
+            ),
+            pl.BlockSpec((1, 1), lambda b_, h_, iq, ik: (b_, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, blk_q, 1, hd), lambda b_, h_, iq, ik: (b_, iq, h_, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, 1), jnp.float32),
+            pltpu.VMEM((blk_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, len2d)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_k", "interpret"))
+def decode_attention_pallas(
+    q: jax.Array,          # (B, H, hd) one new token per sequence
+    k: jax.Array,          # (B, T, KV, hd) KV cache
+    v: jax.Array,          # (B, T, KV, hd)
+    kv_length: jax.Array,  # (B,)
+    *,
+    scale: float | None = None,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Single-token flash-decode: q_len=1 specialization (no q tiling; the
+    whole per-head query row lives in registers, kv streams in blocks)."""
+    b, h, hd = q.shape
+    out = flash_attention_pallas(
+        q[:, None],
+        k,
+        v,
+        kv_length,
+        causal=False,
+        scale=scale,
+        block_q=1,
+        block_k=min(block_k, k.shape[1]),
+        interpret=interpret,
+    )
+    return out[:, 0]

@@ -1,0 +1,377 @@
+"""Flash attention in pure JAX (XLA), mirroring the Pallas kernel's tiling.
+
+This is the CPU/dry-run execution path for the attention hot spot. It
+matters for two reasons:
+
+  1. **Memory faithfulness.** The dense oracle materializes the (S, T) score
+     tensor; at 32k prefill that is tens of GB per device and the dry-run's
+     ``memory_analysis`` would (correctly) report that the lowered program
+     does not fit a 16 GB v5e chip. This implementation processes
+     (block_q, block_kv) tiles with online softmax — the same working-set
+     shape the Pallas kernel keeps in VMEM — so the compiled dry-run's
+     temp-buffer report reflects the deployment path.
+
+  2. **Cost faithfulness.** XLA's ``cost_analysis`` counts ``scan``/``while``
+     bodies ONCE. With ``unroll=True`` the tile loops are Python ``for``
+     loops — every tile appears in the HLO, FLOPs are exact, and causal
+     block-skipping (tiles entirely above the diagonal are never emitted)
+     matches the Pallas kernel's grid. The dry-run costing variants lower
+     with ``unroll=True`` at reduced depth; the full-depth memory variants
+     use ``unroll=False`` (lax.scan tiles).
+
+GQA is handled without materializing repeated K/V heads: queries are
+reshaped to (B, S, KV, G, hd) and contracted group-wise.
+
+The backward pass is the standard flash backward (recompute p from the
+saved logsumexp), also tiled, with a single full-size f32 dq accumulator.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_NEG_INF = -1e30
+
+
+class _Saved(NamedTuple):
+    q: Array
+    k: Array
+    v: Array
+    out: Array
+    lse: Array          # (B, KV, G, S) logsumexp of the scaled scores
+    kv_length: Array    # (B,)
+
+
+def _group_q(q: Array, kv_heads: int) -> Array:
+    """(B, S, H, hd) -> (B, S, KV, G, hd)."""
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, kv_heads, h // kv_heads, hd)
+
+
+def _block_bounds(t: int, block: int) -> int:
+    return (t + block - 1) // block
+
+
+def _pad_to(x: Array, axis: int, mult: int) -> Array:
+    n = x.shape[axis]
+    rem = n % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, mult - rem)
+    return jnp.pad(x, pads)
+
+
+def _causal_skip(i: int, j: int, block_q: int, block_kv: int, q_offset: int) -> bool:
+    """True when tile (i, j) is entirely above the causal diagonal (static)."""
+    q_max = i * block_q + block_q - 1 + q_offset
+    k_min = j * block_kv
+    return k_min > q_max
+
+
+def _tile_mask(qpos: Array, kpos: Array, causal: bool,
+               kv_length: Array | None, s_valid: int, t_valid: int) -> Array:
+    """(bq, bkv) or (B, 1, 1, bq, bkv) validity mask for one tile."""
+    m = (qpos[:, None] < s_valid) & (kpos[None, :] < t_valid)
+    if causal:
+        m = m & (kpos[None, :] <= qpos[:, None])
+    m = m[None, None, None]
+    if kv_length is not None:
+        m = m & (kpos[None, None, None, None, :] < kv_length[:, None, None, None, None])
+    return m
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd_tile(qg, kb, vb, m, l, acc, mask, scale):
+    """Online-softmax update for one (bq, bkv) tile.
+
+    qg: (B, bq, KV, G, hd) in the INPUT dtype (bf16 stays bf16 — MXU-style:
+    low-precision operands, f32 accumulation via preferred_element_type);
+    kb/vb: (B, bkv, KV, hd); m, l: (B, KV, G, bq);
+    acc: (B, KV, G, bq, hd) f32; mask broadcastable to (B, KV, G, bq, bkv).
+    """
+    sc = jnp.einsum("bqkgd,btkd->bkgqt", qg, kb,
+                    preferred_element_type=jnp.float32) * scale
+    sc = jnp.where(mask, sc, _NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+    p = jnp.exp(sc - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = corr * l + jnp.sum(p, axis=-1)
+    acc_new = acc * corr[..., None] + jnp.einsum(
+        "bkgqt,btkd->bkgqd", p.astype(vb.dtype), vb,
+        preferred_element_type=jnp.float32,
+    )
+    return m_new, l_new, acc_new
+
+
+def _flash_fwd(q, k, v, kv_length, causal, q_offset, scale,
+               block_q, block_kv, unroll):
+    b, s, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = (hd ** -0.5) if scale is None else scale
+
+    qp = _pad_to(q, 1, block_q)
+    kp = _pad_to(k, 1, block_kv)
+    vp = _pad_to(v, 1, block_kv)
+    sp, tp = qp.shape[1], kp.shape[1]
+    nq, nkv = sp // block_q, tp // block_kv
+
+    qg = _group_q(qp, kvh)                              # (B, Sp, KV, G, hd)
+
+    def q_tile(i):
+        return jax.lax.dynamic_slice_in_dim(qg, i * block_q, block_q, 1)
+
+    def kv_tile(j):
+        kb = jax.lax.dynamic_slice_in_dim(kp, j * block_kv, block_kv, 1)
+        vb = jax.lax.dynamic_slice_in_dim(vp, j * block_kv, block_kv, 1)
+        return kb, vb
+
+    def run_q_block(i_static: int | None, i_dyn: Array | None):
+        """Process one q tile against all kv tiles; returns (out_i, lse_i)."""
+        i = i_static if i_static is not None else i_dyn
+        qi = q_tile(i)
+        qpos = i * block_q + jnp.arange(block_q) + q_offset
+        m0 = jnp.full((b, kvh, g, block_q), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, block_q), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, block_q, hd), jnp.float32)
+
+        def tile_update(carry, j_static=None, j_dyn=None):
+            m, l, acc = carry
+            j = j_static if j_static is not None else j_dyn
+            kb, vb = kv_tile(j)
+            kpos = j * block_kv + jnp.arange(block_kv)
+            mask = _tile_mask_full(qpos, kpos, causal, kv_length, s, t, q_offset)
+            return _fwd_tile(qi, kb, vb, m, l, acc, mask, scale)
+
+        if unroll:
+            carry = (m0, l0, a0)
+            for j in range(nkv):
+                if causal and _causal_skip(i_static, j, block_q, block_kv, q_offset):
+                    continue
+                carry = tile_update(carry, j_static=j)
+            m, l, acc = carry
+        else:
+            def body(carry, j):
+                return tile_update(carry, j_dyn=j), None
+            (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nkv))
+
+        out_i = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse_i = m + jnp.log(jnp.maximum(l, 1e-30))
+        return out_i, lse_i  # (B, KV, G, bq, hd), (B, KV, G, bq)
+
+    if unroll:
+        outs, lses = [], []
+        for i in range(nq):
+            o, e = run_q_block(i, None)
+            outs.append(o)
+            lses.append(e)
+        out = jnp.concatenate(outs, axis=3)              # (B, KV, G, Sp, hd)
+        lse = jnp.concatenate(lses, axis=3)              # (B, KV, G, Sp)
+    else:
+        def obody(_, i):
+            return None, run_q_block(None, i)
+        _, (outs, lses) = jax.lax.scan(obody, None, jnp.arange(nq))
+        # (nq, B, KV, G, bq, hd) -> (B, KV, G, Sp, hd)
+        out = jnp.moveaxis(outs, 0, 3).reshape(b, kvh, g, sp, hd)
+        lse = jnp.moveaxis(lses, 0, 3).reshape(b, kvh, g, sp)
+
+    out = jnp.moveaxis(out[..., :s, :], 3, 1).reshape(b, s, h, hd)
+    return out.astype(q.dtype), lse[..., :s]
+
+
+def _tile_mask_full(qpos, kpos, causal, kv_length, s_valid, t_valid, q_offset):
+    """Validity mask for one tile; qpos already carries the q_offset."""
+    qv = (qpos - q_offset) < s_valid
+    m = qv[:, None] & (kpos[None, :] < t_valid)
+    if causal:
+        m = m & (kpos[None, :] <= qpos[:, None])
+    m = m[None, None, None]
+    if kv_length is not None:
+        m = m & (kpos[None, None, None, None, :] < kv_length[:, None, None, None, None])
+    return m
+
+
+# ---------------------------------------------------------------------------
+# backward (flash-style recompute from lse)
+# ---------------------------------------------------------------------------
+
+
+def _flash_bwd(saved: _Saved, dout, causal, q_offset, scale,
+               block_q, block_kv, unroll):
+    q, k, v, out, lse, kv_length = saved
+    b, s, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale_v = (hd ** -0.5) if scale is None else scale
+
+    qp = _pad_to(q, 1, block_q)
+    op = _pad_to(out, 1, block_q)
+    dop = _pad_to(dout, 1, block_q)
+    lsep = _pad_to(lse, 3, block_q)
+    kp = _pad_to(k, 1, block_kv)
+    vp = _pad_to(v, 1, block_kv)
+    sp, tp = qp.shape[1], kp.shape[1]
+    nq, nkv = sp // block_q, tp // block_kv
+
+    qg = _group_q(qp, kvh)                                   # (B,Sp,KV,G,hd)
+    og = _group_q(op, kvh)
+    dog = _group_q(dop, kvh)
+    # D_i = rowsum(dout * out): (B, Sp, KV, G) — f32 accumulation
+    delta = jnp.einsum("bskgd,bskgd->bskg", dog, og,
+                       preferred_element_type=jnp.float32)
+
+    def q_slices(i):
+        sl = lambda x: jax.lax.dynamic_slice_in_dim(x, i * block_q, block_q, 1)
+        lsei = jax.lax.dynamic_slice_in_dim(lsep, i * block_q, block_q, 3)
+        return sl(qg), sl(dog), sl(delta), lsei
+
+    def kv_tile(j):
+        kb = jax.lax.dynamic_slice_in_dim(kp, j * block_kv, block_kv, 1)
+        vb = jax.lax.dynamic_slice_in_dim(vp, j * block_kv, block_kv, 1)
+        return kb, vb
+
+    def tile_grads(i, j, qi, doi, di, lsei):
+        """Gradients of one (i, j) tile. Returns (dq_i_part, dk_j_part, dv_j_part).
+
+        MXU-style mixed precision: bf16 operands into every einsum with f32
+        accumulation (preferred_element_type); only the small f32 softmax
+        state (p, ds) is materialized per tile.
+        """
+        kb, vb = kv_tile(j)
+        qpos = i * block_q + jnp.arange(block_q) + q_offset
+        kpos = j * block_kv + jnp.arange(block_kv)
+        mask = _tile_mask_full(qpos, kpos, causal, kv_length, s, t, q_offset)
+        sc = jnp.einsum("bqkgd,btkd->bkgqt", qi, kb,
+                        preferred_element_type=jnp.float32) * scale_v
+        sc = jnp.where(mask, sc, _NEG_INF)
+        # p = exp(sc - lse): (B,KV,G,bq,bkv); lsei: (B,KV,G,bq)
+        p = jnp.exp(sc - lsei[..., None])
+        pc = p.astype(vb.dtype)
+        dv = jnp.einsum("bkgqt,bqkgd->btkd", pc, doi,
+                        preferred_element_type=jnp.float32)   # (B,bkv,KV,hd)
+        dp = jnp.einsum("bqkgd,btkd->bkgqt", doi, vb,
+                        preferred_element_type=jnp.float32)
+        dit = jnp.transpose(di, (0, 2, 3, 1))                 # (B,KV,G,bq)
+        ds = p * (dp - dit[..., None])
+        dsc = ds.astype(qi.dtype)
+        dq = jnp.einsum("bkgqt,btkd->bqkgd", dsc, kb,
+                        preferred_element_type=jnp.float32) * scale_v
+        dk = jnp.einsum("bkgqt,bqkgd->btkd", dsc, qi,
+                        preferred_element_type=jnp.float32) * scale_v
+        return dq, dk, dv
+
+    dq_full = jnp.zeros((b, sp, kvh, g, hd), jnp.float32)
+    dk_full = jnp.zeros((b, tp, kvh, hd), jnp.float32)
+    dv_full = jnp.zeros((b, tp, kvh, hd), jnp.float32)
+
+    if unroll:
+        for i in range(nq):
+            qi, doi, di, lsei = q_slices(i)
+            dq_i = jnp.zeros((b, block_q, kvh, g, hd), jnp.float32)
+            for j in range(nkv):
+                if causal and _causal_skip(i, j, block_q, block_kv, q_offset):
+                    continue
+                dq_p, dk_p, dv_p = tile_grads(i, j, qi, doi, di, lsei)
+                dq_i = dq_i + dq_p
+                dk_full = jax.lax.dynamic_update_slice_in_dim(
+                    dk_full,
+                    jax.lax.dynamic_slice_in_dim(dk_full, j * block_kv, block_kv, 1) + dk_p,
+                    j * block_kv, 1)
+                dv_full = jax.lax.dynamic_update_slice_in_dim(
+                    dv_full,
+                    jax.lax.dynamic_slice_in_dim(dv_full, j * block_kv, block_kv, 1) + dv_p,
+                    j * block_kv, 1)
+            dq_full = jax.lax.dynamic_update_slice_in_dim(dq_full, dq_i, i * block_q, 1)
+    else:
+        def outer(carry, i):
+            dq_full, dk_full, dv_full = carry
+            qi, doi, di, lsei = q_slices(i)
+
+            def inner(icarry, j):
+                dq_i, dk_f, dv_f = icarry
+                dq_p, dk_p, dv_p = tile_grads(i, j, qi, doi, di, lsei)
+                dk_f = jax.lax.dynamic_update_slice_in_dim(
+                    dk_f,
+                    jax.lax.dynamic_slice_in_dim(dk_f, j * block_kv, block_kv, 1) + dk_p,
+                    j * block_kv, 1)
+                dv_f = jax.lax.dynamic_update_slice_in_dim(
+                    dv_f,
+                    jax.lax.dynamic_slice_in_dim(dv_f, j * block_kv, block_kv, 1) + dv_p,
+                    j * block_kv, 1)
+                return (dq_i + dq_p, dk_f, dv_f), None
+
+            dq_i0 = jnp.zeros((b, block_q, kvh, g, hd), jnp.float32)
+            (dq_i, dk_full, dv_full), _ = jax.lax.scan(
+                inner, (dq_i0, dk_full, dv_full), jnp.arange(nkv))
+            dq_full = jax.lax.dynamic_update_slice_in_dim(
+                dq_full, dq_i, i * block_q, 1)
+            return (dq_full, dk_full, dv_full), None
+
+        (dq_full, dk_full, dv_full), _ = jax.lax.scan(
+            outer, (dq_full, dk_full, dv_full), jnp.arange(nq))
+
+    dq = dq_full[:, :s].reshape(b, s, h, hd).astype(q.dtype)
+    dk = dk_full[:, :t].astype(k.dtype)
+    dv = dv_full[:, :t].astype(v.dtype)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# public custom_vjp op
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
+def _flash(q, k, v, kv_length, causal, q_offset, scale, block_q, block_kv, unroll):
+    out, _ = _flash_fwd(q, k, v, kv_length, causal, q_offset, scale,
+                        block_q, block_kv, unroll)
+    return out
+
+
+def _flash_vjp_fwd(q, k, v, kv_length, causal, q_offset, scale,
+                   block_q, block_kv, unroll):
+    out, lse = _flash_fwd(q, k, v, kv_length, causal, q_offset, scale,
+                          block_q, block_kv, unroll)
+    return out, _Saved(q, k, v, out, lse, kv_length)
+
+
+def _flash_vjp_bwd(causal, q_offset, scale, block_q, block_kv, unroll,
+                   saved, dout):
+    dq, dk, dv = _flash_bwd(saved, dout, causal, q_offset, scale,
+                            block_q, block_kv, unroll)
+    return dq, dk, dv, None
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def flash_attention_xla(
+    q: Array,                     # (B, S, H, hd)
+    k: Array,                     # (B, T, KV, hd)
+    v: Array,                     # (B, T, KV, hd)
+    *,
+    causal: bool = True,
+    kv_length: Array | None = None,
+    q_offset: int = 0,
+    scale: float | None = None,
+    block_q: int = 512,
+    block_kv: int = 1024,
+    unroll: bool = False,
+) -> Array:
+    """Tiled online-softmax attention with a tiled flash backward."""
+    b, s, h, hd = q.shape
+    block_q = min(block_q, max(s, 1))
+    block_kv = min(block_kv, max(k.shape[1], 1))
+    return _flash(q, k, v, kv_length, causal, q_offset, scale,
+                  block_q, block_kv, unroll)

@@ -1,0 +1,200 @@
+"""Jit'd public wrappers around the kernel layer.
+
+Dispatch policy:
+  * TPU backend          -> Pallas kernels (deployment path)
+  * anything else        -> pure-jnp reference (this CPU container, tests)
+  * impl="pallas_interpret" -> Pallas kernel body executed in Python
+    (used by the kernel test sweeps to validate the TPU code path on CPU)
+
+Training differentiability: the Pallas flash-attention here implements the
+forward only; ``attention`` wraps it in a custom_vjp whose backward
+re-derives gradients from the reference oracle (recompute — consistent with
+the DEQ O(1)-memory posture). The qn_apply kernel is only ever used inside
+custom_vjp forward/backward bodies of the DEQ layer, so it needs no VJP of
+its own.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import (
+    decode_attention_pallas,
+    flash_attention_pallas,
+)
+from repro.kernels.flash_xla import flash_attention_xla
+from repro.kernels.qn_apply import qn_apply_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+
+Impl = Literal["auto", "ref", "flash_xla", "pallas", "pallas_interpret"]
+
+# Above this many score-matrix cells (S*T) the CPU auto policy switches from
+# the dense oracle to the tiled flash_xla path, which is memory-faithful to
+# the TPU Pallas kernel (the dense oracle materializes an S x T f32 tensor).
+_FLASH_XLA_CELLS = 1 << 20
+
+_FORCED_IMPL: Impl | None = None
+
+
+def force_impl(impl: Impl | None) -> None:
+    """Test hook: globally force a kernel implementation."""
+    global _FORCED_IMPL
+    _FORCED_IMPL = impl
+
+
+def _resolve(impl: Impl | None) -> Impl:
+    if _FORCED_IMPL is not None:
+        return _FORCED_IMPL
+    if impl not in (None, "auto"):
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+# ---------------------------------------------------------------------------
+# qn_apply — the SHINE inverse-estimate application
+# ---------------------------------------------------------------------------
+
+
+def qn_apply(u, v, x, alpha, mask, impl: Impl | None = None) -> jax.Array:
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.qn_apply_ref(u, v, x, alpha, mask)
+    # Kernel path: flatten feature dims (per-shard local view on TPU).
+    m, bsz = u.shape[0], u.shape[1]
+    feat_shape = x.shape[1:]
+    u2, v2 = u.reshape(m, bsz, -1), v.reshape(m, bsz, -1)
+    x2 = x.reshape(bsz, -1)
+    if m % 8 != 0:  # pad qN memory axis to sublane multiple
+        pad = 8 - m % 8
+        u2 = jnp.pad(u2, ((0, pad), (0, 0), (0, 0)))
+        v2 = jnp.pad(v2, ((0, pad), (0, 0), (0, 0)))
+        mask = jnp.pad(mask, ((0, pad), (0, 0)))
+    out = qn_apply_pallas(
+        u2, v2, x2, alpha, mask, interpret=(impl == "pallas_interpret")
+    )
+    return out.reshape((bsz,) + feat_shape)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def _attention_fwd_impl(q, k, v, kv_length, causal, scale, impl):
+    if impl == "ref":
+        return ref.attention_ref(q, k, v, causal=causal, kv_length=kv_length,
+                                 scale=scale)
+    return flash_attention_pallas(
+        q, k, v, kv_length, causal=causal, scale=scale,
+        interpret=(impl == "pallas_interpret"),
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _attention(q, k, v, kv_length, causal, scale, impl):
+    return _attention_fwd_impl(q, k, v, kv_length, causal, scale, impl)
+
+
+def _attention_fwd(q, k, v, kv_length, causal, scale, impl):
+    out = _attention_fwd_impl(q, k, v, kv_length, causal, scale, impl)
+    return out, (q, k, v, kv_length)
+
+
+def _attention_bwd(causal, scale, impl, res, g):
+    q, k, v, kv_length = res
+    # Backward through the reference oracle (recompute): numerically identical
+    # to the kernel forward, no saved probabilities.
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.attention_ref(
+            q_, k_, v_, causal=causal, kv_length=kv_length, scale=scale
+        ),
+        q, k, v,
+    )
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, None
+
+
+_attention.defvjp(_attention_fwd, _attention_bwd)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    kv_length: jax.Array | None = None,
+    scale: float | None = None,
+    impl: Impl | None = None,
+    block_q: int = 512,
+    block_kv: int = 1024,
+    unroll: bool = False,
+) -> jax.Array:
+    """Differentiable multi-head attention: (B,S,H,hd)x(B,T,KV,hd) -> (B,S,H,hd).
+
+    ``block_q``/``block_kv``/``unroll`` apply to the flash_xla path only
+    (unroll=True is the dry-run costing mode: every tile appears in the HLO).
+    """
+    requested = impl
+    impl = _resolve(impl)
+    if (impl == "ref" and requested in (None, "auto") and _FORCED_IMPL is None
+            and q.shape[1] * k.shape[1] >= _FLASH_XLA_CELLS):
+        impl = "flash_xla"
+    if impl == "flash_xla":
+        return flash_attention_xla(
+            q, k, v, causal=causal, kv_length=kv_length, scale=scale,
+            block_q=block_q, block_kv=block_kv, unroll=unroll,
+        )
+    return _attention(q, k, v, kv_length, causal, scale, impl)
+
+
+def decode_attention(
+    q: jax.Array,          # (B, H, hd)
+    k: jax.Array,          # (B, T, KV, hd)
+    v: jax.Array,
+    kv_length: jax.Array,  # (B,)
+    *,
+    scale: float | None = None,
+    impl: Impl | None = None,
+) -> jax.Array:
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.decode_attention_ref(q, k, v, kv_length, scale=scale)
+    return decode_attention_pallas(
+        q, k, v, kv_length, scale=scale, interpret=(impl == "pallas_interpret")
+    )
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _rmsnorm(x, w, eps, impl):
+    if impl == "ref":
+        return ref.rmsnorm_ref(x, w, eps)
+    return rmsnorm_pallas(x, w, eps=eps, interpret=(impl == "pallas_interpret"))
+
+
+def _rmsnorm_fwd(x, w, eps, impl):
+    return _rmsnorm(x, w, eps, impl), (x, w)
+
+
+def _rmsnorm_bwd(eps, impl, res, g):
+    x, w = res
+    _, vjp = jax.vjp(lambda x_, w_: ref.rmsnorm_ref(x_, w_, eps), x, w)
+    return vjp(g)
+
+
+_rmsnorm.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6,
+            impl: Impl | None = None) -> jax.Array:
+    return _rmsnorm(x, w, eps, _resolve(impl))

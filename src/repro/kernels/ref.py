@@ -1,0 +1,164 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth (tests sweep shapes/dtypes and
+``assert_allclose`` kernel-vs-oracle), the CPU execution path (this container
+lowers models through these), and the source of backward rules for the
+kernels (the flash-attention custom_vjp re-derives grads from the oracle).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qn_apply_ref(
+    u: jax.Array,      # (m, B, *F)
+    v: jax.Array,      # (m, B, *F)
+    x: jax.Array,      # (B, *F)
+    alpha: jax.Array,  # scalar
+    mask: jax.Array,   # (m, B) validity of ring slots
+) -> jax.Array:
+    """``(alpha*I + sum_i u_i v_i^T) @ x`` per batch sample, f32 accumulation.
+
+    Feature dims are contracted via einsum ellipsis — never reshaped — so a
+    TP-sharded feature axis stays sharded under GSPMD (the (m, B) coefficient
+    reduce is the only collective this op generates).
+    """
+    xf = x.astype(jnp.float32)
+    coeff = jnp.einsum("mb...,b...->mb", v.astype(jnp.float32), xf)
+    coeff = coeff * mask.astype(jnp.float32)
+    out = alpha * xf + jnp.einsum("mb,mb...->b...", coeff, u.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def _gqa_expand(k: jax.Array, num_heads: int) -> jax.Array:
+    """(B, T, KV, hd) -> (B, T, H, hd) by repeating KV head groups."""
+    b, t, kv, hd = k.shape
+    if kv == num_heads:
+        return k
+    group = num_heads // kv
+    return jnp.repeat(k, group, axis=2)
+
+
+def attention_ref(
+    q: jax.Array,                    # (B, S, H, hd)
+    k: jax.Array,                    # (B, T, KV, hd)
+    v: jax.Array,                    # (B, T, KV, hd)
+    *,
+    causal: bool = True,
+    kv_length: jax.Array | None = None,  # (B,) valid KV prefix length
+    q_offset: jax.Array | int = 0,       # position of q[0] within the KV axis
+    scale: float | None = None,
+    logits_soft_cap: float | None = None,
+) -> jax.Array:
+    """Masked multi-head attention oracle with GQA broadcast, f32 softmax."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    scale = (hd ** -0.5) if scale is None else scale
+    k = _gqa_expand(k, h)
+    v = _gqa_expand(v, h)
+    # MXU-style mixed precision: low-precision operands, f32 accumulation
+    logits = jnp.einsum("bshd,bthd->bhst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if logits_soft_cap is not None:
+        logits = logits_soft_cap * jnp.tanh(logits / logits_soft_cap)
+    mask = jnp.ones((b, 1, s, t), dtype=bool)
+    if causal:
+        qpos = jnp.arange(s)[:, None] + q_offset
+        kpos = jnp.arange(t)[None, :]
+        mask = mask & (kpos <= qpos)[None, None]
+    if kv_length is not None:
+        mask = mask & (jnp.arange(t)[None, None, None, :] < kv_length[:, None, None, None])
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def attention_blocked_ref(
+    q: jax.Array,                    # (B, S, H, hd)
+    k: jax.Array,                    # (B, T, KV, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    kv_length: jax.Array | None = None,
+    scale: float | None = None,
+    block: int = 2048,
+) -> jax.Array:
+    """Online-softmax attention scanning KV blocks — the flash algorithm in
+    XLA. Used for long sequences where the dense oracle would materialize an
+    S x T score tensor. NOTE for dry-run costing: the scan body is counted
+    once by XLA cost analysis; benchmarks/roofline.py applies the analytic
+    correction factor (num_kv_blocks - 1) for these cells.
+    """
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    scale = (hd ** -0.5) if scale is None else scale
+    k = _gqa_expand(k, h)
+    v = _gqa_expand(v, h)
+    if kv_length is None:
+        kv_length = jnp.full((b,), t, jnp.int32)
+    nb = (t + block - 1) // block
+    if t % block:
+        pad = nb * block - t
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = jnp.moveaxis(k.reshape(b, nb, block, h, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nb, block, h, hd), 1, 0)
+    qf = q.astype(jnp.float32) * scale
+    qpos = jnp.arange(s)[None, :]  # (1, S)
+
+    def body(carry, inp):
+        m, l, acc, ib = carry[0], carry[1], carry[2], carry[3]
+        kc, vc = inp
+        sc = jnp.einsum("bshd,bthd->bhst", qf, kc.astype(jnp.float32))
+        kpos = ib * block + jnp.arange(block)[None, :]
+        valid = (kpos < kv_length[:, None])[:, None, None, :]
+        if causal:
+            valid = valid & (kpos[:, None, :, None] <= qpos[:, :, None, None]
+                             ).transpose(0, 3, 1, 2)[:, None][:, 0][:, None] if False else (
+                valid & (kpos[None, None, :] <= qpos[:, :, None])[:, None, :, :])
+        sc = jnp.where(valid, sc, -1e30)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = corr * l + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhst,bthd->bhsd", p, vc.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new, ib + 1), None
+
+    m0 = jnp.full((b, h, s), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    a0 = jnp.zeros((b, h, s, hd), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(body, (m0, l0, a0, jnp.int32(0)), (kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,          # (B, H, hd) single new token per sequence
+    k: jax.Array,          # (B, T, KV, hd) cache
+    v: jax.Array,          # (B, T, KV, hd)
+    kv_length: jax.Array,  # (B,) number of valid cache entries
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    out = attention_ref(
+        q[:, None], k, v, causal=False, kv_length=kv_length, scale=scale
+    )
+    return out[:, 0]
+
+
+def rmsnorm_ref(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Mean-square in f32 (einsum accumulation), normalization applied in the
+    activation dtype: a full-tensor f32 convert at every block entry is what
+    the Pallas kernel avoids in VMEM — and under sequence parallelism XLA
+    hoists that convert across the boundary all-gather, doubling link bytes
+    (EXPERIMENTS.md §Perf A5)."""
+    var = jnp.einsum("...d,...d->...", x, x,
+                     preferred_element_type=jnp.float32) / x.shape[-1]
+    inv = jax.lax.rsqrt(var + eps)[..., None].astype(x.dtype)
+    return x * inv * weight.astype(x.dtype)

@@ -1,0 +1,381 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count on first init). Everything below is ordinary.
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import subprocess        # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.base import TrainConfig                      # noqa: E402
+from repro.configs.registry import ARCHS, get_config            # noqa: E402
+from repro.configs.shapes import (                              # noqa: E402
+    SHAPES,
+    cell_skip_reason,
+    input_specs,
+    make_ctx,
+)
+from repro.launch import steps                                  # noqa: E402
+from repro.launch.mesh import make_production_mesh              # noqa: E402
+
+"""Multi-pod dry-run: ``lower().compile()`` every (arch x shape x mesh) cell.
+
+Two variants per cell (DESIGN.md / EXPERIMENTS.md §Dry-run):
+
+  * ``memory``  — the production program: full depth, layers scanned,
+    attention tiles scanned. Proves shardability and yields
+    ``memory_analysis`` (bytes per device). XLA counts loop bodies once, so
+    its flops are NOT the roofline source.
+
+  * ``cost``    — roofline source: python-unrolled layers and attention
+    tiles at two reduced depths L0 and L0+p (p = the arch's layer period).
+    Every op appears in the HLO exactly as often as it executes, so
+    (cost(L0+p) - cost(L0)) / p is the exact per-layer cost and
+    cost(L) = cost(L0) + (L - L0)/p * delta extrapolates exactly (the
+    per-layer subgraphs are identical by construction). Single-pod only.
+
+Collective bytes are parsed from the compiled (post-SPMD) HLO: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+converted to per-device link-bytes with ring-algorithm factors.
+"""
+
+RESULTS_DIR = Path("results/dryrun")
+
+_SIZES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "pred": 1,
+          "s8": 1, "u8": 1, "s64": 8, "u64": 8, "f64": 8, "c64": 8, "s16": 2,
+          "u16": 2}
+
+_COLL_RE = re.compile(
+    r"=\s+(\([^)]*\)|\w+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _SIZES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device link bytes by collective kind (ring-algorithm accounting).
+
+    all-gather:      each device sends/receives out_bytes * (g-1)/g
+    all-reduce:      2 * bytes * (g-1)/g         (reduce-scatter + all-gather)
+    reduce-scatter:  out_bytes * (g-1)            (input = g * output)
+    all-to-all:      out_bytes * (g-1)/g
+    collective-permute: out_bytes
+    """
+    totals: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shapes_str, kind, _start = m.groups()
+        size = sum(_shape_bytes(dt, dims)
+                   for dt, dims in _SHAPE_RE.findall(shapes_str))
+        if kind == "all-gather" and shapes_str.startswith("("):
+            # -start tuple carries (operand, result); count the result only
+            size //= 2
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = len(gm.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                g = int(gi.group(2))   # [num_groups, group_size]<=[N]
+        if g <= 1 and kind != "collective-permute":
+            continue
+        if kind == "all-gather":
+            b = size * (g - 1) / g
+        elif kind == "all-reduce":
+            b = 2 * size * (g - 1) / g
+        elif kind == "reduce-scatter":
+            b = size * (g - 1)
+        elif kind == "all-to-all":
+            b = size * (g - 1) / g
+        else:  # collective-permute
+            b = size
+        totals[kind] = totals.get(kind, 0.0) + b
+        counts[kind] = counts.get(kind, 0) + 1
+    totals["total"] = sum(totals.values())
+    return {"bytes": totals, "counts": counts}
+
+
+# ---------------------------------------------------------------------------
+# cell construction
+# ---------------------------------------------------------------------------
+
+
+def _layer_period(cfg) -> int:
+    if cfg.family == "hybrid":
+        return cfg.ssm.attn_every
+    if cfg.family == "ssm":
+        return cfg.xlstm.slstm_every
+    return 1
+
+
+def _reduced_depths(cfg) -> tuple[int, int]:
+    """Two depths whose delta isolates one full layer period."""
+    p = _layer_period(cfg)
+    if cfg.family == "moe":
+        base = cfg.moe.first_k_dense + 1
+        return base, base + 1
+    return p, 2 * p
+
+
+def _costing_config(cfg, num_layers: int):
+    kw = dict(scan_layers=False, attn_unroll=True, num_layers=num_layers)
+    if cfg.deq.enabled:
+        kw["deq"] = dataclasses.replace(cfg.deq, unroll=True)
+    return dataclasses.replace(cfg, **kw)
+
+
+def build_cell(cfg, shape, mesh, tcfg: TrainConfig):
+    """Returns (fn, args, donate_argnums) to lower for this cell.
+
+    Donation matches production semantics: the train state and the KV/SSM
+    caches are updated in place (the output buffers alias the inputs)."""
+    ctx = make_ctx(cfg, mesh, shape)
+    specs = input_specs(cfg, shape, ctx)
+    if shape.kind == "train":
+        fn = steps.build_train_step(cfg, tcfg, ctx)
+        state = steps.train_state_structs(cfg, tcfg, ctx)
+        return fn, (state, specs["batch"]), (0,)
+    if shape.kind == "prefill":
+        fn = steps.build_prefill(cfg, ctx, max_len=shape.seq_len)
+        return fn, (steps.param_structs(cfg, ctx), specs["batch"]), ()
+    # decode
+    fn = steps.build_decode_step(cfg, ctx)
+    return fn, (steps.param_structs(cfg, ctx), specs["caches"],
+                specs["tokens"], specs["cache_index"]), (1,)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, variant: str,
+             *, deq: bool = False, grad_accum: int = 1,
+             seq_parallel: bool = False, overrides: dict | None = None) -> dict:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch, deq=deq)
+    if seq_parallel:
+        cfg = dataclasses.replace(cfg, seq_parallel=True)
+    if overrides:
+        flat = {k: v for k, v in overrides.items() if "." not in k}
+        if flat:
+            cfg = dataclasses.replace(cfg, **flat)
+        for k, v in overrides.items():
+            if "." in k:  # nested, e.g. mla.absorbed_decode=true
+                outer, inner = k.split(".", 1)
+                sub = dataclasses.replace(getattr(cfg, outer), **{inner: v})
+                cfg = dataclasses.replace(cfg, **{outer: sub})
+    skip = cell_skip_reason(cfg, shape)
+    if skip:
+        return {"skipped": skip}
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    tcfg = TrainConfig(global_batch=shape.global_batch, seq_len=shape.seq_len,
+                       grad_accum=grad_accum, zero1=True)
+
+    out: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "variant": variant, "deq": deq, "grad_accum": grad_accum,
+        "seq_parallel": seq_parallel,
+        "chips": int(mesh.devices.size),
+        "params": int(cfg.num_params()),
+        "params_active": int(cfg.num_params(active_only=True)),
+    }
+
+    if variant == "memory":
+        fn, args, donate = build_cell(cfg, shape, mesh, tcfg)
+        t0 = time.time()
+        with mesh:
+            lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+            compiled = lowered.compile()
+        ms = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        coll = collective_bytes(compiled.as_text())
+        out.update({
+            "compile_s": round(time.time() - t0, 1),
+            "memory": {
+                "temp_bytes": int(ms.temp_size_in_bytes),
+                "argument_bytes": int(ms.argument_size_in_bytes),
+                "output_bytes": int(ms.output_size_in_bytes),
+                "alias_bytes": int(ms.alias_size_in_bytes),
+                "code_bytes": int(ms.generated_code_size_in_bytes),
+            },
+            "cost_loop_counted_once": {
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes": float(ca.get("bytes accessed", 0.0)),
+            },
+            "collectives_loop_counted_once": coll,
+        })
+        return out
+
+    if variant == "cost":
+        # DEQ models are weight-tied (cost independent of num_layers). Their
+        # cost is LINEAR in the solver iteration count (the backward SHINE
+        # term is constant), so two shallow unrolled solves extrapolate
+        # exactly — a full 12-step unroll of a 6-layer hybrid unit is beyond
+        # CPU-XLA compile budgets.
+        if cfg.deq.enabled:
+            depths = (2, 4)
+        else:
+            depths = _reduced_depths(cfg)
+        runs = {}
+        for L in depths:
+            if cfg.deq.enabled:
+                ccfg = _costing_config(cfg, cfg.num_layers)
+                ccfg = dataclasses.replace(
+                    ccfg, deq=dataclasses.replace(ccfg.deq, max_steps=L,
+                                                  unroll=True))
+            else:
+                ccfg = _costing_config(cfg, L)
+            fn, args, donate = build_cell(ccfg, shape, mesh, tcfg)
+            t0 = time.time()
+            with mesh:
+                lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+                compiled = lowered.compile()
+            ca = compiled.cost_analysis() or {}
+            coll = collective_bytes(compiled.as_text())
+            runs[L] = {
+                "compile_s": round(time.time() - t0, 1),
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes": float(ca.get("bytes accessed", 0.0)),
+                "collective_bytes": coll["bytes"]["total"],
+                "collective_counts": coll["counts"],
+            }
+        L_full = cfg.deq.max_steps if cfg.deq.enabled else cfg.num_layers
+        extra = {}
+        if len(depths) == 1:
+            for key in ("flops", "bytes", "collective_bytes"):
+                extra[key] = runs[depths[0]][key]
+        else:
+            L0, L1 = depths
+            p = L1 - L0
+            for key in ("flops", "bytes", "collective_bytes"):
+                delta = (runs[L1][key] - runs[L0][key]) / p
+                extra[key] = runs[L0][key] + (L_full - L0) * delta
+                extra[key + "_per_layer"] = delta
+        out.update({"depths": {str(k): v for k, v in runs.items()},
+                    "extrapolated": extra, "num_layers": L_full,
+                    "extrapolation_axis": "solver_steps" if cfg.deq.enabled
+                    else "layers"})
+        return out
+
+    raise ValueError(variant)
+
+
+# ---------------------------------------------------------------------------
+# orchestration
+# ---------------------------------------------------------------------------
+
+
+def cell_path(arch, shape, mesh_kind, variant, deq, tag="") -> Path:
+    name = f"{arch}__{shape}__{mesh_kind}__{variant}"
+    if deq:
+        name += "__deq"
+    if tag:
+        name += f"__{tag}"
+    return RESULTS_DIR / f"{name}.json"
+
+
+def all_cells(include_deq_archs=("minicpm-2b", "deepseek-moe-16b", "zamba2-2.7b")):
+    """The full baseline matrix: memory on both meshes + cost on single."""
+    jobs = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            jobs.append((arch, shape, "single", "memory", False))
+            jobs.append((arch, shape, "multi", "memory", False))
+            jobs.append((arch, shape, "single", "cost", False))
+    for arch in include_deq_archs:
+        jobs.append((arch, "train_4k", "single", "memory", True))
+        jobs.append((arch, "train_4k", "single", "cost", True))
+        jobs.append((arch, "train_4k", "multi", "memory", True))
+    return jobs
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--variant", choices=("memory", "cost"), default="memory")
+    ap.add_argument("--deq", action="store_true",
+                    help="dry-run the DEQ/SHINE (paper technique) model form")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (int/float/bool/str)")
+    ap.add_argument("--tag", default="", help="suffix for the result file")
+    ap.add_argument("--all", action="store_true",
+                    help="run every baseline cell in subprocesses (resumable)")
+    ap.add_argument("--timeout", type=int, default=1800)
+    args = ap.parse_args()
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        jobs = all_cells()
+        todo = [j for j in jobs if not cell_path(*j).exists()]
+        print(f"dryrun --all: {len(jobs)} cells, {len(todo)} to run")
+        failures = []
+        for i, (arch, shape, mesh_kind, variant, deq) in enumerate(todo):
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh_kind,
+                   "--variant", variant] + (["--deq"] if deq else [])
+            t0 = time.time()
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout)
+            status = "ok" if r.returncode == 0 else "FAIL"
+            print(f"[{i+1}/{len(todo)}] {arch} {shape} {mesh_kind} {variant}"
+                  f"{' deq' if deq else ''}: {status} ({time.time()-t0:.0f}s)",
+                  flush=True)
+            if r.returncode != 0:
+                failures.append((arch, shape, mesh_kind, variant, deq))
+                err = cell_path(arch, shape, mesh_kind, variant, deq)
+                err.with_suffix(".err").write_text(r.stdout[-4000:] + r.stderr[-8000:])
+        print(f"done; {len(failures)} failures")
+        return 1 if failures else 0
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if v in ("true", "false"):
+            v = v == "true"
+        else:
+            for cast in (int, float):
+                try:
+                    v = cast(v)
+                    break
+                except ValueError:
+                    continue
+        overrides[k] = v
+
+    res = run_cell(args.arch, args.shape, args.mesh, args.variant,
+                   deq=args.deq, grad_accum=args.grad_accum,
+                   seq_parallel=args.seq_parallel, overrides=overrides or None)
+    path = cell_path(args.arch, args.shape, args.mesh, args.variant, args.deq,
+                     args.tag)
+    path.write_text(json.dumps(res, indent=2))
+    print(json.dumps(res, indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,204 @@
+"""Jit-able step builders shared by the trainer, server and dry-run.
+
+Everything the dry-run lowers at production shapes is built here, so the
+launched training/serving steps and the dry-run/roofline artifacts are the
+same functions by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import lm
+from repro.optim.optimizers import (
+    OptState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    make_schedule,
+    sgdm_update,
+)
+from repro.parallel.sharding import (
+    ShardCtx,
+    named_sharding_tree,
+    spec_tree,
+    zero1_spec_tree,
+)
+
+Pytree = Any
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: Pytree
+    opt: OptState
+
+
+# ---------------------------------------------------------------------------
+# shardings / structs
+# ---------------------------------------------------------------------------
+
+
+def param_shardings(cfg: ModelConfig, ctx: ShardCtx):
+    decl = lm.model_decl(cfg)
+    if ctx.mesh is None:
+        return jax.tree_util.tree_map(
+            lambda d: None, decl, is_leaf=lambda x: hasattr(x, "axes"))
+    return named_sharding_tree(spec_tree(decl, ctx.rules), ctx.mesh)
+
+
+def param_structs(cfg: ModelConfig, ctx: ShardCtx) -> Pytree:
+    """ShapeDtypeStruct tree (with shardings) for the parameter pytree."""
+    decl = lm.model_decl(cfg)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    shard = param_shardings(cfg, ctx)
+    return jax.tree_util.tree_map(
+        lambda d, s: jax.ShapeDtypeStruct(d.shape, dt, sharding=s),
+        decl, shard, is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "init"))
+
+
+def state_shardings(cfg: ModelConfig, tcfg: TrainConfig, ctx: ShardCtx):
+    """TrainState sharding tree: params TP-sharded/DP-replicated; moments
+    additionally sharded over "data" when ZeRO-1 is on."""
+    if ctx.mesh is None:
+        return None
+    decl = lm.model_decl(cfg)
+    pshard = named_sharding_tree(spec_tree(decl, ctx.rules), ctx.mesh)
+    zsize = ctx.mesh.shape.get("data", 0) if ctx.mesh is not None else 0
+    ospec = zero1_spec_tree(decl, ctx.rules, zero_size=zsize) if tcfg.zero1 \
+        else spec_tree(decl, ctx.rules)
+    oshard = named_sharding_tree(ospec, ctx.mesh)
+    scalar = NamedSharding(ctx.mesh, P())
+    return TrainState(
+        step=scalar,
+        params=pshard,
+        opt=OptState(step=scalar, mu=oshard,
+                     nu=jax.tree_util.tree_map(lambda s: s, oshard)),
+    )
+
+
+def train_state_structs(cfg: ModelConfig, tcfg: TrainConfig, ctx: ShardCtx) -> TrainState:
+    """ShapeDtypeStruct TrainState (no allocation) for lowering."""
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    decl = lm.model_decl(cfg)
+    shard = state_shardings(cfg, tcfg, ctx)
+
+    def sds(d, s, dtype):
+        return jax.ShapeDtypeStruct(d.shape, dtype, sharding=s)
+
+    is_decl = lambda x: hasattr(x, "axes") and hasattr(x, "init")
+    if shard is None:
+        none = jax.tree_util.tree_map(lambda d: None, decl, is_leaf=is_decl)
+        shard = TrainState(None, none,
+                           OptState(None, none, jax.tree_util.tree_map(lambda s: s, none)))
+    params = jax.tree_util.tree_map(lambda d, s: sds(d, s, dt), decl, shard.params,
+                                    is_leaf=is_decl)
+    mu = jax.tree_util.tree_map(lambda d, s: sds(d, s, jnp.float32), decl, shard.opt.mu,
+                                is_leaf=is_decl)
+    nu = jax.tree_util.tree_map(lambda d, s: sds(d, s, jnp.float32), decl, shard.opt.nu,
+                                is_leaf=is_decl)
+    scalar = lambda dtype: jax.ShapeDtypeStruct(
+        (), dtype, sharding=(shard.step if shard.step is not None else None))
+    return TrainState(scalar(jnp.int32), params,
+                      OptState(scalar(jnp.int32), mu, nu))
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    ctx: ShardCtx,
+    *,
+    loss_fn: Callable | None = None,
+) -> Callable:
+    """(state, batch) -> (state, metrics): grads (+accumulation) -> clip ->
+    AdamW/SGDM with the tcfg schedule. The canonical production train step."""
+    loss_fn = loss_fn or (lambda p, b: lm.loss_fn(p, b, cfg, ctx, z_loss=tcfg.z_loss))
+    sched = make_schedule(tcfg)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    def train_step(state: TrainState, batch: dict):
+        params = state.params
+        if tcfg.grad_accum > 1:
+            k = tcfg.grad_accum
+
+            def micro(b, i):
+                return jax.tree_util.tree_map(
+                    lambda a: a.reshape((k, a.shape[0] // k) + a.shape[1:])[i], b
+                )
+
+            def acc_fn(carry, i):
+                gacc, laux = carry
+                (l, _aux), g = grads_of(params, micro(batch, i))
+                gacc = jax.tree_util.tree_map(jnp.add, gacc, g)
+                return (gacc, laux + l), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(
+                acc_fn, (zeros, jnp.float32(0.0)), jnp.arange(k)
+            )
+            grads = jax.tree_util.tree_map(lambda g: g / k, gsum)
+            loss, aux = lsum / k, {}
+        else:
+            (loss, aux), grads = grads_of(params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, tcfg.clip_norm)
+        lr = sched(state.step)
+        if tcfg.optimizer == "sgdm":
+            new_params, opt = sgdm_update(
+                grads, state.opt, params, lr, weight_decay=tcfg.weight_decay)
+        else:
+            new_params, opt = adamw_update(
+                grads, state.opt, params, lr, weight_decay=tcfg.weight_decay)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        if isinstance(aux, dict):
+            metrics.update({k: v for k, v in aux.items() if jnp.ndim(v) == 0})
+        return TrainState(state.step + 1, new_params, opt), metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, ctx: ShardCtx,
+                     seed: int | None = None) -> TrainState:
+    seed = tcfg.seed if seed is None else seed
+
+    def init(key):
+        params = lm.init_params(cfg, key)
+        return TrainState(jnp.zeros((), jnp.int32), params, adamw_init(params))
+
+    key = jax.random.PRNGKey(seed)
+    shard = state_shardings(cfg, tcfg, ctx)
+    if shard is not None:
+        return jax.jit(init, out_shardings=shard)(key)
+    return jax.jit(init)(key)
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+
+
+def build_prefill(cfg: ModelConfig, ctx: ShardCtx, max_len: int) -> Callable:
+    def prefill_step(params, batch):
+        return lm.prefill(params, batch, cfg, ctx, max_len)
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig, ctx: ShardCtx) -> Callable:
+    def decode_step(params, caches, tokens, cache_index):
+        return lm.decode_step(params, caches, tokens, cache_index, cfg, ctx)
+    return decode_step

@@ -1,0 +1,78 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs the Trainer (checkpoint/restart, preemption handling, straggler
+watchdog) on any assigned architecture — full config, a reduced ``--smoke``
+config, or the DEQ/SHINE form of it (``--deq``). On this CPU container use
+``--smoke``; the full configs are the multi-pod dry-run's job.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import ARCHS, get_config, smoke_config
+from repro.configs.shapes import SHAPES, make_ctx
+from repro.data.pipeline import make_lm_batch_iterator
+from repro.launch.mesh import make_production_mesh
+from repro.parallel.sharding import ShardCtx
+from repro.runtime.trainer import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default="minicpm-2b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--deq", action="store_true",
+                    help="DEQ/SHINE form: weight-tied fixed-point backbone")
+    ap.add_argument("--backward", default=None,
+                    help="DEQ backward mode: full|shine|jfb|shine_fallback|"
+                         "shine_refine|jfb_refine")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--mesh", choices=("none", "single", "multi"), default="none")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch, deq=args.deq) if args.smoke \
+        else get_config(args.arch, deq=args.deq)
+    if args.deq and args.backward:
+        cfg = dataclasses.replace(
+            cfg, deq=dataclasses.replace(cfg.deq, backward=args.backward))
+
+    if args.mesh == "none":
+        ctx = ShardCtx.for_mesh(None)
+    else:
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+        ctx = make_ctx(cfg, mesh, SHAPES["train_4k"])
+
+    tcfg = TrainConfig(
+        steps=args.steps, global_batch=args.batch, seq_len=args.seq,
+        lr=args.lr, grad_accum=args.grad_accum, seed=args.seed,
+        schedule=cfg.schedule,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+        zero1=(ctx.mesh is not None),
+    )
+
+    print(f"arch={cfg.name} params={cfg.num_params()/1e6:.1f}M "
+          f"deq={cfg.deq.enabled} devices={jax.device_count()}")
+    trainer = Trainer(cfg, tcfg, ctx)
+    batches = make_lm_batch_iterator(cfg, ctx, args.batch, args.seq,
+                                     seed=args.seed)
+    state = trainer.run(batches, steps=args.steps)
+    batches.close()
+    print(f"finished at step {int(state.step)}")
+
+
+if __name__ == "__main__":
+    main()

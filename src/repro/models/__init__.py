@@ -1,0 +1,2 @@
+"""Model zoo substrate: attention (GQA/MLA), MoE, Mamba2, xLSTM, transformer
+stacks (explicit or DEQ/fixed-point mode), LM heads, MDEQ convnet."""

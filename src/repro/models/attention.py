@@ -1,0 +1,237 @@
+"""Attention variants: GQA (+RoPE, KV cache) and DeepSeek-V2 MLA.
+
+Sharding: q heads on "model" (GSPMD pads when num_heads % tp != 0, e.g.
+minicpm's 36 heads); KV heads shard on "model" only when divisible —
+otherwise the per-arch rules replicate them (internlm2/pixtral kv=8 on
+tp=16). The KV-cache sequence axis picks up the "kv_seq" rule, which the
+long-context shape suite maps to the DP axes (context parallelism).
+
+MLA has two decode paths: the naive one reconstructs K/V from the cached
+low-rank ``c_kv`` every step; the *absorbed* variant (cfg.mla.absorbed_decode)
+folds W_uk into the query and W_uv after the attention, attending directly in
+the 512-dim latent space — the paper-beyond perf iteration for decode cells.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kernel_ops
+from repro.models.layers import apply_rope
+from repro.parallel.sharding import ParamDecl, ShardCtx
+
+Array = jax.Array
+
+
+class KVCache(NamedTuple):
+    k: Array  # (B, T, KV, hd)  or MLA: c_kv (B, T, rank)
+    v: Array  # (B, T, KV, hd)  or MLA: k_pe (B, T, rope_dim)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def gqa_decl(cfg: ModelConfig) -> dict:
+    d, ad, kvd = cfg.d_model, cfg.attn_dim, cfg.kv_dim
+    return {
+        "wq": ParamDecl((d, ad), ("embed", "heads")),
+        "wk": ParamDecl((d, kvd), ("embed", "kv")),
+        "wv": ParamDecl((d, kvd), ("embed", "kv")),
+        "wo": ParamDecl((ad, d), ("heads", "embed")),
+    }
+
+
+def _split_heads(x: Array, n: int) -> Array:
+    return x.reshape(x.shape[:-1] + (n, x.shape[-1] // n))
+
+
+def gqa_attention(
+    params: dict,
+    x: Array,                      # (B, S, d)
+    cfg: ModelConfig,
+    ctx: ShardCtx,
+    positions: Array,              # (B, S)
+    cache: KVCache | None = None,  # decode: fixed-capacity cache
+    cache_index: Array | None = None,  # (B,) write position per sample
+) -> tuple[Array, KVCache | None]:
+    dt = x.dtype
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    q = _split_heads(jnp.einsum("bsd,de->bse", x, params["wq"].astype(dt)), h)
+    k = _split_heads(jnp.einsum("bsd,de->bse", x, params["wk"].astype(dt)), kv)
+    v = _split_heads(jnp.einsum("bsd,de->bse", x, params["wv"].astype(dt)), kv)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = ctx.constrain(q, ("batch", "seq", "heads_act", None))
+    k = ctx.constrain(k, ("batch", "seq", "kv_heads_act", None))
+
+    attn_kw = dict(impl=cfg.attn_impl if cfg.attn_impl != "auto" else None,
+                   block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv,
+                   unroll=cfg.attn_unroll)
+    new_cache = None
+    if cache is None:
+        out = kernel_ops.attention(q, k, v, causal=cfg.causal, **attn_kw)
+    else:
+        # write this step's k/v at per-sample cache_index, then attend over
+        # the valid prefix (cache_index + s_new)
+        def write(c, new):
+            def one(cb, nb, ib):
+                return jax.lax.dynamic_update_slice(cb, nb, (ib,) + (0,) * (cb.ndim - 1))
+            return jax.vmap(one)(c, new, cache_index)
+
+        k_all = write(cache.k, k.astype(cache.k.dtype))
+        v_all = write(cache.v, v.astype(cache.v.dtype))
+        k_all = ctx.constrain(k_all, ("batch", "kv_seq", "kv_heads_act", None))
+        v_all = ctx.constrain(v_all, ("batch", "kv_seq", "kv_heads_act", None))
+        new_cache = KVCache(k_all, v_all)
+        kv_len = cache_index + x.shape[1]
+        if x.shape[1] == 1:
+            out = kernel_ops.decode_attention(q[:, 0], k_all, v_all, kv_len)[:, None]
+        else:
+            # prefill: sequences start at cache index 0; attend causally over
+            # the PRE-write k/v (numerically the written [0, S) prefix, but
+            # still seq-replicated/head-sharded — reading the cache back
+            # would all-gather the T-sharded buffer every layer).
+            out = kernel_ops.attention(q, k, v, causal=cfg.causal, **attn_kw)
+
+    out = ctx.constrain(out, ("batch", "seq", "heads_act", None))
+    out = out.reshape(out.shape[:2] + (h * hd,))
+    proj = jnp.einsum("bse,ed->bsd", out, params["wo"].astype(dt))
+    return ctx.constrain(proj, ("batch", "seq_res", "embed_act")), new_cache
+
+
+def gqa_cache_shape(cfg: ModelConfig, batch: int, max_len: int) -> KVCache:
+    shape = (batch, max_len, cfg.num_kv_heads, cfg.head_dim_)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return KVCache(jnp.zeros(shape, dt), jnp.zeros(shape, dt))
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 family)
+# ---------------------------------------------------------------------------
+
+
+def mla_decl(cfg: ModelConfig) -> dict:
+    d, h, m = cfg.d_model, cfg.num_heads, cfg.mla
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "wq": ParamDecl((d, h * qk), ("embed", "heads")),
+        "w_dkv": ParamDecl((d, m.kv_lora_rank + m.qk_rope_dim), ("embed", "lora")),
+        "kv_norm": ParamDecl((m.kv_lora_rank,), ("lora",), init="ones"),
+        "w_uk": ParamDecl((m.kv_lora_rank, h * m.qk_nope_dim), ("lora", "heads")),
+        "w_uv": ParamDecl((m.kv_lora_rank, h * m.v_head_dim), ("lora", "heads")),
+        "wo": ParamDecl((h * m.v_head_dim, d), ("heads", "embed")),
+    }
+
+
+def _mla_compress(params, x, cfg, positions):
+    """x -> (c_kv normalized, k_pe with rope): the cached quantities."""
+    m = cfg.mla
+    dkv = jnp.einsum("bsd,de->bse", x, params["w_dkv"].astype(x.dtype))
+    c_kv, k_pe = dkv[..., : m.kv_lora_rank], dkv[..., m.kv_lora_rank:]
+    c_kv = kernel_ops.rmsnorm(c_kv, params["kv_norm"], cfg.norm_eps)
+    k_pe = apply_rope(k_pe[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_pe
+
+
+def mla_attention(
+    params: dict,
+    x: Array,
+    cfg: ModelConfig,
+    ctx: ShardCtx,
+    positions: Array,
+    cache: KVCache | None = None,
+    cache_index: Array | None = None,
+) -> tuple[Array, KVCache | None]:
+    dt = x.dtype
+    h, m = cfg.num_heads, cfg.mla
+    qk = m.qk_nope_dim + m.qk_rope_dim
+
+    q = _split_heads(jnp.einsum("bsd,de->bse", x, params["wq"].astype(dt)), h)
+    q_nope, q_pe = q[..., : m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    q_nope = ctx.constrain(q_nope, ("batch", "seq", "heads_act", None))
+
+    c_kv, k_pe = _mla_compress(params, x, cfg, positions)
+
+    new_cache = None
+    is_prefill = cache is not None and x.shape[1] > 1
+    if cache is not None:
+        def write(c, new):
+            def one(cb, nb, ib):
+                return jax.lax.dynamic_update_slice(cb, nb, (ib,) + (0,) * (cb.ndim - 1))
+            return jax.vmap(one)(c, new, cache_index)
+
+        c_kv_all = write(cache.k, c_kv.astype(cache.k.dtype))
+        k_pe_all = write(cache.v, k_pe.astype(cache.v.dtype))
+        c_kv_all = ctx.constrain(c_kv_all, ("batch", "kv_seq", "lora"))
+        new_cache = KVCache(c_kv_all, k_pe_all)
+        kv_len = cache_index + x.shape[1]
+        if not is_prefill:
+            # decode reads the (T-sharded) cache; prefill keeps the local
+            # pre-write latents (seq-replicated) for the attention itself.
+            c_kv, k_pe = c_kv_all, k_pe_all
+    else:
+        kv_len = None
+
+    if m.absorbed_decode and cache is not None and not is_prefill:
+        # ---- absorbed path: attend in the 512-dim latent space ----
+        w_uk = params["w_uk"].astype(dt).reshape(m.kv_lora_rank, h, m.qk_nope_dim)
+        q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)   # (B,S,H,rank)
+        scale = qk ** -0.5
+        s_lat = jnp.einsum("bshr,btr->bhst", q_lat, c_kv.astype(dt))
+        s_pe = jnp.einsum("bshp,btp->bhst", q_pe, k_pe.astype(dt))
+        logits = (s_lat + s_pe).astype(jnp.float32) * scale
+        tpos = jnp.arange(c_kv.shape[1])[None, None, None, :]
+        mask = tpos < kv_len[:, None, None, None]
+        logits = jnp.where(mask, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(dt)
+        o_lat = jnp.einsum("bhst,btr->bshr", probs, c_kv.astype(dt))
+        w_uv = params["w_uv"].astype(dt).reshape(m.kv_lora_rank, h, m.v_head_dim)
+        out = jnp.einsum("bshr,rhv->bshv", o_lat, w_uv)
+    else:
+        # ---- naive path: reconstruct per-head K/V ----
+        k_nope = _split_heads(
+            jnp.einsum("btr,re->bte", c_kv.astype(dt), params["w_uk"].astype(dt)), h
+        )
+        v = _split_heads(
+            jnp.einsum("btr,re->bte", c_kv.astype(dt), params["w_uv"].astype(dt)), h
+        )
+        k_pe_b = jnp.broadcast_to(
+            k_pe.astype(dt)[:, :, None, :], k_nope.shape[:3] + (m.qk_rope_dim,)
+        )
+        k_full = jnp.concatenate([k_nope, k_pe_b], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+        # pad v to qk dim so the fused kernel path stays square; sliced below.
+        v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk - m.v_head_dim)))
+        s = x.shape[1]
+        attn_kw = dict(impl=cfg.attn_impl if cfg.attn_impl != "auto" else None,
+                       block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv,
+                       unroll=cfg.attn_unroll)
+        if cache is None or is_prefill:
+            # prefill: c_kv/k_pe are the local pre-write latents (len S)
+            out = kernel_ops.attention(q_full, k_full, v_pad, causal=cfg.causal,
+                                       **attn_kw)
+        else:
+            out = kernel_ops.decode_attention(
+                q_full[:, 0], k_full, v_pad, kv_len
+            )[:, None]
+        out = out[..., : m.v_head_dim]
+
+    out = out.reshape(out.shape[:2] + (h * m.v_head_dim,))
+    proj = jnp.einsum("bse,ed->bsd", out, params["wo"].astype(dt))
+    return ctx.constrain(proj, ("batch", "seq_res", "embed_act")), new_cache
+
+
+def mla_cache_shape(cfg: ModelConfig, batch: int, max_len: int) -> KVCache:
+    m = cfg.mla
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return KVCache(
+        jnp.zeros((batch, max_len, m.kv_lora_rank), dt),
+        jnp.zeros((batch, max_len, m.qk_rope_dim), dt),
+    )

@@ -1,0 +1,132 @@
+"""Shared layers: norms, MLPs, rotary embeddings, embedding tables."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kernel_ops
+from repro.parallel.sharding import ParamDecl, ShardCtx
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_decl(dim: int) -> dict:
+    return {"scale": ParamDecl((dim,), ("embed",), init="ones")}
+
+
+def rmsnorm(params: dict, x: Array, eps: float = 1e-5) -> Array:
+    return kernel_ops.rmsnorm(x, params["scale"], eps)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_decl(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act == "silu":
+        return {
+            "wi_g": ParamDecl((d, ff), ("embed", "mlp")),
+            "wi_u": ParamDecl((d, ff), ("embed", "mlp")),
+            "wo": ParamDecl((ff, d), ("mlp", "embed")),
+        }
+    return {
+        "wi": ParamDecl((d, ff), ("embed", "mlp")),
+        "wo": ParamDecl((ff, d), ("mlp", "embed")),
+    }
+
+
+def mlp(params: dict, x: Array, cfg: ModelConfig, ctx: ShardCtx) -> Array:
+    dt = x.dtype
+    if "wi_g" in params:
+        g = jnp.einsum("...d,df->...f", x, params["wi_g"].astype(dt))
+        u = jnp.einsum("...d,df->...f", x, params["wi_u"].astype(dt))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, params["wi"].astype(dt)))
+    h = ctx.constrain(h, ("batch", "seq", "mlp_act"))
+    out = jnp.einsum("...f,fd->...d", h, params["wo"].astype(dt))
+    return ctx.constrain(out, ("batch", "seq_res", "embed_act"))
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (llama convention: rotate pairs)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, hd); positions: (B, S) absolute positions.
+
+    The rotation ANGLES are computed in f32 (long-context phase accuracy)
+    but the rotation itself runs in the activation dtype: promoting the
+    whole tensor to f32 materializes (and, under SP, all-gathers) a 2x
+    copy of q/k every layer — EXPERIMENTS.md §Perf A5."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                     # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def embed_decl(cfg: ModelConfig) -> dict:
+    d = {"embedding": ParamDecl((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+                                init="normal", scale=0.02)}
+    if not cfg.tie_embeddings:
+        d["lm_head"] = ParamDecl((cfg.d_model, cfg.padded_vocab), ("embed", "vocab"))
+    return d
+
+
+def embed_tokens(params: dict, tokens: Array, cfg: ModelConfig, ctx: ShardCtx) -> Array:
+    x = params["embedding"].astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)[tokens]
+    return ctx.constrain(x, ("batch", "seq", "embed_act"))
+
+
+def lm_logits(params: dict, x: Array, cfg: ModelConfig, ctx: ShardCtx) -> Array:
+    if cfg.tie_embeddings:
+        w = params["embedding"].astype(x.dtype).T
+    else:
+        w = params["lm_head"].astype(x.dtype)
+    logits = jnp.einsum("...d,dv->...v", x, w)
+    if cfg.logits_softcap:
+        logits = cfg.logits_softcap * jnp.tanh(logits / cfg.logits_softcap)
+    return ctx.constrain(logits, ("batch", "seq", "vocab_act"))
+
+
+def cross_entropy(
+    logits: Array,          # (B, S, V) any float dtype
+    targets: Array,         # (B, S) int32; -1 = ignore
+    z_loss: float = 0.0,
+) -> tuple[Array, dict]:
+    """Stable CE in f32 with optional z-loss; ignores negative targets and
+    padded-vocab ids."""
+    logits = logits.astype(jnp.float32)
+    mask = (targets >= 0).astype(jnp.float32)
+    safe_t = jnp.maximum(targets, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe_t[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / denom
+    zl = jnp.sum((lse**2) * mask) / denom
+    metrics = {"nll": loss, "z": zl, "tokens": denom}
+    return loss + z_loss * zl, metrics

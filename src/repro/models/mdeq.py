@@ -1,0 +1,167 @@
+"""Multiscale DEQ (Bai et al. 2020) — the paper's CIFAR/ImageNet model.
+
+Two-scale residual conv trunk solved to a fixed point; the multiscale state
+(z1, z2) is packed into one flat (B, D) vector for the quasi-Newton solver
+(core.deq.pack_state). Classification head: per-scale pooling + linear.
+
+This is the exact experimental vehicle of paper §3.2 / Tables E.2-E.3,
+scaled to this container (DESIGN.md §8): same solver (limited-memory
+Broyden), same backward modes (full / SHINE / JFB / fallback / refine-k).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.mdeq_cifar import MDEQConfig
+from repro.core.deq import DEQConfig, DEQStats, deq_fixed_point, pack_state
+from repro.parallel.sharding import ParamDecl, init_tree
+
+Array = jax.Array
+
+
+def _conv_decl(cin: int, cout: int, k: int = 3) -> ParamDecl:
+    return ParamDecl((k, k, cin, cout), (None, None, None, None))
+
+
+def _gn_decl(c: int) -> dict:
+    return {"scale": ParamDecl((c,), (None,), init="ones"),
+            "bias": ParamDecl((c,), (None,), init="zeros")}
+
+
+def mdeq_decl(cfg: MDEQConfig) -> dict:
+    c1, c2 = cfg.channels
+    return {
+        "stem": _conv_decl(3, c1),
+        "inj2": _conv_decl(c1, c2),          # strided injection to scale 2
+        "blocks": {
+            "s1": {"conv1": _conv_decl(c1, c1), "gn1": _gn_decl(c1),
+                   "conv2": _conv_decl(c1, c1), "gn2": _gn_decl(c1)},
+            "s2": {"conv1": _conv_decl(c2, c2), "gn1": _gn_decl(c2),
+                   "conv2": _conv_decl(c2, c2), "gn2": _gn_decl(c2)},
+            "down": _conv_decl(c1, c2),      # scale1 -> scale2 (stride 2)
+            "up": _conv_decl(c2, c1, k=1),   # scale2 -> scale1 (resize)
+            "fuse_gn1": _gn_decl(c1),
+            "fuse_gn2": _gn_decl(c2),
+        },
+        "head": {
+            "gn1": _gn_decl(c1), "gn2": _gn_decl(c2),
+            "w": ParamDecl((c1 + c2, cfg.num_classes), (None, None)),
+            "b": ParamDecl((cfg.num_classes,), (None,), init="zeros"),
+        },
+    }
+
+
+def init_mdeq(cfg: MDEQConfig, key: jax.Array) -> dict:
+    return init_tree(mdeq_decl(cfg), key)
+
+
+def _conv(x: Array, w: Array, stride: int = 1) -> Array:
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _gn(p: dict, x: Array, groups: int) -> Array:
+    b, h, w, c = x.shape
+    g = min(groups, c)
+    while c % g:  # largest divisor of c not exceeding `groups`
+        g -= 1
+    xg = x.reshape(b, h, w, g, c // g).astype(jnp.float32)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + 1e-5)
+    return (xg.reshape(b, h, w, c) * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def _res_block(p: dict, z: Array, inj: Array, groups: int) -> Array:
+    h = _conv(z, p["conv1"]) + inj
+    h = jax.nn.relu(_gn(p["gn1"], h, groups))
+    h = _conv(h, p["conv2"])
+    return jax.nn.relu(_gn(p["gn2"], h + z, groups))
+
+
+def mdeq_f(params: dict, x_feats: tuple[Array, Array], z: tuple[Array, Array],
+           cfg: MDEQConfig) -> tuple[Array, Array]:
+    """One application of the multiscale transformation f_theta."""
+    bp = params["blocks"]
+    x1, x2 = x_feats
+    z1, z2 = z
+    u1 = _res_block(bp["s1"], z1, x1, cfg.groups)
+    u2 = _res_block(bp["s2"], z2, x2, cfg.groups)
+    # cross-scale fusion
+    down = _conv(u1, bp["down"], stride=2)
+    up = _conv(u2, bp["up"])
+    up = jax.image.resize(up, u1.shape[:1] + (u1.shape[1], u1.shape[2], up.shape[3]),
+                          "nearest")
+    z1n = jax.nn.relu(_gn(bp["fuse_gn1"], u1 + up, cfg.groups))
+    z2n = jax.nn.relu(_gn(bp["fuse_gn2"], u2 + down, cfg.groups))
+    return z1n, z2n
+
+
+def mdeq_forward(
+    params: dict, images: Array, cfg: MDEQConfig,
+    deq_cfg: DEQConfig | None = None,
+) -> tuple[Array, DEQStats]:
+    """images (B, H, W, 3) -> (logits, solver stats)."""
+    if deq_cfg is None:
+        deq_cfg = DEQConfig(
+            solver=cfg.solver, max_steps=cfg.max_steps, tol=cfg.tol,
+            memory=cfg.memory, backward=cfg.backward,
+            refine_steps=cfg.refine_steps,
+            backward_max_steps=cfg.backward_max_steps,
+        )
+    b = images.shape[0]
+    c1, c2 = cfg.channels
+    x1 = jax.nn.relu(_conv(images, params["stem"]))
+    x2 = jax.nn.relu(_conv(x1, params["inj2"], stride=2))
+
+    s1 = (b, cfg.image_size, cfg.image_size, c1)
+    s2 = (b, cfg.image_size // 2, cfg.image_size // 2, c2)
+    z0_flat, unpack = pack_state([jnp.zeros(s1, x1.dtype), jnp.zeros(s2, x1.dtype)])
+
+    def f(p, xf, zflat):
+        z1, z2 = unpack(zflat)
+        z1n, z2n = mdeq_f(p, xf, (z1, z2), cfg)
+        return pack_state([z1n, z2n])[0]
+
+    z_star, stats = deq_fixed_point(f, params, (x1, x2), z0_flat, deq_cfg)
+    z1, z2 = unpack(z_star)
+
+    h = params["head"]
+    f1 = jax.nn.relu(_gn(h["gn1"], z1, cfg.groups)).mean(axis=(1, 2))
+    f2 = jax.nn.relu(_gn(h["gn2"], z2, cfg.groups)).mean(axis=(1, 2))
+    feats = jnp.concatenate([f1, f2], axis=-1)
+    logits = feats @ h["w"] + h["b"]
+    return logits, stats
+
+
+def mdeq_loss(params: dict, batch: dict, cfg: MDEQConfig,
+              deq_cfg: DEQConfig | None = None):
+    logits, stats = mdeq_forward(params, batch["images"], cfg, deq_cfg)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return nll, {"loss": nll, "acc": acc,
+                 "deq_residual": jnp.mean(stats.residual),
+                 "deq_steps": stats.n_steps}
+
+
+def synthetic_cifar(n: int, cfg: MDEQConfig, seed: int = 0):
+    """Deterministic CIFAR-shaped dataset with learnable class structure."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    protos = rng.normal(size=(cfg.num_classes, cfg.image_size, cfg.image_size, 3))
+    labels = rng.integers(0, cfg.num_classes, n)
+    images = 0.6 * protos[labels] + 0.8 * rng.normal(
+        size=(n, cfg.image_size, cfg.image_size, 3)
+    )
+    return (jnp.asarray(images, jnp.float32),
+            jnp.asarray(labels, jnp.int32))

@@ -1,0 +1,227 @@
+"""Mamba2 (SSD) blocks — Zamba2's backbone.
+
+Training/prefill uses the *chunked* SSD algorithm (intra-chunk quadratic
+attention-like term + inter-chunk linear recurrence over chunk states): this
+is the TPU-native mapping — large batched matmuls for the MXU instead of a
+length-S sequential scan — and it also makes dry-run FLOP accounting honest
+(the nc-step chunk scan unrolls in costing mode; see DESIGN.md).
+
+Sharding: heads (d_inner) on "model"; the (G, N) B/C streams are replicated
+(G=1); the SSM state (B, H, P, N) is head-sharded. The only TP collective is
+the out-projection psum, same as a dense FFN.
+
+``mamba2_scan_ref`` is the sequential oracle used by tests.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kernel_ops
+from repro.parallel.sharding import ParamDecl, ShardCtx
+
+Array = jax.Array
+
+
+class MambaCache(NamedTuple):
+    state: Array   # (B, H, P, N)
+    conv: Array    # (B, d_conv-1, conv_dim) rolling window
+    # no positional component: the SSM is time-invariant given the state
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, nheads, conv_dim
+
+
+def mamba2_decl(cfg: ModelConfig) -> dict:
+    s, d_in, nh, conv_dim = _dims(cfg)
+    d, gn = cfg.d_model, s.n_groups * s.d_state
+    return {
+        "w_z": ParamDecl((d, d_in), ("embed", "ssm_inner")),
+        "w_x": ParamDecl((d, d_in), ("embed", "ssm_inner")),
+        "w_B": ParamDecl((d, gn), ("embed", None)),
+        "w_C": ParamDecl((d, gn), ("embed", None)),
+        "w_dt": ParamDecl((d, nh), ("embed", "ssm_heads")),
+        "conv_x": ParamDecl((s.d_conv, d_in), ("conv", "ssm_inner"), init="normal", scale=0.5),
+        "conv_B": ParamDecl((s.d_conv, gn), ("conv", None), init="normal", scale=0.5),
+        "conv_C": ParamDecl((s.d_conv, gn), ("conv", None), init="normal", scale=0.5),
+        "A_log": ParamDecl((nh,), ("ssm_heads",), init="zeros"),
+        "D": ParamDecl((nh,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamDecl((nh,), ("ssm_heads",), init="zeros"),
+        "norm": ParamDecl((d_in,), ("ssm_inner",), init="ones"),
+        "w_out": ParamDecl((d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(u: Array, w: Array, window: Array | None = None):
+    """Depthwise causal conv over seq: u (B,S,C), w (K,C).
+
+    With ``window`` (B,K-1,C) the conv continues a stream (decode); returns
+    (out, new_window).
+    """
+    k = w.shape[0]
+    if window is None:
+        window = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    full = jnp.concatenate([window, u], axis=1)
+    out = sum(w[i] * full[:, i:i + u.shape[1]] for i in range(k))
+    new_window = full[:, -(k - 1):] if k > 1 else window
+    return jax.nn.silu(out), new_window
+
+
+def _project(params, x, cfg):
+    dt_ = x.dtype
+    z = jnp.einsum("bsd,de->bse", x, params["w_z"].astype(dt_))
+    xin = jnp.einsum("bsd,de->bse", x, params["w_x"].astype(dt_))
+    Bs = jnp.einsum("bsd,de->bse", x, params["w_B"].astype(dt_))
+    Cs = jnp.einsum("bsd,de->bse", x, params["w_C"].astype(dt_))
+    dt_raw = jnp.einsum("bsd,de->bse", x, params["w_dt"].astype(dt_))
+    return z, xin, Bs, Cs, dt_raw
+
+
+def _segsum_decay(cum: Array) -> Array:
+    """exp(cum_i - cum_j) masked to j <= i. cum: (..., Q, H) -> (..., H, Q, Q)."""
+    q = cum.shape[-2]
+    ci = jnp.swapaxes(cum, -1, -2)[..., :, None]   # (..., H, Q, 1)
+    cj = jnp.swapaxes(cum, -1, -2)[..., None, :]   # (..., H, 1, Q)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, jnp.exp(ci - cj), 0.0)
+
+
+def mamba2_block(
+    params: dict,
+    x: Array,                     # (B, S, d)
+    cfg: ModelConfig,
+    ctx: ShardCtx,
+    cache: MambaCache | None = None,
+) -> tuple[Array, MambaCache | None]:
+    s, d_in, nh, conv_dim = _dims(cfg)
+    b, seq, _ = x.shape
+    p, n = s.head_dim, s.d_state
+    dt_ = x.dtype
+
+    z, xin, Bs, Cs, dt_raw = _project(params, x, cfg)
+    xin = ctx.constrain(xin, ("batch", "seq", "ssm_inner"))
+
+    win = cache.conv if cache is not None else None
+    u = jnp.concatenate([xin, Bs, Cs], axis=-1)
+    w_conv = jnp.concatenate(
+        [params["conv_x"], params["conv_B"], params["conv_C"]], axis=-1
+    ).astype(dt_)
+    u, new_win = _causal_conv(u, w_conv, win)
+    xin, Bs, Cs = jnp.split(u, [d_in, d_in + s.n_groups * s.d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))                     # (H,)
+    xh = xin.reshape(b, seq, nh, p)
+    Bs = Bs.reshape(b, seq, s.n_groups, n).astype(jnp.float32)
+    Cs = Cs.reshape(b, seq, s.n_groups, n).astype(jnp.float32)
+    if s.n_groups == 1:
+        Bsq, Csq = Bs[:, :, 0], Cs[:, :, 0]            # (B,S,N)
+    else:
+        raise NotImplementedError("n_groups > 1")
+
+    prev_state = cache.state if cache is not None else jnp.zeros(
+        (b, nh, p, n), jnp.float32
+    )
+
+    if seq == 1:
+        # ---- decode: one recurrent step ----
+        da = jnp.exp(dt[:, 0] * A[None, :])            # (B,H)
+        inc = jnp.einsum(
+            "bh,bhp,bn->bhpn", dt[:, 0], xh[:, 0].astype(jnp.float32), Bsq[:, 0]
+        )
+        state = da[..., None, None] * prev_state + inc
+        y = jnp.einsum("bhpn,bn->bhp", state, Csq[:, 0])
+        y = y + params["D"].astype(jnp.float32)[None, :, None] * xh[:, 0].astype(jnp.float32)
+        y = y.reshape(b, 1, d_in).astype(dt_)
+        new_cache = MambaCache(state, new_win)
+    else:
+        # ---- chunked SSD ----
+        q = min(s.chunk, seq)
+        orig_seq = seq
+        if seq % q:
+            # right-pad to a chunk multiple with dt = 0 steps: decay exp(0)=1
+            # and increment dt*B*x = 0 leave the recurrent state untouched,
+            # so the final cache is exact; padded outputs are sliced off.
+            pad = q - seq % q
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Bsq = jnp.pad(Bsq, ((0, 0), (0, pad), (0, 0)))
+            Csq = jnp.pad(Csq, ((0, 0), (0, pad), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            seq = seq + pad
+        nc = seq // q
+        xc = xh.reshape(b, nc, q, nh, p).astype(jnp.float32)
+        dtc = dt.reshape(b, nc, q, nh)
+        Bc = Bsq.reshape(b, nc, q, n)
+        Cc = Csq.reshape(b, nc, q, n)
+        a = dtc * A[None, None, None, :]               # (B,nc,Q,H)
+        cum = jnp.cumsum(a, axis=2)
+
+        # intra-chunk: Y[i] = sum_{j<=i} (C_i.B_j) exp(cum_i-cum_j) dt_j x_j
+        cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)
+        L = _segsum_decay(cum)                         # (B,nc,H,Q,Q)
+        y_intra = jnp.einsum("bcij,bchij,bcjh,bcjhp->bcihp", cb, L, dtc, xc)
+
+        # chunk states: S_c = sum_j exp(cum_last-cum_j) dt_j B_j (x) x_j
+        decay_last = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,Q,H)
+        sc = jnp.einsum("bcjh,bcjh,bcjhp,bcjn->bchpn", decay_last, dtc, xc, Bc)
+
+        # inter-chunk recurrence over nc
+        chunk_decay = jnp.exp(cum[:, :, -1, :])        # (B,nc,H)
+
+        def scan_fn(h_prev, inp):
+            dec, s_c = inp                              # (B,H), (B,H,P,N)
+            h_new = dec[..., None, None] * h_prev + s_c
+            return h_new, h_prev
+
+        last_state, h_prevs = jax.lax.scan(
+            scan_fn, prev_state,
+            (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(sc, 1, 0)),
+        )
+        h_prevs = jnp.moveaxis(h_prevs, 0, 1)          # (B,nc,H,P,N)
+        y_inter = jnp.einsum(
+            "bcih,bcin,bchpn->bcihp", jnp.exp(cum), Cc, h_prevs
+        )
+        y = (y_intra + y_inter).reshape(b, seq, nh, p)
+        y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(b, seq, d_in).astype(dt_)[:, :orig_seq]
+        new_cache = MambaCache(last_state, new_win) if cache is not None else None
+
+    y = ctx.constrain(y, ("batch", "seq", "ssm_inner"))
+    y = kernel_ops.rmsnorm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(dt_))
+    return ctx.constrain(out, ("batch", "seq_res", "embed_act")), new_cache
+
+
+def mamba2_cache_shape(cfg: ModelConfig, batch: int) -> MambaCache:
+    s, d_in, nh, conv_dim = _dims(cfg)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return MambaCache(
+        state=jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+        conv=jnp.zeros((batch, s.d_conv - 1, conv_dim), dt),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sequential oracle (tests)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_scan_ref(params: dict, x: Array, cfg: ModelConfig, ctx: ShardCtx) -> Array:
+    """Step-by-step recurrence; must match mamba2_block on the same params."""
+    b, seq, _ = x.shape
+    cache = mamba2_cache_shape(cfg, b)
+    cache = MambaCache(cache.state, cache.conv.astype(x.dtype))
+    outs = []
+    for t in range(seq):
+        y, cache = mamba2_block(params, x[:, t:t + 1], cfg, ctx, cache)
+        outs.append(y)
+    return jnp.concatenate(outs, axis=1)

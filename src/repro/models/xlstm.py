@@ -1,0 +1,307 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential recurrence), at the paper's 7:1 ratio.
+
+mLSTM train/prefill runs the *chunkwise* form (stabilized log-space gates):
+within a chunk the attention-like quadratic term, across chunks a linear
+recurrence over (C, n, m) — same TPU rationale as Mamba2's SSD (matmuls for
+the MXU + honest unrolled FLOP accounting, chunk scan of length S/chunk).
+
+sLSTM has no parallel form (nonlinear recurrence through the hidden state);
+it runs as a lax.scan over time. Its FLOPs are counted analytically in the
+roofline table (scan bodies are costed once by XLA — see EXPERIMENTS.md).
+
+``mlstm_step`` is the sequential oracle for the chunked path.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import ParamDecl, ShardCtx
+
+Array = jax.Array
+
+
+class MLSTMCache(NamedTuple):
+    C: Array   # (B, H, dk, dv) matrix memory
+    n: Array   # (B, H, dk) normalizer
+    m: Array   # (B, H) stabilizer
+
+
+class SLSTMCache(NamedTuple):
+    c: Array   # (B, H, hd)
+    n: Array   # (B, H, hd)
+    h: Array   # (B, H, hd)
+    m: Array   # (B, H, hd)
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    inner = int(cfg.d_model * cfg.xlstm.mlstm_proj_factor)
+    heads = cfg.num_heads
+    return inner, heads, inner // heads
+
+
+def mlstm_decl(cfg: ModelConfig) -> dict:
+    """Per-head BLOCK-DIAGONAL q/k/v projections, as in the xLSTM paper's
+    BlockLinear (a dense (inner, inner) qkv would ~2x the published param
+    count at this width)."""
+    d = cfg.d_model
+    inner, h, hd = _mlstm_dims(cfg)
+    return {
+        "w_up": ParamDecl((d, 2 * inner), ("embed", "ssm_inner")),
+        "w_q": ParamDecl((h, hd, hd), ("ssm_heads", None, None)),
+        "w_k": ParamDecl((h, hd, hd), ("ssm_heads", None, None)),
+        "w_v": ParamDecl((h, hd, hd), ("ssm_heads", None, None)),
+        "w_i": ParamDecl((inner, h), ("ssm_inner", None), init="normal", scale=0.02),
+        "w_f": ParamDecl((inner, h), ("ssm_inner", None), init="normal", scale=0.02),
+        "f_bias": ParamDecl((h,), (None,), init="ones"),
+        "w_down": ParamDecl((inner, d), ("ssm_inner", "embed")),
+    }
+
+
+def _mlstm_qkvif(params, xm, h, hd):
+    dt = xm.dtype
+    xh = xm.reshape(xm.shape[:2] + (h, hd))            # (B, S, H, hd)
+    q = jnp.einsum("bshd,hde->bshe", xh, params["w_q"].astype(dt))
+    k = jnp.einsum("bshd,hde->bshe", xh, params["w_k"].astype(dt))
+    v = jnp.einsum("bshd,hde->bshe", xh, params["w_v"].astype(dt))
+    i_pre = jnp.einsum("bsi,ih->bsh", xm, params["w_i"].astype(dt)).astype(jnp.float32)
+    f_pre = jnp.einsum("bsi,ih->bsh", xm, params["w_f"].astype(dt)).astype(jnp.float32)
+    f_pre = f_pre + params["f_bias"].astype(jnp.float32) + 3.0  # forget-biased init
+    return q, k, v, i_pre, f_pre
+
+
+def mlstm_cell_chunked(
+    q: Array, k: Array, v: Array,        # (B, S, H, hd)
+    i_pre: Array, f_pre: Array,          # (B, S, H) pre-activations
+    cache: MLSTMCache,
+    chunk: int,
+) -> tuple[Array, MLSTMCache]:
+    """Chunkwise stabilized mLSTM. Returns (y (B,S,H,hd), new cache)."""
+    b, seq, h, hd = q.shape
+    qf = q.astype(jnp.float32) * (hd ** -0.5)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    cq = min(chunk, seq)
+    orig_seq = seq
+    if seq % cq:
+        # right-pad to a chunk multiple with state-neutral gates: forget
+        # pre-act +inf (log-sigmoid -> 0 decay) and input pre-act -inf (zero
+        # contribution), so the final (C, n, m) cache is exact.
+        pad = cq - seq % cq
+        z4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        qf = jnp.pad(qf, z4)
+        kf = jnp.pad(kf, z4)
+        vf = jnp.pad(vf, z4)
+        i_pre = jnp.pad(i_pre, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)
+        f_pre = jnp.pad(f_pre, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=1e30)
+        seq = seq + pad
+    nc = seq // cq
+
+    def rs(x):  # (B,S,...) -> (nc, B, cq, ...)
+        return jnp.moveaxis(x.reshape(b, nc, cq, *x.shape[2:]), 1, 0)
+
+    qs, ks, vs = rs(qf), rs(kf), rs(vf)
+    is_, fs = rs(i_pre), rs(f_pre)
+
+    logf = jax.nn.log_sigmoid(fs)                      # (nc, B, cq, H)
+    cumf = jnp.cumsum(logf, axis=2)                    # inclusive
+
+    def chunk_step(carry, inp):
+        C, n, m = carry                                # (B,H,dk,dv),(B,H,dk),(B,H)
+        qc, kc, vc, ic, bc = inp                       # bc = cumf chunk (B,cq,H)
+        # intra decays: D[i,j] = b_i - b_j + i_j  (j <= i)
+        bi = bc[:, :, None, :]                         # (B,cq,1,H)
+        bj = bc[:, None, :, :]
+        Dm = bi - bj + ic[:, None, :, :]               # (B,cq,cq,H)
+        tri = jnp.tril(jnp.ones((cq, cq), bool))[None, :, :, None]
+        Dm = jnp.where(tri, Dm, -jnp.inf)
+        m_intra = jnp.max(Dm, axis=2)                  # (B,cq,H)
+        # inter decay for position i: g_i = b_i (+ m_prev)
+        g = bc + m[:, None, :]                         # (B,cq,H)
+        m_tot = jnp.maximum(m_intra, g)                # running stabilizer
+        # numerator / denominator
+        s_qk = jnp.einsum("bihd,bjhd->bijh", qc, kc)   # (B,cq,cq,H)
+        w_intra = jnp.exp(Dm - m_tot[:, :, None, :])
+        num_intra = jnp.einsum("bijh,bijh,bjhd->bihd", s_qk, w_intra, vc)
+        den_intra = jnp.einsum("bijh,bijh->bih", s_qk, w_intra)
+        w_inter = jnp.exp(g - m_tot)                   # (B,cq,H)
+        num_inter = jnp.einsum("bihd,bhde->bihe", qc, C) * w_inter[..., None]
+        den_inter = jnp.einsum("bihd,bhd->bih", qc, n) * w_inter
+        den = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_tot))
+        y = (num_intra + num_inter) / den[..., None]
+        # ---- state update to end of chunk ----
+        f_c = bc[:, -1, :]                             # (B,H) total chunk decay
+        dec_j = f_c[:, None, :] - bc + ic              # (B,cq,H) per-key decay
+        m_new = jnp.maximum(f_c + m, jnp.max(dec_j, axis=1))
+        sc_w = jnp.exp(dec_j - m_new[:, None, :])
+        C_new = (jnp.exp(f_c + m - m_new)[:, :, None, None] * C
+                 + jnp.einsum("bjh,bjhd,bjhe->bhde", sc_w, kc, vc))
+        n_new = (jnp.exp(f_c + m - m_new)[:, :, None] * n
+                 + jnp.einsum("bjh,bjhd->bhd", sc_w, kc))
+        return (C_new, n_new, m_new), y
+
+    (C, n, m), ys = jax.lax.scan(
+        chunk_step, (cache.C, cache.n, cache.m), (qs, ks, vs, is_, cumf)
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, seq, h, hd)[:, :orig_seq]
+    return y.astype(q.dtype), MLSTMCache(C, n, m)
+
+
+def mlstm_step(
+    q: Array, k: Array, v: Array,        # (B, H, hd) single step
+    i_pre: Array, f_pre: Array,          # (B, H)
+    cache: MLSTMCache,
+) -> tuple[Array, MLSTMCache]:
+    """Sequential oracle / decode step."""
+    hd = q.shape[-1]
+    qf = q.astype(jnp.float32) * (hd ** -0.5)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + cache.m, i_pre)
+    fw = jnp.exp(logf + cache.m - m_new)
+    iw = jnp.exp(i_pre - m_new)
+    C = fw[..., None, None] * cache.C + iw[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", kf, vf
+    )
+    n = fw[..., None] * cache.n + iw[..., None] * kf
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)), jnp.exp(-m_new))
+    y = num / den[..., None]
+    return y.astype(q.dtype), MLSTMCache(C, n, m_new)
+
+
+def mlstm_block(
+    params: dict,
+    x: Array,                            # (B, S, d) (already normed)
+    cfg: ModelConfig,
+    ctx: ShardCtx,
+    cache: MLSTMCache | None = None,
+) -> tuple[Array, MLSTMCache | None]:
+    inner, h, hd = _mlstm_dims(cfg)
+    dt = x.dtype
+    up = jnp.einsum("bsd,de->bse", x, params["w_up"].astype(dt))
+    up = ctx.constrain(up, ("batch", "seq", "ssm_inner"))
+    xm, zg = jnp.split(up, 2, axis=-1)
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(params, xm, h, hd)
+
+    b, seq = x.shape[:2]
+    if cache is None:
+        cache0 = mlstm_cache_shape(cfg, b)
+        y, new_cache = mlstm_cell_chunked(q, k, v, i_pre, f_pre, cache0,
+                                          cfg.xlstm.chunk)
+        new_cache = None
+    elif seq == 1:
+        y, new_cache = mlstm_step(q[:, 0], k[:, 0], v[:, 0],
+                                  i_pre[:, 0], f_pre[:, 0], cache)
+        y = y[:, None]
+    else:  # prefill
+        y, new_cache = mlstm_cell_chunked(q, k, v, i_pre, f_pre, cache,
+                                          cfg.xlstm.chunk)
+    y = y.reshape(b, seq, inner)
+    y = y * jax.nn.silu(zg)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_down"].astype(dt))
+    return ctx.constrain(out, ("batch", "seq_res", "embed_act")), new_cache
+
+
+def mlstm_cache_shape(cfg: ModelConfig, batch: int) -> MLSTMCache:
+    inner, h, hd = _mlstm_dims(cfg)
+    return MLSTMCache(
+        C=jnp.zeros((batch, h, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, h, hd), jnp.float32),
+        m=jnp.full((batch, h), -1e30, jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_decl(cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    hd = d // h
+    ffd = _slstm_ff(cfg)
+    return {
+        "w_in": ParamDecl((d, 4 * d), ("embed", "ssm_inner")),     # z,i,f,o
+        "r": ParamDecl((4, h, hd, hd), (None, "ssm_heads", None, None),
+                       init="normal", scale=0.02),
+        "bias": ParamDecl((4 * d,), ("ssm_inner",), init="zeros"),
+        "ff_g": ParamDecl((d, ffd), ("embed", "mlp")),
+        "ff_u": ParamDecl((d, ffd), ("embed", "mlp")),
+        "ff_o": ParamDecl((ffd, d), ("mlp", "embed")),
+    }
+
+
+def _slstm_ff(cfg: ModelConfig) -> int:
+    return int(round(cfg.d_model * cfg.xlstm.slstm_proj_factor / 64)) * 64
+
+
+def slstm_cell_step(params, x_t, cache: SLSTMCache, cfg: ModelConfig):
+    """One sLSTM step with exp-gating stabilization. x_t: (B, d)."""
+    d, h = cfg.d_model, cfg.num_heads
+    hd = d // h
+    b = x_t.shape[0]
+    pre = (jnp.einsum("bd,de->be", x_t, params["w_in"].astype(x_t.dtype))
+           + params["bias"].astype(x_t.dtype))
+    pre = pre.reshape(b, 4, h, hd).astype(jnp.float32)
+    rec = jnp.einsum("bhd,ghde->bghe", cache.h, params["r"].astype(jnp.float32))
+    pre = pre + rec
+    z_t = jnp.tanh(pre[:, 0])
+    i_t = pre[:, 1]
+    f_t = pre[:, 2]
+    o_t = jax.nn.sigmoid(pre[:, 3])
+    m_new = jnp.maximum(f_t + cache.m, i_t)
+    fw = jnp.exp(f_t + cache.m - m_new)
+    iw = jnp.exp(i_t - m_new)
+    c = fw * cache.c + iw * z_t
+    n = fw * cache.n + iw
+    hidden = o_t * c / jnp.maximum(n, 1e-6)
+    return hidden, SLSTMCache(c, n, hidden, m_new)
+
+
+def slstm_block(
+    params: dict,
+    x: Array,                           # (B, S, d) (already normed)
+    cfg: ModelConfig,
+    ctx: ShardCtx,
+    cache: SLSTMCache | None = None,
+) -> tuple[Array, SLSTMCache | None]:
+    b, seq, d = x.shape
+    h = cfg.num_heads
+    hd = d // h
+    ret_cache = cache is not None
+    if cache is None:
+        cache = slstm_cache_shape(cfg, b)
+
+    if seq == 1:
+        hidden, new_cache = slstm_cell_step(params, x[:, 0], cache, cfg)
+        y = hidden.reshape(b, 1, d).astype(x.dtype)
+    else:
+        def step(c, x_t):
+            hidden, c2 = slstm_cell_step(params, x_t, c, cfg)
+            return c2, hidden
+
+        new_cache, ys = jax.lax.scan(step, cache, jnp.moveaxis(x, 1, 0))
+        y = jnp.moveaxis(ys, 0, 1).reshape(b, seq, d).astype(x.dtype)
+
+    # gated feed-forward (pf 4/3)
+    g = jnp.einsum("bsd,df->bsf", y, params["ff_g"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", y, params["ff_u"].astype(x.dtype))
+    out = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(g) * u,
+                     params["ff_o"].astype(x.dtype))
+    out = ctx.constrain(out, ("batch", "seq_res", "embed_act"))
+    return out, (new_cache if ret_cache else None)
+
+
+def slstm_cache_shape(cfg: ModelConfig, batch: int) -> SLSTMCache:
+    h = cfg.num_heads
+    hd = cfg.d_model // h
+    z = jnp.zeros((batch, h, hd), jnp.float32)
+    return SLSTMCache(c=z, n=z, h=z,
+                      m=jnp.full((batch, h, hd), -1e30, jnp.float32))

@@ -1,0 +1,120 @@
+"""Gradient compression for the slow inter-pod link (DESIGN.md §4).
+
+Hierarchical compressed all-reduce: gradients are already reduced in full
+precision *within* a pod by the normal DP psum; the cross-pod hop — the
+scarce-bandwidth link at 1000+ node scale — runs int8 block-quantized
+all-gather + local dequant-sum, with an error-feedback buffer so the
+quantization noise is fed back into the next step instead of lost
+(convergence-preserving; tested in tests/test_optim.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+Pytree = Any
+
+BLOCK = 256
+
+
+class CompressionState(NamedTuple):
+    error: Pytree  # error-feedback buffers, same structure as grads
+
+
+def compression_init(grads: Pytree) -> CompressionState:
+    return CompressionState(
+        error=jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads
+        )
+    )
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-block symmetric int8 quantization. x: any shape (f32)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape: tuple) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compress_pod_gradients(
+    grads: Pytree,
+    state: CompressionState,
+    mesh: Mesh,
+    specs: Pytree | None = None,
+    axis: str = "pod",
+) -> tuple[Pytree, CompressionState]:
+    """All-reduce grads across ``axis`` in int8 with error feedback.
+
+    Call with per-pod partial gradients (i.e. psum over "data" already done,
+    NOT over "pod"). ``specs`` is the PartitionSpec tree of the gradients on
+    the *other* mesh axes (TP shards stay sharded; the quantized collective
+    only touches the pod axis). Returns fully reduced (mean) gradients.
+    """
+    npods = mesh.shape[axis]
+    if npods == 1:
+        return grads, state
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+
+        def reduce_fn(x):
+            q, s = quantize_int8(x)
+            qg = jax.lax.all_gather(q, axis)        # (npods, nb, BLOCK) int8
+            sg = jax.lax.all_gather(s, axis)
+            total = jnp.sum(qg.astype(jnp.float32) * sg, axis=0)
+            return total.reshape(-1), q, s
+
+        total, q, s = reduce_fn(gf)
+        n = 1
+        for d in g.shape:
+            n *= d
+        reduced = total[:n].reshape(g.shape) / npods
+        err = gf - dequantize_int8(q, s, g.shape)   # what this pod failed to send
+        return reduced.astype(g.dtype), err
+
+    # shard_map over the full mesh, manual only where it matters: each leaf
+    # keeps its own (e.g. TP) spec, the pod axis is reduced inside.
+    flat, treedef = jax.tree_util.tree_flatten(grads)
+    eflat = jax.tree_util.tree_leaves(state.error)
+    if specs is None:
+        sflat = [P() for _ in flat]
+    else:
+        sflat = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P) or x is None
+        )
+        sflat = [s if isinstance(s, P) else P() for s in sflat]
+
+    def mapped(*leaves):
+        n = len(leaves) // 2
+        gs, es = leaves[:n], leaves[n:]
+        outs = [one(g, e) for g, e in zip(gs, es)]
+        return tuple(o[0] for o in outs) + tuple(o[1] for o in outs)
+
+    in_specs = tuple(sflat) + tuple(sflat)
+    outs = jax.shard_map(
+        mapped, mesh=mesh, in_specs=in_specs, out_specs=in_specs,
+        check_vma=False,
+    )(*flat, *eflat)
+    n = len(flat)
+    new_g = jax.tree_util.tree_unflatten(treedef, outs[:n])
+    new_e = jax.tree_util.tree_unflatten(treedef, outs[n:])
+    return new_g, CompressionState(error=new_e)

@@ -1,0 +1,133 @@
+"""Optimizers and LR schedules (pure JAX, ZeRO-1-shardable states).
+
+AdamW keeps f32 master moments; with ZeRO-1 the moment trees are sharded over
+the "data" axis (parallel/sharding.zero1_spec) while params stay TP-sharded
+and DP-replicated — the update all-gathers nothing (moments are consumed
+where they live; XLA inserts the small reduce for the final param write).
+
+Schedules: cosine (default), WSD (warmup-stable-decay; MiniCPM's schedule),
+linear.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+Pytree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Pytree
+    nu: Pytree
+
+
+def adamw_init(params: Pytree) -> OptState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                    nu=jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def adamw_update(
+    grads: Pytree,
+    state: OptState,
+    params: Pytree,
+    lr: jax.Array,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> tuple[Pytree, OptState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * gf * gf
+        mh = m2 / c1
+        vh = v2 / c2
+        delta = mh / (jnp.sqrt(vh) + eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        if p.ndim >= 2:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat = jax.tree_util.tree_map(upd, params, grads, state.mu, state.nu)
+    new_p = jax.tree_util.tree_map(lambda t3: t3[0], flat,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t3: t3[1], flat,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda t3: t3[2], flat,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, OptState(step, new_m, new_v)
+
+
+def sgdm_update(grads, state: OptState, params, lr, *, momentum: float = 0.9,
+                weight_decay: float = 0.0):
+    step = state.step + 1
+
+    def upd(p, g, m):
+        gf = g.astype(jnp.float32)
+        if p.ndim >= 2 and weight_decay:
+            gf = gf + weight_decay * p.astype(jnp.float32)
+        m2 = momentum * m + gf
+        return (p.astype(jnp.float32) - lr * m2).astype(p.dtype), m2
+
+    flat = jax.tree_util.tree_map(upd, params, grads, state.mu)
+    new_p = jax.tree_util.tree_map(lambda t2: t2[0], flat,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t2: t2[1], flat,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, OptState(step, new_m, state.nu)
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> tuple[Pytree, jax.Array]:
+    sq = sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree_util.tree_leaves(grads)
+    )
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+def make_schedule(cfg: TrainConfig) -> Callable[[jax.Array], jax.Array]:
+    """Returns step -> lr."""
+    warm, total = cfg.warmup_steps, cfg.steps
+    base, floor = cfg.lr, cfg.lr * cfg.min_lr_ratio
+
+    def cosine(step):
+        t = jnp.clip((step - warm) / jnp.maximum(total - warm, 1), 0.0, 1.0)
+        return floor + 0.5 * (base - floor) * (1 + jnp.cos(jnp.pi * t))
+
+    def wsd(step):
+        # warmup -> stable at base -> linear decay over the last 10%
+        decay_start = int(total * 0.9)
+        t = jnp.clip((step - decay_start) / jnp.maximum(total - decay_start, 1),
+                     0.0, 1.0)
+        return base * (1 - t) + floor * t
+
+    def linear(step):
+        t = jnp.clip((step - warm) / jnp.maximum(total - warm, 1), 0.0, 1.0)
+        return base * (1 - t) + floor * t
+
+    body = {"cosine": cosine, "wsd": wsd, "linear": linear}[cfg.schedule]
+
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm_lr = base * jnp.minimum(1.0, (step + 1) / jnp.maximum(warm, 1))
+        return jnp.where(step < warm, warm_lr, body(step))
+
+    return sched

@@ -1,0 +1,25 @@
+from repro.parallel.sharding import (
+    ParamDecl,
+    ShardCtx,
+    ShardingRules,
+    TRAIN_RULES,
+    DECODE_RULES,
+    LONG_CONTEXT_RULES,
+    init_tree,
+    spec_tree,
+    named_sharding_tree,
+    zero1_spec,
+)
+
+__all__ = [
+    "ParamDecl",
+    "ShardCtx",
+    "ShardingRules",
+    "TRAIN_RULES",
+    "DECODE_RULES",
+    "LONG_CONTEXT_RULES",
+    "init_tree",
+    "spec_tree",
+    "named_sharding_tree",
+    "zero1_spec",
+]

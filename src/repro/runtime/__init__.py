@@ -1,0 +1,7 @@
+from repro.runtime.trainer import Trainer, TrainState
+from repro.runtime.ft import ElasticMeshManager, PreemptionGuard, StragglerWatchdog
+
+__all__ = [
+    "Trainer", "TrainState", "ElasticMeshManager", "PreemptionGuard",
+    "StragglerWatchdog",
+]

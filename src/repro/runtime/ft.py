@@ -1,0 +1,117 @@
+"""Fault-tolerance runtime: preemption, stragglers, elastic re-meshing.
+
+These are the pieces that make the 1000+ node posture real:
+
+  * PreemptionGuard — SIGTERM/SIGINT flip a flag the training loop polls;
+    the loop checkpoints and exits 0 so the scheduler requeues cleanly.
+  * StragglerWatchdog — per-host step-time EMA + z-score outlier flagging;
+    at scale the report feeds the scheduler's replace/evict decision. The
+    clock is injectable (tests simulate a slow host deterministically).
+  * ElasticMeshManager — given the devices that survive a failure, pick the
+    largest valid (data, model) grid (TP degree preserved if possible),
+    rebuild the mesh, and reshard the checkpointed state onto it
+    (checkpoint/manager.restore does the actual resharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Callable, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+class PreemptionGuard:
+    def __init__(self, signals: Sequence[int] = (signal.SIGTERM, signal.SIGINT)):
+        self._flag = False
+        self._old = {}
+        self._signals = signals
+
+    def __enter__(self):
+        for s in self._signals:
+            self._old[s] = signal.signal(s, self._handler)
+        return self
+
+    def __exit__(self, *exc):
+        for s, h in self._old.items():
+            signal.signal(s, h)
+        return False
+
+    def _handler(self, signum, frame):
+        self._flag = True
+
+    @property
+    def should_exit(self) -> bool:
+        return self._flag
+
+
+@dataclasses.dataclass
+class StragglerReport:
+    host: int
+    step_time: float
+    zscore: float
+
+
+class StragglerWatchdog:
+    """Flags hosts whose step time deviates persistently from the fleet."""
+
+    def __init__(self, n_hosts: int, *, ema: float = 0.9, threshold: float = 3.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.n_hosts = n_hosts
+        self.ema = ema
+        self.threshold = threshold
+        self.clock = clock
+        self._avg = np.zeros(n_hosts)
+        self._initialized = np.zeros(n_hosts, bool)
+
+    def record(self, host: int, step_time: float) -> None:
+        if not self._initialized[host]:
+            self._avg[host] = step_time
+            self._initialized[host] = True
+        else:
+            self._avg[host] = self.ema * self._avg[host] + (1 - self.ema) * step_time
+
+    def stragglers(self) -> list[StragglerReport]:
+        if self._initialized.sum() < 2:
+            return []
+        avgs = self._avg[self._initialized]
+        med = np.median(avgs)
+        mad = np.median(np.abs(avgs - med)) + 1e-9
+        out = []
+        for h in range(self.n_hosts):
+            if not self._initialized[h]:
+                continue
+            z = 0.6745 * (self._avg[h] - med) / mad
+            if z > self.threshold:
+                out.append(StragglerReport(h, float(self._avg[h]), float(z)))
+        return out
+
+
+class ElasticMeshManager:
+    """Re-mesh after node loss; prefers keeping the TP degree intact (changing
+    TP invalidates microbatch math less gracefully than shrinking DP)."""
+
+    def __init__(self, model_parallel: int):
+        self.tp = model_parallel
+
+    def choose_shape(self, n_devices: int) -> tuple[int, ...]:
+        tp = self.tp
+        while tp > 1 and (n_devices < tp or n_devices % tp):
+            tp //= 2
+        dp = n_devices // tp
+        # largest power-of-two DP (uneven remainders are dropped — the spares
+        # become hot standbys)
+        p = 1
+        while p * 2 <= dp:
+            p *= 2
+        return (p, tp)
+
+    def build(self, devices: Sequence[jax.Device]) -> Mesh:
+        shape = self.choose_shape(len(devices))
+        n = shape[0] * shape[1]
+        arr = np.asarray(devices[:n]).reshape(shape)
+        return Mesh(arr, ("data", "model"))

@@ -1,0 +1,99 @@
+"""Bi-level / hyperparameter-optimization tests (paper §3.1, Fig. 1-2)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bilevel import (
+    HOAGConfig,
+    hypergradient,
+    make_logreg_problem,
+    make_nlls_problem,
+    run_hoag,
+)
+from repro.core.solvers import SolverConfig, lbfgs_solve
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return make_logreg_problem(n_train=400, n_val=120, n_test=120, dim=80,
+                               seed=0)
+
+
+def _solve_inner(problem, theta, tol=1e-8, opa=False):
+    icfg = SolverConfig(max_steps=400, tol=tol, memory=60,
+                        opa_freq=(5 if opa else 0))
+    return lbfgs_solve(
+        lambda z: problem.inner_grad(z, theta), jnp.zeros((problem.dim,)),
+        icfg,
+        value_fn=lambda z: problem.inner_value(z, theta),
+        dg_dtheta=((lambda z: problem.dg_dtheta(z, theta)) if opa else None))
+
+
+def test_shine_hypergrad_matches_cg(problem):
+    """At tight inner tolerance the SHINE hypergradient must align with the
+    CG (HOAG) hypergradient — the bi-level version of Theorem 3."""
+    theta = jnp.float32(0.05)
+    res = _solve_inner(problem, theta)
+    cfgs = {m: HOAGConfig(mode=m) for m in ("full_cg", "shine", "jfb")}
+    grads = {m: float(hypergradient(problem, theta, res.z, res.memory,
+                                    cfgs[m])[0]) for m in cfgs}
+    g_true = grads["full_cg"]
+    assert np.sign(grads["shine"]) == np.sign(g_true)
+    rel_shine = abs(grads["shine"] - g_true) / (abs(g_true) + 1e-12)
+    rel_jfb = abs(grads["jfb"] - g_true) / (abs(g_true) + 1e-12)
+    assert rel_shine < 0.5
+    # SHINE's shared inverse beats the identity preconditioner here
+    assert rel_shine <= rel_jfb + 1e-6
+
+
+def test_opa_improves_inversion_in_prescribed_direction(problem):
+    """Paper Fig. 2 (right): OPA's extra secant pairs make B^-1 v closer to
+    Hess^-1 v for the prescribed v = dg/dtheta than without OPA."""
+    theta = jnp.float32(0.05)
+    res0 = _solve_inner(problem, theta, tol=1e-4)
+    res1 = _solve_inner(problem, theta, tol=1e-4, opa=True)
+    v = problem.dg_dtheta(res1.z, theta)
+    Hess = jax.hessian(lambda z: problem.inner_value(z, theta))(res1.z)
+    want = jnp.linalg.solve(Hess, v)
+
+    from repro.core.solvers import lbfgs_two_loop, _lbfgs_gamma
+
+    def err(mem):
+        got = lbfgs_two_loop(mem, v, _lbfgs_gamma(mem))
+        return float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+
+    assert err(res1.memory) < err(res0.memory) + 0.05
+
+
+@pytest.mark.parametrize("mode", ["full_cg", "shine", "shine_opa", "jfb",
+                                  "shine_refine"])
+def test_hoag_all_modes_reduce_val_loss(problem, mode):
+    cfg = HOAGConfig(mode=mode, outer_steps=6, outer_lr=0.5,
+                     inner=SolverConfig(max_steps=150, tol=1e-4, memory=30))
+    hist = run_hoag(problem, theta0=1.0, cfg=cfg)
+    assert hist[-1].val_loss < hist[0].val_loss + 1e-6
+    assert np.isfinite(hist[-1].test_loss)
+
+
+def test_shine_uses_no_backward_hvps(problem):
+    cfg = HOAGConfig(mode="shine", outer_steps=2,
+                     inner=SolverConfig(max_steps=100, tol=1e-4, memory=30))
+    hist = run_hoag(problem, theta0=0.5, cfg=cfg)
+    assert all(r.backward_hvp_calls == 0 for r in hist)
+    cfg_cg = HOAGConfig(mode="full_cg", outer_steps=2,
+                        inner=SolverConfig(max_steps=100, tol=1e-4, memory=30))
+    hist_cg = run_hoag(problem, theta0=0.5, cfg=cfg_cg)
+    assert any(r.backward_hvp_calls > 0 for r in hist_cg)
+
+
+def test_nlls_problem_trains():
+    """Paper E.2: nonconvex inner problem; SHINE still optimizes."""
+    p = make_nlls_problem(n_train=300, n_val=100, n_test=100, dim=50)
+    cfg = HOAGConfig(mode="shine", outer_steps=5, outer_lr=0.5,
+                     inner=SolverConfig(max_steps=150, tol=1e-5, memory=30))
+    hist = run_hoag(p, theta0=0.5, cfg=cfg)
+    assert hist[-1].val_loss <= hist[0].val_loss + 1e-6

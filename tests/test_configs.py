@@ -1,0 +1,88 @@
+"""Assigned-architecture configs must match the published numbers exactly."""
+
+import pytest
+
+from repro.configs.registry import ARCHS
+
+# (name, layers, d_model, heads, kv_heads, d_ff, vocab)
+ASSIGNED = [
+    ("minicpm-2b",           40, 2304, 36, 36, 5760, 122753),
+    ("phi3-mini-3.8b",       32, 3072, 32, 32, 8192, 32064),
+    ("stablelm-3b",          32, 2560, 32, 32, 6912, 50304),
+    ("internlm2-20b",        48, 6144, 48, 8, 16384, 92544),
+    ("deepseek-v2-lite-16b", 27, 2048, 16, 16, 1408, 102400),
+    ("deepseek-moe-16b",     28, 2048, 16, 16, 1408, 102400),
+    ("hubert-xlarge",        48, 1280, 16, 16, 5120, 504),
+    ("zamba2-2.7b",          54, 2560, 32, 32, 10240, 32000),
+    ("xlstm-1.3b",           48, 2048, 4, 4, 0, 50304),
+    ("pixtral-12b",          40, 5120, 32, 8, 14336, 131072),
+]
+
+
+@pytest.mark.parametrize("name,L,d,h,kv,ff,vocab", ASSIGNED)
+def test_exact_assigned_numbers(name, L, d, h, kv, ff, vocab):
+    cfg = ARCHS[name]
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    assert cfg.vocab_size == vocab
+    if cfg.family == "moe":
+        assert cfg.moe.expert_d_ff == ff
+        assert cfg.moe.top_k == 6
+        assert cfg.moe.num_experts == 64
+        assert cfg.moe.num_shared == 2
+    elif cfg.family != "ssm":
+        assert cfg.d_ff == ff
+
+
+def test_family_tags():
+    fam = {n: ARCHS[n].family for n in ARCHS}
+    assert fam["deepseek-v2-lite-16b"] == "moe"
+    assert fam["deepseek-moe-16b"] == "moe"
+    assert fam["hubert-xlarge"] == "audio"
+    assert fam["zamba2-2.7b"] == "hybrid"
+    assert fam["xlstm-1.3b"] == "ssm"
+    assert fam["pixtral-12b"] == "vlm"
+    assert ARCHS["hubert-xlarge"].causal is False  # encoder-only
+
+
+def test_special_features():
+    assert ARCHS["deepseek-v2-lite-16b"].attn_type == "mla"
+    assert ARCHS["deepseek-v2-lite-16b"].mla.kv_lora_rank == 512
+    assert ARCHS["zamba2-2.7b"].ssm.d_state == 64
+    assert ARCHS["minicpm-2b"].schedule == "wsd"
+    assert ARCHS["pixtral-12b"].num_image_tokens > 0
+
+
+# published sizes (rough):   name -> billions of params
+PUBLISHED_SIZE = {
+    "minicpm-2b": 2.7,           # MiniCPM reports 2.4B non-embedding
+    "phi3-mini-3.8b": 3.8,
+    "stablelm-3b": 2.8,
+    "internlm2-20b": 19.9,
+    "deepseek-v2-lite-16b": 15.7,
+    "deepseek-moe-16b": 16.4,
+    "hubert-xlarge": 1.0,
+    "zamba2-2.7b": 2.7,
+    # Assignment fixes 48L x d_model=2048; the xLSTM paper's own 1.3B model
+    # is 48 blocks at d=1536 (or 24 at 2048). At the ASSIGNED width the
+    # analytic count is ~2.0B — we keep the assigned config (DESIGN.md §6).
+    "xlstm-1.3b": 2.0,
+    "pixtral-12b": 12.0,
+}
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_param_counts_near_published(name):
+    got = ARCHS[name].num_params() / 1e9
+    want = PUBLISHED_SIZE[name]
+    assert 0.7 * want < got < 1.45 * want, f"{name}: {got:.2f}B vs {want}B"
+
+
+@pytest.mark.parametrize("name", ["deepseek-v2-lite-16b", "deepseek-moe-16b"])
+def test_moe_active_params_smaller(name):
+    cfg = ARCHS[name]
+    active = cfg.num_params(active_only=True)
+    total = cfg.num_params()
+    assert active < 0.35 * total  # 6-of-64 routed + shared

@@ -1,0 +1,72 @@
+"""Unit tests for the dry-run's HLO post-processing (collective accounting
+and cost extrapolation helpers) — pure text parsing, no devices needed."""
+
+import importlib
+import sys
+import types
+
+import pytest
+
+
+@pytest.fixture(scope="module")
+def dryrun():
+    """Import repro.launch.dryrun WITHOUT letting its XLA_FLAGS line poison
+    this process (jax is already initialized single-device here)."""
+    import os
+    before = os.environ.get("XLA_FLAGS")
+    mod = importlib.import_module("repro.launch.dryrun")
+    # restore whatever was set; jax device count is already locked anyway
+    if before is None:
+        os.environ.pop("XLA_FLAGS", None)
+    else:
+        os.environ["XLA_FLAGS"] = before
+    return mod
+
+
+HLO = """
+HloModule jit_step
+
+%fused (param_0: f32[16,128]) -> f32[16,128] {
+  %all-reduce.1 = f32[16,128]{1,0} all-reduce(%param_0), channel_id=1, replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  ROOT %r = f32[16,128]{1,0} copy(%all-reduce.1)
+}
+
+%main {
+  %ag = bf16[64,256]{1,0} all-gather(%x), channel_id=2, replica_groups=[2,4]<=[8], dimensions={0}
+  %rs = f32[8,128]{1,0} reduce-scatter(%y), channel_id=3, replica_groups={{0,1,2,3}}, dimensions={0}, to_apply=%add
+  %cp = bf16[32]{0} collective-permute(%z), source_target_pairs={{0,1},{1,0}}
+  %tup = (f32[128]{0}, f32[64]{0}) all-reduce(%a, %b), replica_groups={{0,1}}, to_apply=%add
+}
+"""
+
+
+def test_collective_bytes_parsing(dryrun):
+    out = dryrun.collective_bytes(HLO)
+    b = out["bytes"]
+    # all-reduce f32[16,128] in groups of 4: 2 * 8192B * 3/4 = 12288
+    # tuple all-reduce f32[128]+f32[64] groups of 2: 2 * 768 * 1/2 = 768
+    assert b["all-reduce"] == pytest.approx(12288 + 768)
+    # all-gather bf16[64,256] = 32768B, group size 4 (iota [2,4]): 3/4 share
+    assert b["all-gather"] == pytest.approx(32768 * 3 / 4)
+    # reduce-scatter out f32[8,128] = 4096B, g=4: out*(g-1) = 12288
+    assert b["reduce-scatter"] == pytest.approx(4096 * 3)
+    # collective-permute bf16[32] = 64B
+    assert b["collective-permute"] == pytest.approx(64)
+    assert out["counts"]["all-reduce"] == 2
+    assert b["total"] == pytest.approx(sum(v for k, v in b.items()
+                                           if k != "total"))
+
+
+def test_collective_bytes_ignores_single_device_groups(dryrun):
+    txt = "%ar = f32[128]{0} all-reduce(%x), replica_groups={{0}}, to_apply=%a"
+    out = dryrun.collective_bytes(txt)
+    assert out["bytes"].get("all-reduce", 0) == 0
+
+
+def test_reduced_depths_per_family(dryrun):
+    from repro.configs.registry import ARCHS
+    assert dryrun._reduced_depths(ARCHS["minicpm-2b"]) == (1, 2)
+    assert dryrun._reduced_depths(ARCHS["zamba2-2.7b"]) == (6, 12)
+    assert dryrun._reduced_depths(ARCHS["xlstm-1.3b"]) == (8, 16)
+    moe = dryrun._reduced_depths(ARCHS["deepseek-moe-16b"])
+    assert moe[1] - moe[0] == 1 and moe[0] > ARCHS["deepseek-moe-16b"].moe.first_k_dense - 1

@@ -1,0 +1,174 @@
+"""Kernel sweeps: every Pallas kernel against its pure-jnp oracle, executed
+with interpret=True on CPU (validates the TPU code path), plus the flash_xla
+execution path against the dense oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import (
+    decode_attention_pallas,
+    flash_attention_pallas,
+)
+from repro.kernels.flash_xla import flash_attention_xla
+from repro.kernels.qn_apply import qn_apply_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    # f32 atol scales with output magnitude (~m * sqrt(d) accumulations in a
+    # different order than the einsum oracle)
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# qn_apply (THE SHINE op)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,bsz,d", [(1, 1, 8), (4, 2, 64), (8, 3, 100),
+                                     (16, 2, 512), (30, 1, 1000)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_qn_apply_pallas_vs_oracle(m, bsz, d, dtype):
+    ks = jax.random.split(jax.random.fold_in(KEY, m * 1000 + d), 4)
+    u = jax.random.normal(ks[0], (m, bsz, d), dtype)
+    v = jax.random.normal(ks[1], (m, bsz, d), dtype)
+    x = jax.random.normal(ks[2], (bsz, d), dtype)
+    count = jax.random.randint(ks[3], (bsz,), 0, m + 1)
+    mask = (jnp.arange(m)[:, None] < count[None, :]).astype(jnp.float32)
+    alpha = jnp.float32(0.7)
+    want = ref.qn_apply_ref(u, v, x, alpha, mask)
+    got = ops.qn_apply(u, v, x, alpha, mask, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_qn_apply_block_tiling_edges():
+    """d not divisible by the block and m not a sublane multiple."""
+    m, bsz, d = 5, 2, 777
+    ks = jax.random.split(KEY, 3)
+    u = jax.random.normal(ks[0], (m, bsz, d))
+    v = jax.random.normal(ks[1], (m, bsz, d))
+    x = jax.random.normal(ks[2], (bsz, d))
+    mask = jnp.ones((m, bsz), jnp.float32)
+    want = ref.qn_apply_ref(u, v, x, jnp.float32(1.0), mask)
+    got = ops.qn_apply(u, v, x, jnp.float32(1.0), mask,
+                       impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(4, 128), (2, 16, 256), (1, 7, 1000)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_pallas_vs_oracle(shape, dtype):
+    x = jax.random.normal(KEY, shape, dtype)
+    w = jax.random.normal(jax.random.fold_in(KEY, 1), shape[-1:], dtype)
+    want = ref.rmsnorm_ref(x, w, 1e-6)
+    got = rmsnorm_pallas(x, w, eps=1e-6, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# flash attention (Pallas, interpret mode)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,s,h,kv,hd,causal", [
+    (1, 128, 4, 4, 64, True),
+    (2, 256, 4, 2, 64, True),
+    (1, 128, 8, 8, 64, False),
+    (2, 128, 4, 1, 128, True),
+])
+def test_flash_attention_pallas_vs_oracle(b, s, h, kv, hd, causal):
+    ks = jax.random.split(jax.random.fold_in(KEY, s * h), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), jnp.float32)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    got = flash_attention_pallas(q, k, v, None, causal=causal, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("b,t,h,kv,hd", [(2, 256, 4, 4, 64), (1, 512, 8, 2, 64)])
+def test_decode_attention_pallas_vs_oracle(b, t, h, kv, hd):
+    ks = jax.random.split(jax.random.fold_in(KEY, t + h), 4)
+    q = jax.random.normal(ks[0], (b, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, t, kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, t, kv, hd), jnp.float32)
+    kv_len = jax.random.randint(ks[3], (b,), 1, t + 1)
+    want = ref.decode_attention_ref(q, k, v, kv_len)
+    got = decode_attention_pallas(q, k, v, kv_len, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# flash_xla (the CPU/dry-run execution path)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,s,t,h,kv,hd,causal,bq,bkv,unroll", [
+    (2, 128, 128, 4, 4, 16, True, 32, 32, False),
+    (2, 128, 128, 4, 4, 16, True, 32, 32, True),
+    (2, 128, 128, 8, 2, 16, True, 32, 64, False),
+    (2, 128, 128, 8, 2, 16, False, 32, 64, True),
+    (1, 100, 100, 4, 4, 16, True, 32, 32, False),     # ragged padding
+    (1, 96, 160, 4, 2, 16, False, 32, 32, False),     # cross attention
+])
+def test_flash_xla_fwd_bwd_vs_oracle(b, s, t, h, kv, hd, causal, bq, bkv,
+                                     unroll):
+    ks = jax.random.split(jax.random.fold_in(KEY, s + t + h), 4)
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, t, kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, t, kv, hd), jnp.float32)
+
+    ref_fn = lambda q, k, v: ref.attention_ref(q, k, v, causal=causal)
+    fx_fn = lambda q, k, v: flash_attention_xla(
+        q, k, v, causal=causal, block_q=bq, block_kv=bkv, unroll=unroll)
+    np.testing.assert_allclose(np.asarray(fx_fn(q, k, v)),
+                               np.asarray(ref_fn(q, k, v)),
+                               rtol=5e-5, atol=5e-5)
+    g = jax.random.normal(ks[3], (b, s, h, hd), jnp.float32)
+    gr = jax.vjp(ref_fn, q, k, v)[1](g)
+    gf = jax.vjp(fx_fn, q, k, v)[1](g)
+    for a, b_ in zip(gr, gf):
+        np.testing.assert_allclose(np.asarray(b_), np.asarray(a),
+                                   rtol=5e-4, atol=5e-4)
+
+
+def test_flash_xla_unroll_matches_scan():
+    """Costing mode (unrolled tiles) must be numerically identical to the
+    production scan path — same algorithm, different HLO shape."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 32), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (2, 128, 4, 32), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (2, 128, 4, 32), jnp.bfloat16)
+    a = flash_attention_xla(q, k, v, block_q=32, block_kv=64, unroll=False)
+    b = flash_attention_xla(q, k, v, block_q=32, block_kv=64, unroll=True)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), rtol=1e-6, atol=1e-6)
+
+
+def test_ops_attention_auto_dispatch_large_uses_flash():
+    """auto policy: big S*T goes through flash_xla (tiled), result must agree
+    with the dense oracle."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 1024, 2, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 1024, 2, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 1024, 2, 32), jnp.float32)
+    got = ops.attention(q, k, v, causal=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-5, atol=5e-5)

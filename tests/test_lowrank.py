@@ -1,0 +1,154 @@
+"""Property tests for the limited-memory low-rank qN inverse (core/lowrank).
+
+This object IS SHINE's shared inverse estimate; its algebra must be exact:
+``matvec``/``rmatvec`` against the dense materialization, ring-buffer
+overwrite semantics, per-sample masked appends, and transpose duality.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lowrank import LowRank, bdot, bnorm
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+dims = st.tuples(
+    st.integers(1, 3),   # batch
+    st.integers(1, 12),  # feature dim
+    st.integers(1, 6),   # memory
+    st.integers(0, 9),   # number of appends
+)
+
+
+def _random_lowrank(key, bsz, d, m, n_appends, alpha=1.0):
+    H = LowRank.identity(bsz, d, m, alpha=alpha)
+    keys = jax.random.split(key, max(n_appends, 1))
+    for i in range(n_appends):
+        a = jax.random.normal(keys[i], (bsz, d))
+        b = jax.random.normal(jax.random.fold_in(keys[i], 1), (bsz, d))
+        H = H.append(a, b, jnp.ones((bsz,), bool))
+    return H
+
+
+@settings(max_examples=40, deadline=None)
+@given(dims, st.floats(0.25, 2.0))
+def test_matvec_matches_dense(shape, alpha):
+    bsz, d, m, n = shape
+    key = jax.random.PRNGKey(bsz * 1000 + d * 100 + m * 10 + n)
+    H = _random_lowrank(key, bsz, d, m, n, alpha)
+    x = jax.random.normal(jax.random.fold_in(key, 7), (bsz, d))
+    dense = H.dense()
+    np.testing.assert_allclose(
+        np.asarray(H.matvec(x)),
+        np.einsum("bij,bj->bi", np.asarray(dense), np.asarray(x)),
+        rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(
+        np.asarray(H.rmatvec(x)),
+        np.einsum("bji,bj->bi", np.asarray(dense), np.asarray(x)),
+        rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(dims)
+def test_transpose_duality(shape):
+    bsz, d, m, n = shape
+    key = jax.random.PRNGKey(hash(shape) % (2**31))
+    H = _random_lowrank(key, bsz, d, m, n)
+    x = jax.random.normal(jax.random.fold_in(key, 3), (bsz, d))
+    np.testing.assert_allclose(np.asarray(H.transpose().matvec(x)),
+                               np.asarray(H.rmatvec(x)), rtol=1e-5, atol=1e-5)
+
+
+def test_ring_overwrite_keeps_newest():
+    """Appending beyond memory must overwrite the OLDEST slot."""
+    bsz, d, m = 1, 4, 2
+    H = LowRank.identity(bsz, d, m)
+    ones = jnp.ones((bsz,), bool)
+    e = lambda i: jax.nn.one_hot(jnp.full((bsz,), i), d)
+    # three appends into memory 2: term0 must be gone
+    H = H.append(e(0), e(0), ones)
+    H = H.append(e(1), e(1), ones)
+    H = H.append(e(2), e(2), ones)
+    dense = np.asarray(H.dense())[0]
+    expect = np.eye(d)
+    expect[1, 1] += 1.0
+    expect[2, 2] += 1.0
+    np.testing.assert_allclose(dense, expect, atol=1e-6)
+
+
+def test_masked_append_freezes_samples():
+    bsz, d, m = 3, 4, 4
+    H = LowRank.identity(bsz, d, m)
+    a = jnp.ones((bsz, d))
+    mask = jnp.asarray([True, False, True])
+    H2 = H.append(a, a, mask)
+    assert H2.count.tolist() == [1, 0, 1]
+    dense = np.asarray(H2.dense())
+    np.testing.assert_allclose(dense[1], np.eye(d), atol=1e-6)
+    assert not np.allclose(dense[0], np.eye(d))
+
+
+def test_partial_memory_validity_mask():
+    """Slots beyond count must not contribute even if buffers are non-zero."""
+    bsz, d, m = 1, 3, 4
+    H = LowRank(alpha=jnp.float32(1.0),
+                u=jnp.ones((m, bsz, d)), v=jnp.ones((m, bsz, d)),
+                count=jnp.asarray([2], jnp.int32))
+    x = jnp.ones((bsz, d))
+    # alpha*x + 2 * u <v, x> = 1 + 2*3 = 7 per coordinate
+    np.testing.assert_allclose(np.asarray(H.matvec(x))[0], np.full(d, 7.0),
+                               atol=1e-6)
+
+
+def test_bdot_bnorm_f32_accumulation():
+    x = (jnp.ones((2, 1000)) * 0.1).astype(jnp.bfloat16)
+    d = bdot(x, x)
+    assert d.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(d), [10.0, 10.0], rtol=2e-2)
+    np.testing.assert_allclose(np.asarray(bnorm(x)), np.sqrt([10.0, 10.0]),
+                               rtol=1e-2)
+
+
+def test_multidim_features_stay_unflattened():
+    """(B, S, d) features: contraction via ellipsis, no reshape."""
+    bsz, s, d, m = 2, 3, 4, 3
+    key = jax.random.PRNGKey(0)
+    H = LowRank.identity(bsz, (s, d), m)
+    a = jax.random.normal(key, (bsz, s, d))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (bsz, s, d))
+    H = H.append(a, b, jnp.ones((bsz,), bool))
+    x = jax.random.normal(jax.random.fold_in(key, 2), (bsz, s, d))
+    got = H.matvec(x)
+    assert got.shape == (bsz, s, d)
+    want = x + a * jnp.sum(b * x, axis=(1, 2), keepdims=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_sherman_morrison_inverse_roundtrip(dtype):
+    """Broyden-style: H built as inverse of B = I + sum a b^T must satisfy
+    H @ (B x) ~= x (verifies the Sherman-Morrison chain convention)."""
+    d, bsz = 6, 2
+    key = jax.random.PRNGKey(42)
+    B_mat = jnp.eye(d)[None].repeat(bsz, 0)
+    H = LowRank.identity(bsz, d, 8, dtype=dtype)
+    for i in range(4):
+        a = 0.3 * jax.random.normal(jax.random.fold_in(key, i), (bsz, d))
+        b = 0.3 * jax.random.normal(jax.random.fold_in(key, 100 + i), (bsz, d))
+        B_mat = B_mat + a[:, :, None] * b[:, None, :]
+        # Sherman-Morrison: (B + a b^T)^-1 = H - (H a)(b^T H)/(1 + b^T H a)
+        Ha = H.matvec(a.astype(dtype))
+        bH = H.rmatvec(b.astype(dtype))
+        den = 1.0 + bdot(b, Ha)
+        H = H.append((-Ha / den[:, None]).astype(dtype), bH, jnp.ones((bsz,), bool))
+    x = jax.random.normal(jax.random.fold_in(key, 999), (bsz, d))
+    Bx = jnp.einsum("bij,bj->bi", B_mat, x)
+    x_back = H.matvec(Bx.astype(dtype))
+    tol = 1e-4 if dtype == jnp.float32 else 6e-2
+    np.testing.assert_allclose(np.asarray(x_back, np.float32), np.asarray(x),
+                               rtol=tol, atol=tol)

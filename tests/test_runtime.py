@@ -1,0 +1,179 @@
+"""Runtime-layer tests: trainer loop, checkpoint/restart, grad accumulation,
+serving loop, data pipeline determinism, gradient compression, straggler
+watchdog."""
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import TrainConfig
+from repro.configs.registry import smoke_config
+from repro.data.pipeline import SyntheticTokenDataset, make_lm_batch_iterator
+from repro.models import lm
+from repro.optim.compression import (
+    compress_pod_gradients,
+    compression_init,
+    dequantize_int8,
+    quantize_int8,
+)
+from repro.parallel.sharding import ShardCtx
+from repro.runtime.ft import StragglerWatchdog
+from repro.runtime.serving import Request, ServeLoop
+from repro.runtime.trainer import Trainer
+
+CTX = ShardCtx.for_mesh(None)
+
+
+def tiny_cfg(**kw):
+    cfg = smoke_config("minicpm-2b")
+    return dataclasses.replace(
+        cfg, num_layers=2, d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+        vocab_size=128, head_dim=16, **kw)
+
+
+def test_trainer_loss_decreases(tmp_path):
+    cfg = tiny_cfg()
+    tcfg = TrainConfig(steps=30, global_batch=8, seq_len=32, lr=3e-3,
+                       warmup_steps=5, zero1=False, seed=0)
+    tr = Trainer(cfg, tcfg, CTX)
+    batches = make_lm_batch_iterator(cfg, CTX, 8, 32, seed=0)
+    losses = []
+    tr.run(batches, steps=30, log_every=5,
+           on_metrics=lambda i, m: losses.append(m["loss"]))
+    batches.close()
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_checkpoint_restart_resumes(tmp_path):
+    cfg = tiny_cfg()
+    tcfg = TrainConfig(steps=10, global_batch=4, seq_len=16, lr=1e-3,
+                       zero1=False, checkpoint_dir=str(tmp_path),
+                       checkpoint_every=5, seed=0)
+    tr = Trainer(cfg, tcfg, CTX)
+    batches = make_lm_batch_iterator(cfg, CTX, 4, 16, seed=0)
+    state = tr.run(batches, steps=10, log_every=100)
+    batches.close()
+    assert int(state.step) == 10
+
+    # new trainer restores from step 10 and continues
+    tr2 = Trainer(cfg, dataclasses.replace(tcfg, steps=12), CTX)
+    restored = tr2.restore_or_init()
+    assert int(restored.step) == 10
+    a = jax.tree_util.tree_leaves(state.params)[0]
+    b = jax.tree_util.tree_leaves(restored.params)[0]
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32))
+
+
+def test_checkpoint_keep_pruning(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"w": jnp.ones((4,)), "step": jnp.int32(0)}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    mgr.wait()
+    assert mgr.latest_step() == 4
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_checkpoint_atomicity_tmp_never_restored(tmp_path):
+    """A crashed (partial) save must be invisible to restore."""
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+    tree = {"w": jnp.arange(4.0)}
+    mgr.save(1, tree)
+    # simulate a crash mid-save: stray .tmp directory
+    os.makedirs(os.path.join(str(tmp_path), "step_2.tmp"), exist_ok=True)
+    assert mgr.latest_step() == 1
+    step, state, _ = mgr.restore({"w": jnp.zeros((4,))})
+    np.testing.assert_allclose(np.asarray(state["w"]), np.arange(4.0))
+
+
+def test_grad_accum_matches_full_batch():
+    """accum=2 over a split batch == one step over the full batch."""
+    cfg = tiny_cfg()
+    base = TrainConfig(steps=1, global_batch=8, seq_len=16, lr=1e-3,
+                       zero1=False, clip_norm=1e9, seed=0)
+    ds = SyntheticTokenDataset(cfg.vocab_size, 0)
+    toks = ds.batch(0, 8, 17)
+    batch = {"tokens": jnp.asarray(toks[:, :-1]),
+             "targets": jnp.asarray(toks[:, 1:])}
+
+    outs = {}
+    for accum in (1, 2):
+        tr = Trainer(cfg, dataclasses.replace(base, grad_accum=accum), CTX)
+        state = tr.init_state()
+        state2, m = tr._train_step(state, batch)
+        outs[accum] = (jax.tree_util.tree_leaves(state2.params)[1], m["loss"])
+    np.testing.assert_allclose(float(outs[1][1]), float(outs[2][1]), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(outs[1][0], np.float32),
+                               np.asarray(outs[2][0], np.float32),
+                               rtol=2e-2, atol=2e-4)
+
+
+def test_data_pipeline_determinism_and_restart():
+    cfg = tiny_cfg()
+    it1 = make_lm_batch_iterator(cfg, CTX, 4, 8, seed=7)
+    b0, b1 = next(it1), next(it1)
+    it1.close()
+    it2 = make_lm_batch_iterator(cfg, CTX, 4, 8, seed=7, start_step=1)
+    b1_again = next(it2)
+    it2.close()
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b1_again["tokens"]))
+    assert not np.array_equal(np.asarray(b0["tokens"]),
+                              np.asarray(b1["tokens"]))
+
+
+def test_serving_loop_drains_and_is_greedy_deterministic():
+    cfg = tiny_cfg()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    loop = ServeLoop(params, cfg, CTX, slots=2, max_len=64, eos_id=-1)
+    reqs = [Request(uid=i, prompt=[3, 5, 7, 11 + i], max_new_tokens=6)
+            for i in range(4)]
+    loop.drain(reqs)
+    assert all(len(r.out) == 6 for r in reqs)
+
+    loop2 = ServeLoop(params, cfg, CTX, slots=2, max_len=64, eos_id=-1)
+    reqs2 = [Request(uid=i, prompt=[3, 5, 7, 11 + i], max_new_tokens=6)
+             for i in range(4)]
+    loop2.drain(reqs2)
+    for a, b in zip(reqs, reqs2):
+        assert a.out == b.out
+
+
+def test_int8_quantization_roundtrip():
+    key = jax.random.PRNGKey(0)
+    for scale_mag in (1.0, 1e-2, 1e3):
+        x = jax.random.normal(key, (1000,)) * scale_mag
+        q, scale = quantize_int8(x)
+        back = dequantize_int8(q, scale, x.shape)
+        assert q.dtype == jnp.int8
+        # per-block symmetric int8: worst-case error = half a quant step
+        max_err = float(np.abs(np.asarray(scale)).max()) * 0.5 + 1e-9
+        np.testing.assert_allclose(np.asarray(back), np.asarray(x),
+                                   atol=max_err)
+
+
+def test_compression_identity_single_pod():
+    """npods == 1: compression is a no-op (no error accumulated)."""
+    from jax.sharding import Mesh
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1), ("pod",))
+    grads = {"w": jnp.arange(8.0)}
+    state = compression_init(grads)
+    out, state2 = compress_pod_gradients(grads, state, mesh)
+    np.testing.assert_allclose(np.asarray(out["w"]), np.arange(8.0))
+    np.testing.assert_allclose(np.asarray(state2.error["w"]), 0.0)
+
+
+def test_straggler_watchdog_flags_slow_host():
+    wd = StragglerWatchdog(n_hosts=4, threshold=1.5)
+    for _ in range(10):
+        for h in range(4):
+            wd.record(h, 1.0 if h != 2 else 2.5)
+    reports = wd.stragglers()
+    assert [r.host for r in reports] == [2]
+    assert reports[0].step_time > 2.0
