@@ -5,6 +5,9 @@ Compares held-out test loss vs wall time for:
   HOAG (full CG backward), HOAG limited backward (Fig. E.1), Jacobian-Free,
   SHINE, SHINE refine, SHINE-OPA (Fig. 2 left), plus grid/random-search-free
   baselines are out of scope (the paper's Fig 1 extended shows they lose).
+
+Each ``HOAGConfig.mode`` resolves to a cotangent estimator registered in
+``repro.implicit.ESTIMATORS`` (see core/bilevel.py:resolve_hoag_mode).
 """
 
 from __future__ import annotations

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.mdeq_cifar import MDEQConfig
-from repro.core.deq import DEQConfig
+from repro.implicit import ImplicitConfig
 from repro.models import mdeq
 
 from benchmarks.common import emit, timeit
@@ -43,7 +43,7 @@ def run(batch: int = 8, iters: int = 3) -> list[dict]:
 
     rows = []
     for name, kw in METHODS.items():
-        deq_cfg = DEQConfig(
+        deq_cfg = ImplicitConfig.from_strings(
             solver=cfg.solver, max_steps=cfg.max_steps, tol=cfg.tol,
             memory=cfg.memory, **kw)
 
@@ -70,8 +70,8 @@ def run_opa_quality(n_batches: int = 8) -> list[dict]:
     estimated cotangent u = w^T B^-1 vs the exact w^T J^-1, per method."""
     import numpy as np
 
-    from repro.core.hypergrad import shine_cotangent
     from repro.core.solvers import SolverConfig, adjoint_broyden_solve, broyden_solve
+    from repro.implicit import adjoint_system, ravel_state, shine_cotangent
 
     cfg = MDEQConfig(image_size=12, channels=(8, 16))
     params = mdeq.init_mdeq(cfg, jax.random.PRNGKey(0))
@@ -82,15 +82,13 @@ def run_opa_quality(n_batches: int = 8) -> list[dict]:
         c1, c2 = cfg.channels
         x1 = jax.nn.relu(mdeq._conv(images, params["stem"]))
         x2 = jax.nn.relu(mdeq._conv(x1, params["inj2"], stride=2))
-        from repro.core.deq import pack_state
         s1 = (2, cfg.image_size, cfg.image_size, c1)
         s2 = (2, cfg.image_size // 2, cfg.image_size // 2, c2)
-        z0, unpack = pack_state([jnp.zeros(s1), jnp.zeros(s2)])
+        z0, unravel = ravel_state((jnp.zeros(s1), jnp.zeros(s2)))
 
         def f(z):
-            z1, z2 = unpack(z)
-            z1n, z2n = mdeq.mdeq_f(params, (x1, x2), (z1, z2), cfg)
-            return pack_state([z1n, z2n])[0]
+            z1n, z2n = mdeq.mdeq_f(params, (x1, x2), unravel(z), cfg)
+            return ravel_state((z1n, z2n))[0]
 
         g = lambda z: z - f(z)
         scfg = SolverConfig(max_steps=30, tol=1e-7, memory=30)
@@ -108,7 +106,6 @@ def run_opa_quality(n_batches: int = 8) -> list[dict]:
         _, vjp = jax.vjp(g, res.z)
         # J_g^T t = t - J_f^T t  =>  J_f^T t = t - vjp_g(t)
         vjp_f = lambda t: t - vjp(t.astype(res.z.dtype))[0]
-        from repro.core.hypergrad import adjoint_system
         # exact adjoint: iterate psi(u) = u - J_f^T u - w = 0 to high precision
         psi_res = broyden_solve(adjoint_system(vjp_f, w), w,
                                 SolverConfig(max_steps=60, tol=1e-9,

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.mdeq_cifar import MDEQConfig
-from repro.core.deq import pack_state
+from repro.implicit import ravel_state
 from repro.models import mdeq
 
 from benchmarks.common import emit
@@ -39,13 +39,12 @@ def run() -> list[dict]:
         c1, c2 = cfg.channels
         s1 = (4, cfg.image_size, cfg.image_size, c1)
         s2 = (4, cfg.image_size // 2, cfg.image_size // 2, c2)
-        z0, unpack = pack_state([jnp.zeros(s1), jnp.zeros(s2)])
+        z0, unravel = ravel_state((jnp.zeros(s1), jnp.zeros(s2)))
 
         @jax.jit
         def f(z):
-            z1, z2 = unpack(z)
-            z1n, z2n = mdeq.mdeq_f(params, (x1, x2), (z1, z2), cfg)
-            return pack_state([z1n, z2n])[0]
+            z1n, z2n = mdeq.mdeq_f(params, (x1, x2), unravel(z), cfg)
+            return ravel_state((z1n, z2n))[0]
 
         # radius at z0 and at the (approximate) fixed point
         from repro.core.solvers import SolverConfig, broyden_solve

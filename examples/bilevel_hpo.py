@@ -5,10 +5,12 @@ synthetic 20news-shaped dataset with the HOAG outer loop, comparing the
 full-CG backward against SHINE's shared L-BFGS inverse (zero backward HVPs)
 and SHINE-OPA (Theorem 3 guarantees).
 
+Each mode resolves to a cotangent estimator registered in
+``repro.implicit.ESTIMATORS`` — custom estimators registered with
+``repro.implicit.register_estimator`` are accepted as modes too.
+
 Run:  PYTHONPATH=src python examples/bilevel_hpo.py
 """
-
-import dataclasses
 
 from repro.core.bilevel import HOAGConfig, make_logreg_problem, run_hoag
 from repro.core.solvers import SolverConfig

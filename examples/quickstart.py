@@ -14,7 +14,12 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.deq import DEQConfig, deq_fixed_point
+from repro.implicit import (
+    BackwardConfig,
+    ForwardConfig,
+    ImplicitConfig,
+    implicit_fixed_point,
+)
 
 
 def f(params, x, z):
@@ -37,12 +42,15 @@ def main():
     for mode, label in [("full", "original (iterative inversion)"),
                         ("shine", "SHINE (shared inverse estimate)"),
                         ("jfb", "Jacobian-Free")]:
-        cfg = DEQConfig(max_steps=30, tol=1e-6, memory=30, backward=mode,
-                        backward_max_steps=30)
+        cfg = ImplicitConfig(
+            forward=ForwardConfig(solver="broyden", max_steps=30, tol=1e-6),
+            backward=BackwardConfig(estimator=mode, max_steps=30),
+            memory=30,
+        )
 
         @jax.jit
         def loss_fn(p):
-            z, stats = deq_fixed_point(f, p, x, jnp.zeros((B, D)), cfg)
+            z, stats = implicit_fixed_point(f, p, x, jnp.zeros((B, D)), cfg)
             return jnp.mean((z - y) ** 2)
 
         p = jax.tree_util.tree_map(jnp.copy, params)

@@ -29,15 +29,34 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.solvers import (
-    LBFGSMemory,
-    SolverConfig,
-    lbfgs_solve,
-    lbfgs_two_loop,
-    _lbfgs_gamma,
-)
+from repro.core.solvers import LBFGSMemory, SolverConfig, lbfgs_solve
+from repro.implicit import ESTIMATORS, estimate_hypergrad_cotangent
+from repro.implicit.config import BackwardConfig, ImplicitConfig
 
 Array = jax.Array
+
+# HOAG mode -> (registered estimator, use OPA extra secant pairs in the
+# forward LBFGS).  Any other registered estimator name is accepted as a
+# mode directly (without OPA).
+_HOAG_MODES: dict[str, tuple[str, bool]] = {
+    "full_cg": ("full", False),
+    "shine": ("shine", False),
+    "shine_opa": ("shine", True),
+    "jfb": ("jfb", False),
+    "shine_refine": ("shine_refine", False),
+}
+
+
+def resolve_hoag_mode(mode: str) -> tuple[str, bool]:
+    """Map a HOAG mode string to (estimator name, use_opa)."""
+    if mode in _HOAG_MODES:
+        return _HOAG_MODES[mode]
+    if mode in ESTIMATORS:
+        return (mode, False)
+    raise ValueError(
+        f"unknown HOAG mode {mode!r}; modes: {', '.join(sorted(_HOAG_MODES))}"
+        f"; registered estimators: {', '.join(ESTIMATORS.names())}"
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,31 +92,27 @@ class HOAGConfig:
     cg_tol: float = 1e-8
     refine_steps: int = 5
 
+    def implicit_cfg(self) -> ImplicitConfig:
+        """The backward sub-config this mode implies for the registry.
 
-def _cg(hvp: Callable[[Array], Array], b: Array, x0: Array, steps: int, tol: float) -> tuple[Array, Array]:
-    """Plain conjugate gradient on a PD system; returns (x, iters)."""
-
-    def cond(state):
-        _, r, _, k, done = state
-        return (k < steps) & ~done
-
-    def body(state):
-        x, r, p, k, _ = state
-        hp = hvp(p)
-        rr = jnp.dot(r, r)
-        alpha = rr / jnp.maximum(jnp.dot(p, hp), 1e-30)
-        x = x + alpha * p
-        r_new = r - alpha * hp
-        beta = jnp.dot(r_new, r_new) / jnp.maximum(rr, 1e-30)
-        p = r_new + beta * p
-        done = jnp.linalg.norm(r_new) < tol
-        return (x, r_new, p, k + 1, done)
-
-    r0 = b - hvp(x0)
-    state = (x0, r0, r0, jnp.int32(0),
-             jnp.linalg.norm(r0) < tol)
-    x, r, p, k, done = jax.lax.while_loop(cond, body, state)
-    return x, k
+        The paper's §3.1 bi-level methods (the ``_HOAG_MODES`` table) use
+        the L-BFGS estimate as-is, so they get ``fallback_ratio=inf`` (the
+        norm guard never fires).  A pass-through estimator name (e.g.
+        ``shine_fallback`` or a custom registration) keeps the standard
+        guard ratio — otherwise selecting a guarded estimator would
+        silently degrade to plain ``shine``.
+        """
+        estimator, _ = resolve_hoag_mode(self.mode)
+        ratio = float("inf") if self.mode in _HOAG_MODES \
+            else BackwardConfig().fallback_ratio
+        return ImplicitConfig(
+            backward=BackwardConfig(
+                estimator=estimator, max_steps=self.cg_steps,
+                refine_steps=self.refine_steps, tol=self.cg_tol,
+                fallback_ratio=ratio,
+            ),
+            memory=self.inner.memory,
+        )
 
 
 class OuterRecord(NamedTuple):
@@ -121,23 +136,13 @@ def hypergradient(
     w = jax.grad(problem.outer_loss)(z_star)
     hvp = lambda v: problem.hvp(z_star, theta, v)
 
-    if cfg.mode == "jfb":
-        q, calls = w, jnp.int32(0)
-    elif cfg.mode in ("shine", "shine_opa"):
-        q = lbfgs_two_loop(mem, w, _lbfgs_gamma(mem))
-        calls = jnp.int32(0)
-    elif cfg.mode == "shine_refine":
-        q0 = lbfgs_two_loop(mem, w, _lbfgs_gamma(mem))
-        q, calls = _cg(hvp, w, q0, cfg.refine_steps, cfg.cg_tol)
-    elif cfg.mode == "full_cg":
-        q, calls = _cg(hvp, w, jnp.zeros_like(w), cfg.cg_steps, cfg.cg_tol)
-    else:
-        raise ValueError(f"unknown mode {cfg.mode!r}")
+    # registry-dispatched estimate of q = Hess^{-1} w (implicit/estimators)
+    adj = estimate_hypergrad_cotangent(cfg.implicit_cfg(), hvp, w, mem)
 
     # dL/dtheta = - q^T dg/dtheta   (VJP of the inner gradient w.r.t. theta)
     _, vjp = jax.vjp(lambda t: problem.inner_grad(z_star, t), theta)
-    (gt,) = vjp(q)
-    return -gt, calls
+    (gt,) = vjp(adj.u)
+    return -gt, adj.n_steps
 
 
 def run_hoag(
@@ -157,7 +162,7 @@ def run_hoag(
     tol = cfg.inner.tol
     lr = cfg.outer_lr
 
-    use_opa = cfg.mode == "shine_opa"
+    _, use_opa = resolve_hoag_mode(cfg.mode)
 
     # tolerance must be static for jit; pre-build one solver per tol level
     solver_cache: dict[float, Callable] = {}

@@ -1,45 +1,44 @@
-"""The DEQ layer: fixed-point forward + SHINE-family implicit backward.
+"""Legacy DEQ entry point — thin compatibility shim over ``repro.implicit``.
 
 ``deq_fixed_point(f, params, x, z0, cfg)`` computes ``z* = f(params, x, z*)``
-with a quasi-Newton solver and registers a ``custom_vjp`` that implements
-Theorem 1's hypergradient with any of the paper's cotangent estimators
-(full / shine / jfb / fallback / refine — see core/hypergrad.py).
+with a quasi-Newton solver and a SHINE-family implicit backward.  The
+implementation now lives in ``repro.implicit`` (pytree-native state,
+registry-dispatched solvers/estimators); this module keeps the historical
+flat-array surface working:
 
-Memory behaviour matches the paper's O(1) claim: the residuals saved for
-backward are (params, x, z*, qN chain) — no unrolled activations. The
-backward evaluates one fresh VJP of f at z*.
-
-``z`` is a single array ``(B, *feat)``; multiscale states (MDEQ) pack their
-scales into one flat axis via ``pack_state`` below. Feature axes are never
-reshaped by the solver itself, so TP-sharded LM states stay sharded.
+  * ``DEQConfig`` — the old flat string-keyed config; converts via
+    ``to_implicit()`` (see ``ImplicitConfig.from_strings``).
+  * ``deq_fixed_point`` — delegates to ``implicit_fixed_point`` (a bare
+    array is just a single-leaf pytree, so behaviour is unchanged).
+  * ``pack_state`` — the old multiscale flattening helper, now hosted in
+    ``implicit/pytree.py``.  New code should pass pytree states directly.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import hypergrad
-from repro.core.lowrank import LowRank
-from repro.core.solvers import (
-    SolverConfig,
-    adjoint_broyden_solve,
-    anderson_solve,
-    broyden_solve,
-    fixed_point_solve,
+from repro.implicit import (
+    ImplicitConfig,
+    ImplicitStats,
+    implicit_fixed_point,
+    pack_state,  # noqa: F401  (re-export for legacy callers)
 )
 
 Array = jax.Array
 
+DEQStats = ImplicitStats
+
 
 @dataclasses.dataclass(frozen=True)
 class DEQConfig:
+    """Legacy flat config; prefer ``repro.implicit.ImplicitConfig``."""
+
     # ---- forward (inner problem) ----
-    solver: str = "broyden"      # broyden | fixed_point | anderson | adjoint_broyden
+    solver: str = "broyden"      # any name in repro.implicit.SOLVERS
     max_steps: int = 24
     tol: float = 1e-4
     memory: int = 24
@@ -48,84 +47,29 @@ class DEQConfig:
     # an outer_grad fn passed to deq_fixed_point
     opa_freq: int = 0
     # ---- backward (hypergradient) ----
-    backward: str = "shine"      # full|shine|jfb|shine_fallback|shine_refine|jfb_refine
+    backward: str = "shine"      # any name in repro.implicit.ESTIMATORS
     backward_max_steps: int = 30
     refine_steps: int = 5
     backward_tol: float = 1e-6
     fallback_ratio: float = 1.3
     unroll: bool = False  # dry-run costing mode (see solvers.SolverConfig)
 
-    def fwd_cfg(self) -> SolverConfig:
-        return SolverConfig(
+    def to_implicit(self) -> ImplicitConfig:
+        return ImplicitConfig.from_strings(
+            solver=self.solver, backward=self.backward,
             max_steps=self.max_steps, tol=self.tol, memory=self.memory,
             step_size=self.step_size, opa_freq=self.opa_freq,
-            unroll=self.unroll,
-        )
-
-    def bwd_cfg(self) -> hypergrad.BackwardConfig:
-        return hypergrad.BackwardConfig(
-            mode=self.backward, max_steps=self.backward_max_steps,
-            refine_steps=self.refine_steps, tol=self.backward_tol,
-            memory=self.memory, fallback_ratio=self.fallback_ratio,
-            unroll=self.unroll,
+            backward_max_steps=self.backward_max_steps,
+            refine_steps=self.refine_steps, backward_tol=self.backward_tol,
+            fallback_ratio=self.fallback_ratio, unroll=self.unroll,
         )
 
 
-class DEQStats(NamedTuple):
-    residual: Array    # (B,) forward residual at z*
-    n_steps: Array     # () forward iterations
-    converged: Array   # (B,)
-    trace: Array       # (max_steps, B)
-
-
-def _solve_forward(f_z, z0, cfg: DEQConfig, outer_grad=None):
-    scfg = cfg.fwd_cfg()
-    g = lambda z: z - f_z(z)
-    if cfg.solver == "broyden":
-        return broyden_solve(g, z0, scfg)
-    if cfg.solver == "adjoint_broyden":
-        return adjoint_broyden_solve(g, z0, scfg, outer_grad=outer_grad)
-    if cfg.solver == "fixed_point":
-        return fixed_point_solve(f_z, z0, scfg)
-    if cfg.solver == "anderson":
-        return anderson_solve(f_z, z0, scfg)
-    raise ValueError(f"unknown solver {cfg.solver!r}")
-
-
-@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
-def _deq(f, cfg: DEQConfig, outer_grad, params, x, z0):
-    res = _solve_forward(lambda z: f(params, x, z), z0, cfg, _bind_outer(outer_grad, params, x))
-    stats = DEQStats(res.residual, res.n_steps, res.converged, res.trace)
-    return res.z, stats
-
-
-def _bind_outer(outer_grad, params, x):
-    if outer_grad is None:
-        return None
-    return lambda z: outer_grad(params, x, z)
-
-
-def _deq_fwd(f, cfg: DEQConfig, outer_grad, params, x, z0):
-    res = _solve_forward(lambda z: f(params, x, z), z0, cfg, _bind_outer(outer_grad, params, x))
-    stats = DEQStats(res.residual, res.n_steps, res.converged, res.trace)
-    return (res.z, stats), (params, x, res.z, res.lowrank)
-
-
-def _deq_bwd(f, cfg: DEQConfig, outer_grad, saved, cotangents):
-    params, x, z_star, H = saved
-    w, _stats_bar = cotangents  # stats carry no gradient
-
-    # One VJP of f at the fixed point (recompute — O(1) memory).
-    _, vjp = jax.vjp(lambda p, xx, z: f(p, xx, z), params, x, z_star)
-    vjp_z = lambda u: vjp(u.astype(z_star.dtype))[2]
-
-    adj = hypergrad.estimate_cotangent(cfg.bwd_cfg(), vjp_z, w, H)
-    p_bar, x_bar, _ = vjp(adj.u.astype(z_star.dtype))
-    z0_bar = jnp.zeros_like(z_star)  # init point does not influence z*
-    return p_bar, x_bar, z0_bar
-
-
-_deq.defvjp(_deq_fwd, _deq_bwd)
+def as_implicit_config(cfg: DEQConfig | ImplicitConfig) -> ImplicitConfig:
+    """Normalize either config flavour to ``ImplicitConfig``."""
+    if isinstance(cfg, ImplicitConfig):
+        return cfg
+    return cfg.to_implicit()
 
 
 def deq_fixed_point(
@@ -133,7 +77,7 @@ def deq_fixed_point(
     params: Any,
     x: Any,
     z0: Array,
-    cfg: DEQConfig,
+    cfg: DEQConfig | ImplicitConfig,
     *,
     outer_grad: Callable[[Any, Any, Array], Array] | None = None,
 ) -> tuple[Array, DEQStats]:
@@ -142,28 +86,6 @@ def deq_fixed_point(
     ``outer_grad(params, x, z) -> dL/dz`` enables OPA extra updates in the
     adjoint-Broyden forward (paper §2.3); leave None otherwise.
     """
-    return _deq(f, cfg, outer_grad, params, x, z0)
-
-
-# ---------------------------------------------------------------------------
-# Multiscale state packing (MDEQ)
-# ---------------------------------------------------------------------------
-
-
-def pack_state(leaves: list[Array]) -> tuple[Array, Callable[[Array], list[Array]]]:
-    """Pack per-scale feature maps [(B, ...), ...] into one (B, D) array."""
-    import math
-
-    bsz = leaves[0].shape[0]
-    shapes = [l.shape for l in leaves]
-    sizes = [math.prod(s[1:]) for s in shapes]
-    flat = jnp.concatenate([l.reshape(bsz, -1) for l in leaves], axis=1)
-
-    def unpack(z: Array) -> list[Array]:
-        outs, off = [], 0
-        for s, n in zip(shapes, sizes):
-            outs.append(z[:, off:off + n].reshape((z.shape[0],) + s[1:]))
-            off += n
-        return outs
-
-    return flat, unpack
+    return implicit_fixed_point(
+        f, params, x, z0, as_implicit_config(cfg), outer_grad=outer_grad
+    )

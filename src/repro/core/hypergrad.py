@@ -1,93 +1,42 @@
-"""Backward-pass cotangent estimators for implicit models (paper §2).
+"""Legacy backward-mode surface — compatibility shim over ``repro.implicit``.
 
-Given the fixed point ``z* = f(z*)`` (i.e. ``g(z) = z - f(z) = 0``) and the
-loss cotangent ``w = dL/dz*``, the true hypergradient needs
-
-    u^T = w^T J_g(z*)^{-1}        (then dL/dtheta = u^T df/dtheta).
-
-Estimators (each returns ``u``):
-
-  * full      — solve the adjoint linear system ``(I - J_f^T) u = w``
-                iteratively with Broyden (the original DEQ backward).
-  * shine     — u = H^T w, where H is the forward pass's quasi-Newton
-                inverse estimate. Zero extra solves: THE paper.
-  * jfb       — u = w (Fung et al. 2021: J^{-1} ~ I).
-  * fallback  — shine, guarded per sample: if ||u_shine|| > ratio*||u_jfb||
-                fall back to JFB (paper §3 "fallback strategy", ratio 1.3).
-  * refine-k  — k Broyden iterations on the adjoint system *initialized* at
-                the shine/jfb estimate, with the forward qN chain
-                (transposed) warm-starting the backward qN matrix
-                (paper §2.1 "refine strategy").
+The cotangent estimators (paper §2: full / shine / jfb / fallback /
+refine-k) now live in ``repro.implicit.estimators`` behind the estimator
+registry, written once for both the DEQ adjoint and the bi-level
+hypergradient.  This module re-exports the primitive operations and keeps
+the historical ``BackwardConfig``/``estimate_cotangent`` signature alive
+for flat-array callers.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.lowrank import LowRank, _expand, bnorm
-from repro.core.solvers import SolveResult, SolverConfig, broyden_solve
+from repro.core.lowrank import LowRank
+from repro.implicit import (  # noqa: F401  (re-exports for legacy callers)
+    AdjointResult,
+    adjoint_system,
+    fallback_cotangent,
+    jfb_cotangent,
+    shine_cotangent,
+    solve_adjoint,
+)
+from repro.implicit import estimators as _estimators
+from repro.implicit.config import ImplicitConfig
+from repro.implicit.config import BackwardConfig as _NewBackwardConfig
+from repro.implicit.config import ForwardConfig as _ForwardConfig
 
 Array = jax.Array
 
 
-class AdjointResult(NamedTuple):
-    u: Array               # cotangent estimate (B, *F)
-    residual: Array        # (B,) final adjoint-system residual (nan if n/a)
-    n_steps: Array         # () iterations used by the iterative part
-    fallback_mask: Array   # (B,) samples where the fallback fired
-
-
-def shine_cotangent(H: LowRank, w: Array) -> Array:
-    """u = H^T w — share the inverse estimate. O(m·d), no extra solve."""
-    return H.rmatvec(w)
-
-
-def jfb_cotangent(w: Array) -> Array:
-    return w
-
-
-def fallback_cotangent(H: LowRank, w: Array, ratio: float = 1.3) -> tuple[Array, Array]:
-    """Paper §3: monitor the norm of the SHINE inversion against the (free)
-    JFB inversion; a blown-up norm is the telltale sign of a bad inverse."""
-    u_shine = shine_cotangent(H, w)
-    bad = bnorm(u_shine) > ratio * bnorm(w)
-    u = jnp.where(_expand(bad, w), w, u_shine)
-    return u, bad
-
-
-def adjoint_system(vjp_z: Callable[[Array], Array], w: Array) -> Callable[[Array], Array]:
-    """Residual of the adjoint fixed point: psi(u) = u - J_f^T u - w.
-
-    psi(u) = 0  <=>  (I - J_f)^T u = w  <=>  u^T J_g = w^T with g = id - f.
-    """
-
-    def psi(u: Array) -> Array:
-        return u - vjp_z(u) - w
-
-    return psi
-
-
-def solve_adjoint(
-    vjp_z: Callable[[Array], Array],
-    w: Array,
-    cfg: SolverConfig,
-    *,
-    u0: Array | None = None,
-    init_lowrank: LowRank | None = None,
-) -> SolveResult:
-    """Iteratively solve the adjoint system with Broyden (original backward)."""
-    psi = adjoint_system(vjp_z, w)
-    u0 = w if u0 is None else u0
-    return broyden_solve(psi, u0, cfg, init_lowrank=init_lowrank)
-
-
 @dataclasses.dataclass(frozen=True)
 class BackwardConfig:
-    mode: str = "shine"          # full|shine|jfb|shine_fallback|shine_refine|jfb_refine
+    """Legacy flat backward config; prefer ``ImplicitConfig.backward``."""
+
+    mode: str = "shine"          # any name in repro.implicit.ESTIMATORS
     max_steps: int = 30          # budget of the iterative part (full / refine)
     refine_steps: int = 5
     tol: float = 1e-6
@@ -95,50 +44,26 @@ class BackwardConfig:
     fallback_ratio: float = 1.3
     unroll: bool = False
 
-    def solver_cfg(self, steps: int) -> SolverConfig:
-        return SolverConfig(
-            max_steps=steps, tol=self.tol, memory=self.memory, relative=False,
+    def to_implicit(self) -> ImplicitConfig:
+        return ImplicitConfig(
+            forward=_ForwardConfig(),
+            backward=_NewBackwardConfig(
+                estimator=self.mode, max_steps=self.max_steps,
+                refine_steps=self.refine_steps, tol=self.tol,
+                fallback_ratio=self.fallback_ratio,
+            ),
+            memory=self.memory,
             unroll=self.unroll,
         )
 
 
 def estimate_cotangent(
-    mode_cfg: BackwardConfig,
+    mode_cfg: BackwardConfig | ImplicitConfig,
     vjp_z: Callable[[Array], Array],
     w: Array,
     H: LowRank,
 ) -> AdjointResult:
-    """Dispatch over the paper's backward modes."""
-    mode = mode_cfg.mode
-    bsz = w.shape[0]
-    no_fb = jnp.zeros((bsz,), bool)
-    nan = jnp.full((bsz,), jnp.nan, jnp.float32)
-
-    if mode == "jfb":
-        return AdjointResult(jfb_cotangent(w), nan, jnp.int32(0), no_fb)
-
-    if mode == "shine":
-        return AdjointResult(shine_cotangent(H, w), nan, jnp.int32(0), no_fb)
-
-    if mode == "shine_fallback":
-        u, bad = fallback_cotangent(H, w, mode_cfg.fallback_ratio)
-        return AdjointResult(u, nan, jnp.int32(0), bad)
-
-    if mode in ("shine_refine", "jfb_refine"):
-        if mode == "shine_refine":
-            u0, bad = fallback_cotangent(H, w, mode_cfg.fallback_ratio)
-            init = H.transpose()  # warm-start the backward qN matrix (§2.1)
-        else:
-            u0, bad = jfb_cotangent(w), no_fb
-            init = None
-        res = solve_adjoint(
-            vjp_z, w, mode_cfg.solver_cfg(mode_cfg.refine_steps),
-            u0=u0, init_lowrank=init,
-        )
-        return AdjointResult(res.z, res.residual, res.n_steps, bad)
-
-    if mode == "full":
-        res = solve_adjoint(vjp_z, w, mode_cfg.solver_cfg(mode_cfg.max_steps))
-        return AdjointResult(res.z, res.residual, res.n_steps, no_fb)
-
-    raise ValueError(f"unknown backward mode {mode!r}")
+    """Registry-dispatched estimate on the DEQ adjoint problem."""
+    if isinstance(mode_cfg, BackwardConfig):
+        mode_cfg = mode_cfg.to_implicit()
+    return _estimators.estimate_cotangent(mode_cfg, vjp_z, w, H)

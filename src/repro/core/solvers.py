@@ -263,7 +263,7 @@ def adjoint_broyden_solve(
     cfg: SolverConfig,
     *,
     outer_grad: Callable[[Array], Array] | None = None,
-    sigma_mode: str = "residual",
+    sigma_from_step: bool = False,  # secant direction: step instead of residual
 ) -> SolveResult:
     """Adjoint Broyden: secant ``sigma^T B_{n+1} = sigma^T J_g(z_{n+1})``.
 
@@ -314,10 +314,10 @@ def adjoint_broyden_solve(
         z_new = jnp.where(am, z + cfg.step_size * p.astype(z.dtype), z)
         gz_new = jnp.where(am, g(z_new), gz)
 
-        if sigma_mode == "residual":
-            sigma = gz_new.astype(jnp.float32)
-        else:  # step direction
+        if sigma_from_step:
             sigma = (z_new - z).astype(jnp.float32)
+        else:
+            sigma = gz_new.astype(jnp.float32)
         B2, H2 = update_chains(B, H, z_new, sigma, active)
 
         if outer_grad is not None and cfg.opa_freq > 0:

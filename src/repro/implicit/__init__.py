@@ -1,0 +1,69 @@
+"""Unified pytree-native implicit-differentiation API.
+
+This package is the single public entry point for the paper's technique —
+sharing the forward quasi-Newton inverse estimate with the backward pass —
+for BOTH problem classes it covers:
+
+  * implicit models (DEQ / MDEQ / DEQ-LM): ``implicit_fixed_point``
+  * bi-level / hyperparameter optimization: ``core.bilevel.run_hoag``,
+    whose hypergradient estimators dispatch through the same registry.
+
+Selection of forward solvers and backward cotangent estimators goes
+through decorator-based registries (``SOLVERS`` / ``ESTIMATORS``); unknown
+names raise errors listing the registered options.  See API.md at the repo
+root for the full surface and the paper-mode -> estimator-name table.
+"""
+
+from repro.implicit.config import (
+    BackwardConfig,
+    ForwardConfig,
+    ImplicitConfig,
+)
+from repro.implicit.estimators import (
+    AdjointResult,
+    EstimatorContext,
+    adjoint_system,
+    bilevel_context,
+    deq_context,
+    estimate_cotangent,
+    estimate_hypergrad_cotangent,
+    fallback_cotangent,
+    jfb_cotangent,
+    shine_cotangent,
+    solve_adjoint,
+)
+from repro.implicit.fixed_point import ImplicitStats, implicit_fixed_point
+from repro.implicit.pytree import pack_state, ravel_state
+from repro.implicit.registry import (
+    ESTIMATORS,
+    SOLVERS,
+    Registry,
+    register_estimator,
+    register_solver,
+)
+
+__all__ = [
+    "AdjointResult",
+    "BackwardConfig",
+    "ESTIMATORS",
+    "EstimatorContext",
+    "ForwardConfig",
+    "ImplicitConfig",
+    "ImplicitStats",
+    "Registry",
+    "SOLVERS",
+    "adjoint_system",
+    "bilevel_context",
+    "deq_context",
+    "estimate_cotangent",
+    "estimate_hypergrad_cotangent",
+    "fallback_cotangent",
+    "implicit_fixed_point",
+    "jfb_cotangent",
+    "pack_state",
+    "ravel_state",
+    "register_estimator",
+    "register_solver",
+    "shine_cotangent",
+    "solve_adjoint",
+]

@@ -1,0 +1,106 @@
+"""Consolidated configuration for the implicit-differentiation API.
+
+``ImplicitConfig`` replaces the flat string-keyed ``DEQConfig`` with two
+explicit sub-configs plus the fields both passes genuinely share:
+
+  * ``forward``   — which registered solver finds ``z* = f(z*)`` and its
+                    iteration budget / tolerance,
+  * ``backward``  — which registered estimator produces the adjoint
+                    cotangent (paper §2 modes) and its budget / tolerance,
+  * ``memory``    — the quasi-Newton memory.  Shared on purpose: the
+                    forward chain of length ``memory`` IS the inverse
+                    estimate SHINE hands to the backward pass.
+  * ``unroll``    — dry-run costing mode threaded into every inner loop.
+
+All classes are frozen (hashable -> usable as jit static args).
+``ImplicitConfig.from_strings`` accepts the legacy ``DEQConfig`` field
+names so string-configured call sites migrate without touching their
+keyword arguments.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.solvers import SolverConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ForwardConfig:
+    """Forward (inner-problem) solve: find ``z* = f(z*)``."""
+
+    solver: str = "broyden"   # any name registered in implicit.SOLVERS
+    max_steps: int = 24
+    tol: float = 1e-4
+    step_size: float = 1.0
+    # adjoint-Broyden OPA extra updates every M steps (0 = off); requires
+    # an outer_grad fn passed to implicit_fixed_point
+    opa_freq: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class BackwardConfig:
+    """Backward (adjoint) cotangent estimate (paper §2)."""
+
+    estimator: str = "shine"  # any name registered in implicit.ESTIMATORS
+    max_steps: int = 30       # budget of the iterative part (full)
+    refine_steps: int = 5     # budget of the refine correction
+    tol: float = 1e-6
+    fallback_ratio: float = 1.3
+
+
+@dataclasses.dataclass(frozen=True)
+class ImplicitConfig:
+    forward: ForwardConfig = dataclasses.field(default_factory=ForwardConfig)
+    backward: BackwardConfig = dataclasses.field(default_factory=BackwardConfig)
+    memory: int = 24
+    unroll: bool = False
+
+    # -- internal solver-config builders ------------------------------------
+
+    def solver_cfg(self) -> SolverConfig:
+        f = self.forward
+        return SolverConfig(
+            max_steps=f.max_steps, tol=f.tol, memory=self.memory,
+            step_size=f.step_size, opa_freq=f.opa_freq, unroll=self.unroll,
+        )
+
+    def adjoint_cfg(self, steps: int) -> SolverConfig:
+        return SolverConfig(
+            max_steps=steps, tol=self.backward.tol, memory=self.memory,
+            relative=False, unroll=self.unroll,
+        )
+
+    # -- legacy-string shim --------------------------------------------------
+
+    @classmethod
+    def from_strings(
+        cls,
+        *,
+        solver: str = "broyden",
+        backward: str = "shine",
+        max_steps: int = 24,
+        tol: float = 1e-4,
+        memory: int = 24,
+        step_size: float = 1.0,
+        opa_freq: int = 0,
+        backward_max_steps: int = 30,
+        refine_steps: int = 5,
+        backward_tol: float = 1e-6,
+        fallback_ratio: float = 1.3,
+        unroll: bool = False,
+    ) -> "ImplicitConfig":
+        """Build from the legacy flat ``DEQConfig`` field names."""
+        return cls(
+            forward=ForwardConfig(
+                solver=solver, max_steps=max_steps, tol=tol,
+                step_size=step_size, opa_freq=opa_freq,
+            ),
+            backward=BackwardConfig(
+                estimator=backward, max_steps=backward_max_steps,
+                refine_steps=refine_steps, tol=backward_tol,
+                fallback_ratio=fallback_ratio,
+            ),
+            memory=memory,
+            unroll=unroll,
+        )

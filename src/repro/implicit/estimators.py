@@ -1,0 +1,305 @@
+"""Backward-pass cotangent estimators (paper §2) behind the registry.
+
+Given the fixed point ``z* = f(z*)`` (i.e. ``g(z) = z - f(z) = 0``) and the
+loss cotangent ``w = dL/dz*``, the true hypergradient needs
+
+    u^T = w^T J_g(z*)^{-1}        (then dL/dtheta = u^T df/dtheta).
+
+Registered estimators (each returns an ``AdjointResult`` with ``u``):
+
+  * ``full``            solve the adjoint linear system iteratively (the
+                        original DEQ backward / the HOAG CG baseline).
+  * ``shine``           u = H^T w, where H is the forward pass's
+                        quasi-Newton inverse estimate.  Zero extra solves:
+                        THE paper.
+  * ``jfb``             u = w (Fung et al. 2021: J^{-1} ~ I).
+  * ``shine_fallback``  shine, guarded per sample: if
+                        ||u_shine|| > ratio * ||w|| fall back to JFB
+                        (paper §3 "fallback strategy", ratio 1.3).
+  * ``shine_refine``    iterative correction *initialized* at the guarded
+                        shine estimate, warm-started with the forward qN
+                        chain (paper §2.1 "refine strategy").
+  * ``jfb_refine``      the same correction initialized at the JFB estimate.
+
+The estimators are written once against an ``EstimatorContext`` and serve
+BOTH problem classes: the DEQ adjoint (batched Broyden on
+``(I - J_f)^T u = w`` with a ``LowRank`` shared inverse) and the bi-level
+hypergradient (CG on ``Hess q = w`` with the shared L-BFGS two-loop
+inverse).  The sharing logic therefore lives in exactly one place.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lowrank import LowRank, _expand, bnorm
+from repro.core.solvers import (
+    LBFGSMemory,
+    SolveResult,
+    SolverConfig,
+    _lbfgs_gamma,
+    broyden_solve,
+    lbfgs_two_loop,
+)
+from repro.implicit.registry import ESTIMATORS, register_estimator
+
+if TYPE_CHECKING:
+    from repro.implicit.config import ImplicitConfig
+
+Array = jax.Array
+
+
+class AdjointResult(NamedTuple):
+    u: Array               # cotangent estimate (same shape as w)
+    residual: Array        # final adjoint-system residual (nan if n/a)
+    n_steps: Array         # () iterations / operator calls of the iterative part
+    fallback_mask: Array   # samples where the fallback guard fired
+
+
+@dataclasses.dataclass
+class EstimatorContext:
+    """Everything an estimator may use, independent of the problem class.
+
+    ``apply_inverse``  the SHINE operation: apply the shared (transposed)
+                       inverse estimate to a cotangent.
+    ``solve``          ``(b, u0, steps, warm) -> (u, residual, n_steps)``:
+                       iteratively solve the adjoint system ``A u = b``
+                       starting at ``u0`` (``None`` = the solver's default
+                       start); ``warm=True`` additionally warm-starts the
+                       solver with the forward chain where supported.
+    ``norm``/``select`` per-sample norm and masked select, shaped for the
+                       problem class ((B,)-batched for DEQ, scalar for
+                       bi-level).
+    """
+
+    w: Array
+    apply_inverse: Callable[[Array], Array]
+    solve: Callable[[Array, Array | None, int, bool], tuple[Array, Array, Array]]
+    norm: Callable[[Array], Array]
+    select: Callable[[Array, Array, Array], Array]
+    no_fallback: Array
+    nan_residual: Array
+
+
+# ---------------------------------------------------------------------------
+# Primitive cotangent operations (shared by estimators and direct callers)
+# ---------------------------------------------------------------------------
+
+
+def shine_cotangent(H: LowRank, w: Array) -> Array:
+    """u = H^T w — share the inverse estimate. O(m·d), no extra solve."""
+    return H.rmatvec(w)
+
+
+def jfb_cotangent(w: Array) -> Array:
+    return w
+
+
+def _fallback_rule(apply_inverse, norm, select, w: Array,
+                   ratio: float) -> tuple[Array, Array]:
+    """Paper §3: monitor the norm of the SHINE inversion against the (free)
+    JFB inversion; a blown-up norm is the telltale sign of a bad inverse.
+    The single home of the guard — both the ``fallback_cotangent``
+    primitive and the registered estimators go through here."""
+    u_shine = apply_inverse(w)
+    bad = norm(u_shine) > ratio * norm(w)
+    return select(bad, w, u_shine), bad
+
+
+def fallback_cotangent(H: LowRank, w: Array, ratio: float = 1.3) -> tuple[Array, Array]:
+    """The guard applied to a ``LowRank`` shared inverse (batched DEQ form)."""
+    return _fallback_rule(
+        lambda v: shine_cotangent(H, v), bnorm,
+        lambda mask, a, b: jnp.where(_expand(mask, a), a, b), w, ratio,
+    )
+
+
+def adjoint_system(vjp_z: Callable[[Array], Array], w: Array) -> Callable[[Array], Array]:
+    """Residual of the adjoint fixed point: psi(u) = u - J_f^T u - w.
+
+    psi(u) = 0  <=>  (I - J_f)^T u = w  <=>  u^T J_g = w^T with g = id - f.
+    """
+
+    def psi(u: Array) -> Array:
+        return u - vjp_z(u) - w
+
+    return psi
+
+
+def solve_adjoint(
+    vjp_z: Callable[[Array], Array],
+    w: Array,
+    cfg: SolverConfig,
+    *,
+    u0: Array | None = None,
+    init_lowrank: LowRank | None = None,
+) -> SolveResult:
+    """Iteratively solve the adjoint system with Broyden (original backward)."""
+    psi = adjoint_system(vjp_z, w)
+    u0 = w if u0 is None else u0
+    return broyden_solve(psi, u0, cfg, init_lowrank=init_lowrank)
+
+
+# ---------------------------------------------------------------------------
+# Registered estimators (context-generic)
+# ---------------------------------------------------------------------------
+
+
+def _guarded_shine(cfg: "ImplicitConfig", ctx: EstimatorContext) -> tuple[Array, Array]:
+    return _fallback_rule(ctx.apply_inverse, ctx.norm, ctx.select, ctx.w,
+                          cfg.backward.fallback_ratio)
+
+
+@register_estimator("jfb")
+def _jfb(cfg: "ImplicitConfig", ctx: EstimatorContext) -> AdjointResult:
+    return AdjointResult(jfb_cotangent(ctx.w), ctx.nan_residual,
+                         jnp.int32(0), ctx.no_fallback)
+
+
+@register_estimator("shine")
+def _shine(cfg: "ImplicitConfig", ctx: EstimatorContext) -> AdjointResult:
+    return AdjointResult(ctx.apply_inverse(ctx.w), ctx.nan_residual,
+                         jnp.int32(0), ctx.no_fallback)
+
+
+@register_estimator("shine_fallback")
+def _shine_fallback(cfg: "ImplicitConfig", ctx: EstimatorContext) -> AdjointResult:
+    u, bad = _guarded_shine(cfg, ctx)
+    return AdjointResult(u, ctx.nan_residual, jnp.int32(0), bad)
+
+
+@register_estimator("shine_refine")
+def _shine_refine(cfg: "ImplicitConfig", ctx: EstimatorContext) -> AdjointResult:
+    u0, bad = _guarded_shine(cfg, ctx)
+    u, residual, n = ctx.solve(ctx.w, u0, cfg.backward.refine_steps, True)
+    return AdjointResult(u, residual, n, bad)
+
+
+@register_estimator("jfb_refine")
+def _jfb_refine(cfg: "ImplicitConfig", ctx: EstimatorContext) -> AdjointResult:
+    u, residual, n = ctx.solve(ctx.w, jfb_cotangent(ctx.w),
+                               cfg.backward.refine_steps, False)
+    return AdjointResult(u, residual, n, ctx.no_fallback)
+
+
+@register_estimator("full")
+def _full(cfg: "ImplicitConfig", ctx: EstimatorContext) -> AdjointResult:
+    u, residual, n = ctx.solve(ctx.w, None, cfg.backward.max_steps, False)
+    return AdjointResult(u, residual, n, ctx.no_fallback)
+
+
+# ---------------------------------------------------------------------------
+# Context builders for the two problem classes
+# ---------------------------------------------------------------------------
+
+
+def deq_context(
+    cfg: "ImplicitConfig",
+    vjp_z: Callable[[Array], Array],
+    w: Array,
+    H: LowRank,
+) -> EstimatorContext:
+    """DEQ adjoint: batched Broyden on ``(I - J_f)^T u = w``; the shared
+    inverse is the forward Broyden chain (transposed for warm starts)."""
+    bsz = w.shape[0]
+
+    def solve(b, u0, steps, warm):
+        res = solve_adjoint(
+            vjp_z, b, cfg.adjoint_cfg(steps),
+            u0=u0, init_lowrank=(H.transpose() if warm else None),
+        )
+        return res.z, res.residual, res.n_steps
+
+    return EstimatorContext(
+        w=w,
+        apply_inverse=lambda v: shine_cotangent(H, v),
+        solve=solve,
+        norm=bnorm,
+        select=lambda mask, a, b: jnp.where(_expand(mask, a), a, b),
+        no_fallback=jnp.zeros((bsz,), bool),
+        nan_residual=jnp.full((bsz,), jnp.nan, jnp.float32),
+    )
+
+
+def bilevel_context(
+    cfg: "ImplicitConfig",
+    hvp: Callable[[Array], Array],
+    w: Array,
+    mem: LBFGSMemory,
+) -> EstimatorContext:
+    """Bi-level hypergradient: CG on ``Hess q = w``; the shared inverse is
+    the forward L-BFGS memory applied via the two-loop recursion (H is
+    symmetric, so apply == apply-transpose).  ``n_steps`` counts HVP calls."""
+    gamma = _lbfgs_gamma(mem)
+
+    def solve(b, u0, steps, warm):
+        x0 = jnp.zeros_like(b) if u0 is None else u0
+        q, k = _cg(hvp, b, x0, steps, cfg.backward.tol)
+        return q, jnp.float32(jnp.nan), k
+
+    return EstimatorContext(
+        w=w,
+        apply_inverse=lambda v: lbfgs_two_loop(mem, v, gamma),
+        solve=solve,
+        norm=jnp.linalg.norm,
+        select=jnp.where,
+        no_fallback=jnp.zeros((), bool),
+        nan_residual=jnp.float32(jnp.nan),
+    )
+
+
+def _cg(hvp: Callable[[Array], Array], b: Array, x0: Array, steps: int,
+        tol: float) -> tuple[Array, Array]:
+    """Plain conjugate gradient on a PD system; returns (x, iters)."""
+
+    def cond(state):
+        _, r, _, k, done = state
+        return (k < steps) & ~done
+
+    def body(state):
+        x, r, p, k, _ = state
+        hp = hvp(p)
+        rr = jnp.dot(r, r)
+        alpha = rr / jnp.maximum(jnp.dot(p, hp), 1e-30)
+        x = x + alpha * p
+        r_new = r - alpha * hp
+        beta = jnp.dot(r_new, r_new) / jnp.maximum(rr, 1e-30)
+        p = r_new + beta * p
+        done = jnp.linalg.norm(r_new) < tol
+        return (x, r_new, p, k + 1, done)
+
+    r0 = b - hvp(x0)
+    state = (x0, r0, r0, jnp.int32(0), jnp.linalg.norm(r0) < tol)
+    x, r, p, k, done = jax.lax.while_loop(cond, body, state)
+    return x, k
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+
+def estimate_cotangent(
+    cfg: "ImplicitConfig",
+    vjp_z: Callable[[Array], Array],
+    w: Array,
+    H: LowRank,
+) -> AdjointResult:
+    """Run the configured estimator on the DEQ adjoint problem."""
+    estimator = ESTIMATORS.get(cfg.backward.estimator)
+    return estimator(cfg, deq_context(cfg, vjp_z, w, H))
+
+
+def estimate_hypergrad_cotangent(
+    cfg: "ImplicitConfig",
+    hvp: Callable[[Array], Array],
+    w: Array,
+    mem: LBFGSMemory,
+) -> AdjointResult:
+    """Run the configured estimator on the bi-level hypergradient problem."""
+    estimator = ESTIMATORS.get(cfg.backward.estimator)
+    return estimator(cfg, bilevel_context(cfg, hvp, w, mem))

@@ -1,0 +1,120 @@
+"""The pytree-native differentiable fixed point: SHINE's forward/backward.
+
+``implicit_fixed_point(f, params, x, z0, cfg)`` computes ``z* = f(params,
+x, z*)`` with the registered forward solver and registers a ``custom_vjp``
+that implements Theorem 1's hypergradient with the registered cotangent
+estimator (full / shine / jfb / fallback / refine — see
+implicit/estimators.py).
+
+``z0`` may be ANY pytree of ``(B, ...)`` arrays — a bare activation, a
+tuple of per-scale feature maps (MDEQ), a dict of module states.  The
+state is packed to one solver buffer internally (implicit/pytree.py); a
+single-leaf state passes through unflattened so TP-sharded LM activations
+keep their sharding.
+
+Memory behaviour matches the paper's O(1) claim: the residuals saved for
+backward are (params, x, z*, qN chain) — no unrolled activations.  The
+backward evaluates one fresh VJP of f at z*.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.implicit.config import ImplicitConfig
+from repro.implicit.estimators import estimate_cotangent
+from repro.implicit.pytree import ravel_state
+from repro.implicit.registry import SOLVERS
+
+# populate the registry with the built-in solvers on import
+from repro.implicit import solvers as _builtin_solvers  # noqa: F401
+
+Array = jax.Array
+Pytree = Any
+
+
+class ImplicitStats(NamedTuple):
+    residual: Array    # (B,) forward residual at z*
+    n_steps: Array     # () forward iterations
+    converged: Array   # (B,)
+    trace: Array       # (max_steps, B)
+
+
+def _solve_forward(f_z, z0, cfg: ImplicitConfig, outer_grad=None):
+    solver = SOLVERS.get(cfg.forward.solver)
+    return solver(f_z, z0, cfg.solver_cfg(), outer_grad=outer_grad)
+
+
+def _bind_outer(outer_grad, params, x):
+    if outer_grad is None:
+        return None
+    return lambda z: outer_grad(params, x, z)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _implicit(f, cfg: ImplicitConfig, outer_grad, params, x, z0):
+    res = _solve_forward(lambda z: f(params, x, z), z0, cfg,
+                         _bind_outer(outer_grad, params, x))
+    stats = ImplicitStats(res.residual, res.n_steps, res.converged, res.trace)
+    return res.z, stats
+
+
+def _implicit_fwd(f, cfg: ImplicitConfig, outer_grad, params, x, z0):
+    res = _solve_forward(lambda z: f(params, x, z), z0, cfg,
+                         _bind_outer(outer_grad, params, x))
+    stats = ImplicitStats(res.residual, res.n_steps, res.converged, res.trace)
+    return (res.z, stats), (params, x, res.z, res.lowrank)
+
+
+def _implicit_bwd(f, cfg: ImplicitConfig, outer_grad, saved, cotangents):
+    params, x, z_star, H = saved
+    w, _stats_bar = cotangents  # stats carry no gradient
+
+    # One VJP of f at the fixed point (recompute — O(1) memory).
+    _, vjp = jax.vjp(lambda p, xx, z: f(p, xx, z), params, x, z_star)
+    vjp_z = lambda u: vjp(u.astype(z_star.dtype))[2]
+
+    adj = estimate_cotangent(cfg, vjp_z, w, H)
+    p_bar, x_bar, _ = vjp(adj.u.astype(z_star.dtype))
+    z0_bar = jnp.zeros_like(z_star)  # init point does not influence z*
+    return p_bar, x_bar, z0_bar
+
+
+_implicit.defvjp(_implicit_fwd, _implicit_bwd)
+
+
+def implicit_fixed_point(
+    f: Callable[[Any, Any, Pytree], Pytree],
+    params: Any,
+    x: Any,
+    z0: Pytree,
+    cfg: ImplicitConfig,
+    *,
+    outer_grad: Callable[[Any, Any, Pytree], Pytree] | None = None,
+) -> tuple[Pytree, ImplicitStats]:
+    """Differentiable fixed point of ``z = f(params, x, z)`` over pytrees.
+
+    ``f`` must map a state pytree to one of identical structure/shapes.
+    ``outer_grad(params, x, z) -> dL/dz`` (same pytree structure) enables
+    OPA extra updates in the adjoint-Broyden forward (paper §2.3); leave
+    None otherwise.
+
+    IMPORTANT: everything traced must flow through the differentiable args
+    ``(params, x, z0)``, never through f's closure (tracer leak otherwise).
+    """
+    z0_flat, unravel = ravel_state(z0)
+
+    def f_flat(p, xx, z_flat):
+        return ravel_state(f(p, xx, unravel(z_flat)))[0]
+
+    outer_flat = None
+    if outer_grad is not None:
+        def outer_flat(p, xx, z_flat):  # noqa: F811
+            return ravel_state(outer_grad(p, xx, unravel(z_flat)))[0]
+
+    z_flat, stats = _implicit(f_flat, cfg, outer_flat, params, x, z0_flat)
+    return unravel(z_flat), stats

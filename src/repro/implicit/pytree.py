@@ -1,0 +1,92 @@
+"""Pytree <-> flat solver-state packing.
+
+The quasi-Newton solvers operate on a single batched array ``(B, *F)`` —
+the ``LowRank`` inverse estimate needs one uniform buffer per rank-one
+term.  Callers, however, carry structured states: MDEQ's per-scale feature
+maps, or a plain ``(B, S, d)`` activation for the DEQ-LM.
+
+``ravel_state`` bridges the two:
+
+  * a **single-leaf** pytree passes through untouched — no reshape, no
+    concatenate — so TP-sharded LM states keep their sharding and the
+    LowRank chain contracts over the original feature axes (see
+    core/lowrank.py);
+  * a **multi-leaf** pytree is flattened to ``(B, D)``: each leaf
+    ``(B, *f_i)`` is reshaped to ``(B, prod(f_i))`` (cast to a common
+    dtype) and concatenated.  ``unravel`` restores shapes AND dtypes
+    exactly, so the round trip is lossless for the usual f32/bf16 mixes.
+
+This is the module-level port of the old ``core.deq.pack_state`` helper.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def ravel_state(tree: Any) -> tuple[Array, Callable[[Array], Any]]:
+    """Pack a pytree of ``(B, ...)`` arrays into one solver state.
+
+    Returns ``(flat, unravel)`` where ``unravel(flat_like) -> tree_like``
+    restores the original structure, shapes and dtypes.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if not leaves:
+        raise ValueError("implicit state pytree has no array leaves")
+
+    if len(leaves) == 1:
+        # fast path: the solvers already handle (B, *F) states natively;
+        # skipping the reshape keeps any sharding of the feature axes.
+        return leaves[0], lambda z: jax.tree_util.tree_unflatten(treedef, [z])
+
+    bsz = leaves[0].shape[0]
+    for leaf in leaves:
+        if leaf.ndim < 1 or leaf.shape[0] != bsz:
+            raise ValueError(
+                "implicit state leaves must share a leading batch axis; got "
+                f"shapes {[tuple(l.shape) for l in leaves]}"
+            )
+    shapes = [leaf.shape for leaf in leaves]
+    dtypes = [leaf.dtype for leaf in leaves]
+    sizes = [math.prod(s[1:]) for s in shapes]
+    common = jnp.result_type(*dtypes)
+    flat = jnp.concatenate(
+        [leaf.astype(common).reshape(bsz, -1) for leaf in leaves], axis=1
+    )
+
+    def unravel(z: Array) -> Any:
+        outs, off = [], 0
+        for s, n, dt in zip(shapes, sizes, dtypes):
+            piece = z[:, off:off + n].reshape((z.shape[0],) + s[1:])
+            outs.append(piece.astype(dt))
+            off += n
+        return jax.tree_util.tree_unflatten(treedef, outs)
+
+    return flat, unravel
+
+
+def pack_state(leaves: list[Array]) -> tuple[Array, Callable[[Array], list[Array]]]:
+    """Legacy helper: pack per-scale maps ``[(B, ...), ...]`` into ``(B, D)``.
+
+    Kept for callers of the old ``core.deq.pack_state``; always flattens
+    (even a single leaf) and unpacks to a list.
+    """
+    bsz = leaves[0].shape[0]
+    shapes = [leaf.shape for leaf in leaves]
+    sizes = [math.prod(s[1:]) for s in shapes]
+    flat = jnp.concatenate([leaf.reshape(bsz, -1) for leaf in leaves], axis=1)
+
+    def unpack(z: Array) -> list[Array]:
+        outs, off = [], 0
+        for s, n in zip(shapes, sizes):
+            outs.append(z[:, off:off + n].reshape((z.shape[0],) + s[1:]))
+            off += n
+        return outs
+
+    return flat, unpack

@@ -1,0 +1,53 @@
+"""Registered forward fixed-point solvers.
+
+Thin adapters from the registry's uniform signature
+
+    solver(f, z0, cfg, *, outer_grad=None) -> SolveResult
+
+(where ``f(z) -> z`` is the fixed-point map) onto the quasi-Newton root
+solvers in ``core/solvers.py``, which variously want the residual
+``g(z) = z - f(z)`` (Broyden family) or ``f`` itself (Picard/Anderson).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+from repro.core.solvers import (
+    SolveResult,
+    SolverConfig,
+    adjoint_broyden_solve,
+    anderson_solve,
+    broyden_solve,
+    fixed_point_solve,
+)
+from repro.implicit.registry import register_solver
+
+Array = jax.Array
+
+
+@register_solver("broyden")
+def _broyden(f: Callable[[Array], Array], z0: Array, cfg: SolverConfig, *,
+             outer_grad=None) -> SolveResult:
+    return broyden_solve(lambda z: z - f(z), z0, cfg)
+
+
+@register_solver("adjoint_broyden")
+def _adjoint_broyden(f: Callable[[Array], Array], z0: Array, cfg: SolverConfig, *,
+                     outer_grad=None) -> SolveResult:
+    return adjoint_broyden_solve(lambda z: z - f(z), z0, cfg,
+                                 outer_grad=outer_grad)
+
+
+@register_solver("fixed_point")
+def _fixed_point(f: Callable[[Array], Array], z0: Array, cfg: SolverConfig, *,
+                 outer_grad=None) -> SolveResult:
+    return fixed_point_solve(f, z0, cfg)
+
+
+@register_solver("anderson")
+def _anderson(f: Callable[[Array], Array], z0: Array, cfg: SolverConfig, *,
+              outer_grad=None) -> SolveResult:
+    return anderson_solve(f, z0, cfg)

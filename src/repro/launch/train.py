@@ -17,6 +17,7 @@ from repro.configs.base import TrainConfig
 from repro.configs.registry import ARCHS, get_config, smoke_config
 from repro.configs.shapes import SHAPES, make_ctx
 from repro.data.pipeline import make_lm_batch_iterator
+from repro.implicit import ESTIMATORS, SOLVERS
 from repro.launch.mesh import make_production_mesh
 from repro.parallel.sharding import ShardCtx
 from repro.runtime.trainer import Trainer
@@ -29,9 +30,10 @@ def main() -> None:
                     help="reduced same-family config (CPU-runnable)")
     ap.add_argument("--deq", action="store_true",
                     help="DEQ/SHINE form: weight-tied fixed-point backbone")
-    ap.add_argument("--backward", default=None,
-                    help="DEQ backward mode: full|shine|jfb|shine_fallback|"
-                         "shine_refine|jfb_refine")
+    ap.add_argument("--backward", default=None, choices=ESTIMATORS.names(),
+                    help="DEQ backward cotangent estimator")
+    ap.add_argument("--solver", default=None, choices=SOLVERS.names(),
+                    help="DEQ forward fixed-point solver")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -45,9 +47,13 @@ def main() -> None:
 
     cfg = smoke_config(args.arch, deq=args.deq) if args.smoke \
         else get_config(args.arch, deq=args.deq)
-    if args.deq and args.backward:
-        cfg = dataclasses.replace(
-            cfg, deq=dataclasses.replace(cfg.deq, backward=args.backward))
+    if args.deq and (args.backward or args.solver):
+        deq = cfg.deq
+        if args.backward:
+            deq = dataclasses.replace(deq, backward=args.backward)
+        if args.solver:
+            deq = dataclasses.replace(deq, solver=args.solver)
+        cfg = dataclasses.replace(cfg, deq=deq)
 
     if args.mesh == "none":
         ctx = ShardCtx.for_mesh(None)

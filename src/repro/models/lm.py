@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.deq import DEQConfig, deq_fixed_point
+from repro.implicit import ImplicitConfig, implicit_fixed_point
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
@@ -362,7 +362,9 @@ def _apply_deq(params, x_emb, cfg, ctx, positions, caches, cache_index, train):
     kind = _deq_kind(cfg)
     shared = params.get("shared_attn")
 
-    deq_cfg = DEQConfig(
+    # single-array state: implicit_fixed_point keeps (B, S, d) unflattened,
+    # so TP-sharded activations stay sharded through the solver
+    deq_cfg = ImplicitConfig.from_strings(
         solver=d.solver, max_steps=d.max_steps, tol=d.tol, memory=d.memory,
         backward=d.backward, refine_steps=d.refine_steps,
         backward_max_steps=d.backward_max_steps, unroll=d.unroll,
@@ -385,7 +387,7 @@ def _apply_deq(params, x_emb, cfg, ctx, positions, caches, cache_index, train):
             return ctx.constrain(h, ("batch", "seq_res", "embed_act"))
 
         z0 = jnp.zeros_like(x_emb)
-        z_star, stats = deq_fixed_point(f, p_all, (x_emb, positions), z0, deq_cfg)
+        z_star, stats = implicit_fixed_point(f, p_all, (x_emb, positions), z0, deq_cfg)
         aux = {"moe_aux": jnp.float32(0.0), "moe_z": jnp.float32(0.0),
                "deq_residual": jnp.mean(stats.residual),
                "deq_steps": stats.n_steps.astype(jnp.float32)}
@@ -404,7 +406,7 @@ def _apply_deq(params, x_emb, cfg, ctx, positions, caches, cache_index, train):
         return h
 
     z0 = jnp.zeros_like(x_emb)
-    z_star, stats = deq_fixed_point(
+    z_star, stats = implicit_fixed_point(
         f_dec, p_all, (x_emb, positions, caches, cache_index), z0, deq_cfg
     )
     # one more pass to materialize the updated caches at the fixed point

@@ -1,8 +1,9 @@
 """Multiscale DEQ (Bai et al. 2020) — the paper's CIFAR/ImageNet model.
 
 Two-scale residual conv trunk solved to a fixed point; the multiscale state
-(z1, z2) is packed into one flat (B, D) vector for the quasi-Newton solver
-(core.deq.pack_state). Classification head: per-scale pooling + linear.
+``(z1, z2)`` is passed to ``implicit_fixed_point`` as a pytree — the
+implicit package packs it into one flat solver state internally
+(implicit/pytree.py).  Classification head: per-scale pooling + linear.
 
 This is the exact experimental vehicle of paper §3.2 / Tables E.2-E.3,
 scaled to this container (DESIGN.md §8): same solver (limited-memory
@@ -18,7 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.mdeq_cifar import MDEQConfig
-from repro.core.deq import DEQConfig, DEQStats, deq_fixed_point, pack_state
+from repro.core.deq import DEQConfig, as_implicit_config
+from repro.implicit import ImplicitConfig, ImplicitStats, implicit_fixed_point
 from repro.parallel.sharding import ParamDecl, init_tree
 
 Array = jax.Array
@@ -104,18 +106,25 @@ def mdeq_f(params: dict, x_feats: tuple[Array, Array], z: tuple[Array, Array],
     return z1n, z2n
 
 
-def mdeq_forward(
-    params: dict, images: Array, cfg: MDEQConfig,
-    deq_cfg: DEQConfig | None = None,
-) -> tuple[Array, DEQStats]:
-    """images (B, H, W, 3) -> (logits, solver stats)."""
+def implicit_config(cfg: MDEQConfig,
+                    deq_cfg: DEQConfig | ImplicitConfig | None = None) -> ImplicitConfig:
+    """Resolve the solver/estimator config for an MDEQ forward/backward."""
     if deq_cfg is None:
-        deq_cfg = DEQConfig(
+        return ImplicitConfig.from_strings(
             solver=cfg.solver, max_steps=cfg.max_steps, tol=cfg.tol,
             memory=cfg.memory, backward=cfg.backward,
             refine_steps=cfg.refine_steps,
             backward_max_steps=cfg.backward_max_steps,
         )
+    return as_implicit_config(deq_cfg)
+
+
+def mdeq_forward(
+    params: dict, images: Array, cfg: MDEQConfig,
+    deq_cfg: DEQConfig | ImplicitConfig | None = None,
+) -> tuple[Array, ImplicitStats]:
+    """images (B, H, W, 3) -> (logits, solver stats)."""
+    icfg = implicit_config(cfg, deq_cfg)
     b = images.shape[0]
     c1, c2 = cfg.channels
     x1 = jax.nn.relu(_conv(images, params["stem"]))
@@ -123,15 +132,12 @@ def mdeq_forward(
 
     s1 = (b, cfg.image_size, cfg.image_size, c1)
     s2 = (b, cfg.image_size // 2, cfg.image_size // 2, c2)
-    z0_flat, unpack = pack_state([jnp.zeros(s1, x1.dtype), jnp.zeros(s2, x1.dtype)])
+    z0 = (jnp.zeros(s1, x1.dtype), jnp.zeros(s2, x1.dtype))
 
-    def f(p, xf, zflat):
-        z1, z2 = unpack(zflat)
-        z1n, z2n = mdeq_f(p, xf, (z1, z2), cfg)
-        return pack_state([z1n, z2n])[0]
+    def f(p, xf, z):
+        return mdeq_f(p, xf, z, cfg)
 
-    z_star, stats = deq_fixed_point(f, params, (x1, x2), z0_flat, deq_cfg)
-    z1, z2 = unpack(z_star)
+    (z1, z2), stats = implicit_fixed_point(f, params, (x1, x2), z0, icfg)
 
     h = params["head"]
     f1 = jax.nn.relu(_gn(h["gn1"], z1, cfg.groups)).mean(axis=(1, 2))
@@ -142,7 +148,7 @@ def mdeq_forward(
 
 
 def mdeq_loss(params: dict, batch: dict, cfg: MDEQConfig,
-              deq_cfg: DEQConfig | None = None):
+              deq_cfg: DEQConfig | ImplicitConfig | None = None):
     logits, stats = mdeq_forward(params, batch["images"], cfg, deq_cfg)
     labels = batch["labels"]
     logp = jax.nn.log_softmax(logits.astype(jnp.float32))

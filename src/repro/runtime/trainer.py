@@ -20,6 +20,7 @@ from jax.sharding import Mesh, NamedSharding
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import ModelConfig, TrainConfig
+from repro.implicit import ESTIMATORS, SOLVERS
 from repro.models import lm
 from repro.optim.optimizers import (
     OptState,
@@ -56,6 +57,10 @@ class Trainer:
         loss_fn: Callable | None = None,
     ):
         self.cfg, self.tcfg, self.ctx = cfg, tcfg, ctx
+        if cfg.deq.enabled:
+            # fail fast (with the registered options listed) before jit
+            SOLVERS.get(cfg.deq.solver)
+            ESTIMATORS.get(cfg.deq.backward)
         self.loss_fn = loss_fn or (
             lambda p, b: lm.loss_fn(p, b, cfg, ctx, z_loss=tcfg.z_loss)
         )

@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 test runner: one command locally and in CI.
+#
+#   ./test.sh              run the whole suite (quiet)
+#   ./test.sh tests/x.py   pass any pytest args through
+set -euo pipefail
+cd "$(dirname "$0")"
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# force the host CPU platform: tests must not try to grab an accelerator,
+# and multi-device tests spawn subprocesses that set their own flags.
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+exec python -m pytest -q "$@"

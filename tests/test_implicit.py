@@ -1,0 +1,277 @@
+"""Coverage for the unified ``repro.implicit`` API: registries, pytree
+states, config shims, and parity with the legacy flat-array path."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.mdeq_cifar import MDEQConfig
+from repro.core.bilevel import resolve_hoag_mode
+from repro.core.deq import DEQConfig, deq_fixed_point
+from repro.core.solvers import fixed_point_solve
+from repro.implicit import (
+    ESTIMATORS,
+    SOLVERS,
+    AdjointResult,
+    BackwardConfig,
+    ForwardConfig,
+    ImplicitConfig,
+    implicit_fixed_point,
+    pack_state,
+    ravel_state,
+    register_estimator,
+    register_solver,
+)
+from repro.models import mdeq
+
+B, D = 3, 10
+KEY = jax.random.PRNGKey(0)
+W0 = 0.3 * jax.random.normal(jax.random.fold_in(KEY, 1), (D, D)) / np.sqrt(D)
+X = jax.random.normal(jax.random.fold_in(KEY, 2), (B, D))
+
+
+def f(params, x, z):
+    return jnp.tanh(z @ params.T + x)
+
+
+def _loss(params, cfg):
+    z, _ = implicit_fixed_point(f, params, X, jnp.zeros((B, D)), cfg)
+    return jnp.sum(z ** 2)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_solver_error_lists_registered():
+    cfg = ImplicitConfig(forward=ForwardConfig(solver="no_such_solver"))
+    with pytest.raises(ValueError) as e:
+        implicit_fixed_point(f, W0, X, jnp.zeros((B, D)), cfg)
+    msg = str(e.value)
+    assert "no_such_solver" in msg
+    for name in ("broyden", "anderson", "fixed_point", "adjoint_broyden"):
+        assert name in msg
+
+
+def test_unknown_estimator_error_lists_registered():
+    cfg = ImplicitConfig(backward=BackwardConfig(estimator="no_such_estimator"))
+    with pytest.raises(ValueError) as e:
+        jax.grad(lambda p: _loss(p, cfg))(W0)
+    msg = str(e.value)
+    assert "no_such_estimator" in msg
+    for name in ("full", "shine", "jfb", "shine_fallback", "shine_refine"):
+        assert name in msg
+
+
+def test_unknown_hoag_mode_error_lists_options():
+    with pytest.raises(ValueError) as e:
+        resolve_hoag_mode("no_such_mode")
+    msg = str(e.value)
+    assert "full_cg" in msg and "shine_opa" in msg and "shine" in msg
+
+
+def test_hoag_passthrough_estimator_keeps_fallback_guard():
+    """Paper-table modes use the raw L-BFGS estimate (guard off), but a
+    pass-through estimator name must keep its guard ratio — selecting
+    shine_fallback as a mode must not silently degrade to plain shine."""
+    from repro.core.bilevel import HOAGConfig
+
+    assert HOAGConfig(mode="shine").implicit_cfg().backward.fallback_ratio \
+        == float("inf")
+    guarded = HOAGConfig(mode="shine_fallback").implicit_cfg().backward
+    assert guarded.estimator == "shine_fallback"
+    assert np.isfinite(guarded.fallback_ratio)
+
+
+def test_custom_solver_roundtrips_through_fixed_point():
+    name = "_test_damped_picard"
+
+    @register_solver(name)
+    def _damped(fz, z0, scfg, *, outer_grad=None):
+        return fixed_point_solve(fz, z0, scfg, damping=0.7)
+
+    try:
+        assert name in SOLVERS
+        cfg = ImplicitConfig(
+            forward=ForwardConfig(solver=name, max_steps=150, tol=1e-6),
+            memory=8,
+        )
+        z, stats = implicit_fixed_point(f, W0, X, jnp.zeros((B, D)), cfg)
+        # it really is the fixed point of f
+        np.testing.assert_allclose(np.asarray(z), np.asarray(f(W0, X, z)),
+                                   rtol=1e-4, atol=1e-4)
+        assert bool(stats.converged.all())
+    finally:
+        SOLVERS._entries.pop(name, None)
+
+
+def test_custom_estimator_roundtrips_through_gradient():
+    name = "_test_half_jfb"
+
+    @register_estimator(name)
+    def _half(cfg, ctx):
+        return AdjointResult(0.5 * ctx.w, ctx.nan_residual, jnp.int32(0),
+                             ctx.no_fallback)
+
+    try:
+        assert name in ESTIMATORS
+        base = ImplicitConfig(forward=ForwardConfig(max_steps=40, tol=1e-8),
+                              memory=40)
+        g_half = jax.grad(lambda p: _loss(
+            p, dataclasses.replace(base, backward=BackwardConfig(estimator=name))
+        ))(W0)
+        g_jfb = jax.grad(lambda p: _loss(
+            p, dataclasses.replace(base, backward=BackwardConfig(estimator="jfb"))
+        ))(W0)
+        np.testing.assert_allclose(np.asarray(g_half), 0.5 * np.asarray(g_jfb),
+                                   rtol=1e-5, atol=1e-6)
+    finally:
+        ESTIMATORS._entries.pop(name, None)
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError):
+        @register_solver("broyden")
+        def _clash(fz, z0, scfg, *, outer_grad=None):  # pragma: no cover
+            raise AssertionError
+
+
+# ---------------------------------------------------------------------------
+# Pytree state packing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tree_spec", [
+    # (shape, dtype) per leaf; structures exercise tuple/dict/nesting
+    [((2, 4, 3), jnp.float32), ((2, 5), jnp.float32)],
+    [((3, 2, 2, 2), jnp.bfloat16), ((3, 7), jnp.float32), ((3, 1), jnp.bfloat16)],
+    [((1, 6), jnp.float32)],
+])
+def test_ravel_state_roundtrip_preserves_shapes_and_dtypes(tree_spec):
+    leaves = [
+        jax.random.normal(jax.random.fold_in(KEY, i), shape).astype(dt)
+        for i, (shape, dt) in enumerate(tree_spec)
+    ]
+    if len(leaves) == 1:
+        tree = leaves[0]
+    else:
+        tree = {"a": leaves[0], "rest": tuple(leaves[1:])}
+    flat, unravel = ravel_state(tree)
+    back = unravel(flat)
+    got = jax.tree_util.tree_leaves(back)
+    assert jax.tree_util.tree_structure(back) == jax.tree_util.tree_structure(tree)
+    for orig, rec in zip(leaves, got):
+        assert orig.shape == rec.shape
+        assert orig.dtype == rec.dtype
+        np.testing.assert_allclose(np.asarray(rec, np.float32),
+                                   np.asarray(orig, np.float32), rtol=1e-6)
+
+
+def test_single_leaf_state_is_not_reshaped():
+    """(B, S, d) states must pass through unflattened (sharding contract)."""
+    z = jax.random.normal(KEY, (2, 5, 4))
+    flat, unravel = ravel_state(z)
+    assert flat is z                      # identity, not a (B, 20) copy
+    assert unravel(flat) is flat
+
+
+def test_ravel_state_rejects_mismatched_batch():
+    with pytest.raises(ValueError):
+        ravel_state((jnp.zeros((2, 3)), jnp.zeros((4, 3))))
+
+
+def test_legacy_pack_state_matches_ravel_state():
+    leaves = [jax.random.normal(jax.random.fold_in(KEY, 9), (2, 3, 2)),
+              jax.random.normal(jax.random.fold_in(KEY, 10), (2, 4))]
+    flat_old, unpack = pack_state(leaves)
+    flat_new, unravel = ravel_state(tuple(leaves))
+    np.testing.assert_array_equal(np.asarray(flat_old), np.asarray(flat_new))
+    for a, b in zip(unpack(flat_old), unravel(flat_new)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Config shims
+# ---------------------------------------------------------------------------
+
+
+def test_from_strings_maps_legacy_fields():
+    cfg = ImplicitConfig.from_strings(
+        solver="anderson", backward="shine_refine", max_steps=7, tol=1e-5,
+        memory=13, step_size=0.5, opa_freq=3, backward_max_steps=11,
+        refine_steps=4, backward_tol=1e-7, fallback_ratio=2.0, unroll=True,
+    )
+    assert cfg.forward == ForwardConfig(solver="anderson", max_steps=7,
+                                        tol=1e-5, step_size=0.5, opa_freq=3)
+    assert cfg.backward == BackwardConfig(estimator="shine_refine",
+                                          max_steps=11, refine_steps=4,
+                                          tol=1e-7, fallback_ratio=2.0)
+    assert cfg.memory == 13 and cfg.unroll is True
+    assert DEQConfig(
+        solver="anderson", backward="shine_refine", max_steps=7, tol=1e-5,
+        memory=13, step_size=0.5, opa_freq=3, backward_max_steps=11,
+        refine_steps=4, backward_tol=1e-7, fallback_ratio=2.0, unroll=True,
+    ).to_implicit() == cfg
+
+
+def test_deq_fixed_point_accepts_both_config_flavours():
+    old = DEQConfig(max_steps=40, tol=1e-8, memory=40, backward="shine")
+    z_old, _ = deq_fixed_point(f, W0, X, jnp.zeros((B, D)), old)
+    z_new, _ = implicit_fixed_point(f, W0, X, jnp.zeros((B, D)),
+                                    old.to_implicit())
+    np.testing.assert_array_equal(np.asarray(z_old), np.asarray(z_new))
+
+
+# ---------------------------------------------------------------------------
+# MDEQ pytree path vs the seed flat-array path
+# ---------------------------------------------------------------------------
+
+CFG = MDEQConfig(image_size=12, channels=(8, 16), max_steps=12, memory=12)
+
+
+def _mdeq_loss_flat(params, batch, cfg, deq_cfg):
+    """The seed path: manual pack_state around a flat-array DEQ solve."""
+    images = batch["images"]
+    b = images.shape[0]
+    x1 = jax.nn.relu(mdeq._conv(images, params["stem"]))
+    x2 = jax.nn.relu(mdeq._conv(x1, params["inj2"], stride=2))
+    s1 = (b, cfg.image_size, cfg.image_size, cfg.channels[0])
+    s2 = (b, cfg.image_size // 2, cfg.image_size // 2, cfg.channels[1])
+    z0_flat, unpack = pack_state(
+        [jnp.zeros(s1, x1.dtype), jnp.zeros(s2, x1.dtype)])
+
+    def f_flat(p, xf, zflat):
+        z1n, z2n = mdeq.mdeq_f(p, xf, tuple(unpack(zflat)), cfg)
+        return pack_state([z1n, z2n])[0]
+
+    z_star, _ = deq_fixed_point(f_flat, params, (x1, x2), z0_flat, deq_cfg)
+    z1, z2 = unpack(z_star)
+    h = params["head"]
+    f1 = jax.nn.relu(mdeq._gn(h["gn1"], z1, cfg.groups)).mean(axis=(1, 2))
+    f2 = jax.nn.relu(mdeq._gn(h["gn2"], z2, cfg.groups)).mean(axis=(1, 2))
+    logits = jnp.concatenate([f1, f2], axis=-1) @ h["w"] + h["b"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    return -jnp.take_along_axis(logp, batch["labels"][:, None], axis=1).mean()
+
+
+@pytest.mark.parametrize("backward", ["shine", "full"])
+def test_mdeq_pytree_hypergrads_match_seed_flat_path(backward):
+    params = mdeq.init_mdeq(CFG, jax.random.PRNGKey(0))
+    images, labels = mdeq.synthetic_cifar(4, CFG, seed=0)
+    batch = {"images": images, "labels": labels}
+    deq_cfg = DEQConfig(max_steps=12, tol=CFG.tol, memory=12,
+                        backward=backward, backward_max_steps=12)
+
+    g_tree = jax.grad(
+        lambda p: mdeq.mdeq_loss(p, batch, CFG, deq_cfg)[0])(params)
+    g_flat = jax.grad(
+        lambda p: _mdeq_loss_flat(p, batch, CFG, deq_cfg))(params)
+
+    for a, b in zip(jax.tree_util.tree_leaves(g_tree),
+                    jax.tree_util.tree_leaves(g_flat)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
