@@ -1,12 +1,17 @@
 """Kernel-layer bench: shape sweep of each Pallas kernel (interpret mode)
-against its jnp oracle — max abs error + oracle wall time (the CPU execution
-path's cost; TPU timings are the dry-run/roofline's business)."""
+against its jnp oracle — max abs error, wall time of the executing impl on
+this host, and the analytic HBM bytes the op moves (the TPU streaming
+model; wall-times on CPU are the oracle path's cost, byte counts are
+backend-independent).
+
+The qn_apply_multi rows are the PR's headline: U/V bytes per application
+set, fused vs. K separate qn_apply calls (uniform flags amortize to one
+U stream + one V stream regardless of K)."""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_xla import flash_attention_xla
@@ -16,10 +21,16 @@ from benchmarks.common import emit, timeit
 KEY = jax.random.PRNGKey(0)
 
 
+def _qn_bytes_moved(m, b, d, k, itemsize, transpose):
+    """U/V stream bytes + RHS in/out bytes for one fused application set."""
+    return (ops.qn_stream_bytes(m, b, d, itemsize, transpose)
+            + 2 * k * b * d * itemsize)
+
+
 def run() -> list[dict]:
     rows = []
 
-    # qn_apply sweep — THE SHINE op
+    # qn_apply sweep — THE SHINE op (single RHS, the backward-pass shape)
     for (m, b, d) in [(8, 4, 256), (16, 8, 1024), (30, 4, 4096)]:
         ks = jax.random.split(jax.random.fold_in(KEY, m + d), 3)
         u = jax.random.normal(ks[0], (m, b, d))
@@ -31,9 +42,63 @@ def run() -> list[dict]:
                            impl="pallas_interpret")
         t = timeit(jax.jit(lambda u, v, x: ref.qn_apply_ref(
             u, v, x, jnp.float32(1.0), mask)), u, v, x, iters=3)
-        rows.append({"kernel": "qn_apply", "shape": f"m{m}xB{b}xD{d}",
-                     "max_abs_err": float(jnp.abs(got - want).max()),
-                     "oracle_ms": round(t * 1e3, 3)})
+        rows.append({"op": "qn_apply", "shape": f"m{m}xB{b}xD{d}",
+                     "impl": "ref",
+                     "wall_ms": round(t * 1e3, 3),
+                     "bytes_moved": _qn_bytes_moved(m, b, d, 1, 4, (False,)),
+                     "max_abs_err": float(jnp.abs(got - want).max())})
+
+    # qn_apply_multi — fused K-RHS application vs the unfused call sequence
+    # it replaces.  "broyden_step" is the solver's per-iteration mix
+    # (H @ g_new, H^T @ s) replacing the legacy THREE single applications
+    # (direction, H@y, H^T s); "uniform3" is K same-direction cotangents
+    # (backward fan-out), where one U + one V stream serves all K.
+    for name, tr, legacy in [
+            ("broyden_step", (False, True), [(False,), (False,), (True,)]),
+            ("uniform3", (False, False, False), [(False,)] * 3)]:
+        for (m, b, d) in [(16, 8, 1024), (30, 4, 4096)]:
+            kk = len(tr)
+            ks = jax.random.split(jax.random.fold_in(KEY, m * 7 + d + kk), 3)
+            u = jax.random.normal(ks[0], (m, b, d))
+            v = jax.random.normal(ks[1], (m, b, d))
+            xs = jax.random.normal(ks[2], (kk, b, d))
+            mask = jnp.ones((m, b), jnp.float32)
+            want = ref.qn_apply_multi_ref(u, v, xs, jnp.float32(1.0), mask, tr)
+            got = ops.qn_apply_multi(u, v, xs, jnp.float32(1.0), mask, tr,
+                                     impl="pallas_interpret")
+            t = timeit(jax.jit(lambda u, v, xs: ref.qn_apply_multi_ref(
+                u, v, xs, jnp.float32(1.0), mask, tr)), u, v, xs, iters=3)
+            fused = _qn_bytes_moved(m, b, d, kk, 4, tr)
+            unfused = sum(_qn_bytes_moved(m, b, d, 1, 4, t_) for t_ in legacy)
+            rows.append({"op": f"qn_apply_multi[{name}]",
+                         "shape": f"m{m}xB{b}xD{d}xK{kk}",
+                         "impl": "ref",
+                         "wall_ms": round(t * 1e3, 3),
+                         "bytes_moved": fused,
+                         "unfused_bytes": unfused,
+                         "uv_traffic_ratio": round(unfused / fused, 2),
+                         "max_abs_err": float(jnp.abs(got - want).max())})
+
+    # lowrank_append — fused ring-slot write (touches one row, not m)
+    for (m, b, d) in [(16, 8, 1024), (30, 4, 4096)]:
+        ks = jax.random.split(jax.random.fold_in(KEY, m + 3 * d), 6)
+        u = jax.random.normal(ks[0], (m, b, d))
+        v = jax.random.normal(ks[1], (m, b, d))
+        s = jax.random.normal(ks[2], (b, d))
+        hy = jax.random.normal(ks[3], (b, d))
+        bb = jax.random.normal(ks[4], (b, d))
+        inv_den = jnp.ones((b,), jnp.float32)
+        slot = jax.random.randint(ks[5], (b,), 0, m)
+        upd = jnp.ones((b,), jnp.float32)
+        want = ref.lowrank_append_ref(u, v, s, hy, bb, inv_den, slot, upd)
+        got = ops.lowrank_append(u, v, s, hy, bb, inv_den, slot, upd,
+                                 impl="pallas_interpret")
+        err = max(float(jnp.abs(a - w).max()) for a, w in zip(got, want))
+        rows.append({"op": "lowrank_append", "shape": f"m{m}xB{b}xD{d}",
+                     "impl": "ref",
+                     "wall_ms": None,
+                     "bytes_moved": 7 * b * d * 4,  # row r/w + s/hy/b + evict
+                     "max_abs_err": err})
 
     # flash_xla sweep vs dense oracle
     for (s, h, kv, hd) in [(256, 4, 4, 64), (512, 8, 2, 64), (1024, 4, 4, 128)]:
@@ -44,16 +109,17 @@ def run() -> list[dict]:
         want = ref.attention_ref(q, k, v, causal=True)
         got = flash_attention_xla(q, k, v, causal=True, block_q=128,
                                   block_kv=256)
-        t_ref = timeit(jax.jit(lambda q, k, v: ref.attention_ref(
-            q, k, v, causal=True)), q, k, v, iters=3)
         t_fx = timeit(jax.jit(lambda q, k, v: flash_attention_xla(
             q, k, v, causal=True, block_q=128, block_kv=256)), q, k, v,
             iters=3)
-        rows.append({"kernel": "flash_attention", "shape": f"S{s}xH{h}/{kv}xhd{hd}",
+        # bf16 itemsize 2, batch 2: (q + out) + (k + v) streams
+        moved = 2 * 2 * (2 * s * h * hd + 2 * s * kv * hd)
+        rows.append({"op": "flash_attention", "shape": f"S{s}xH{h}/{kv}xhd{hd}",
+                     "impl": "flash_xla",
+                     "wall_ms": round(t_fx * 1e3, 3),
+                     "bytes_moved": moved,
                      "max_abs_err": float(jnp.abs(
-                         got.astype(jnp.float32) - want.astype(jnp.float32)).max()),
-                     "oracle_ms": round(t_ref * 1e3, 3),
-                     "flash_xla_ms": round(t_fx * 1e3, 3)})
+                         got.astype(jnp.float32) - want.astype(jnp.float32)).max())})
 
     # rmsnorm
     from repro.kernels.rmsnorm import rmsnorm_pallas
@@ -62,7 +128,13 @@ def run() -> list[dict]:
         w = jax.random.normal(jax.random.fold_in(KEY, 1), shape[-1:], jnp.bfloat16)
         want = ref.rmsnorm_ref(x, w, 1e-6)
         got = rmsnorm_pallas(x, w, eps=1e-6, interpret=True)
-        rows.append({"kernel": "rmsnorm", "shape": "x".join(map(str, shape)),
+        n = 1
+        for dim in shape:
+            n *= dim
+        rows.append({"op": "rmsnorm", "shape": "x".join(map(str, shape)),
+                     "impl": "pallas_interpret",
+                     "wall_ms": None,
+                     "bytes_moved": 2 * n * 2 + shape[-1] * 2,
                      "max_abs_err": float(jnp.abs(
                          got.astype(jnp.float32) - want.astype(jnp.float32)).max())})
 

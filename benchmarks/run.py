@@ -3,13 +3,19 @@
 One section per paper table/figure (DESIGN.md §7) plus the roofline report
 (deliverable g). Each section prints a CSV block and persists JSON under
 results/benchmarks/.
+
+The kernels section additionally persists ``BENCH_kernels.json`` — a
+machine-readable perf-trajectory record (one object per op x shape x impl
+with wall-time and analytic bytes-moved) meant to be diffed across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 import traceback
+from pathlib import Path
 
 
 def main() -> None:
@@ -44,6 +50,8 @@ def main() -> None:
         sections.append(("deq opa quality (Table E.3 / Fig E.3)",
                          lambda: bench_deq_backward.run_opa_quality(
                              n_batches=3 if args.fast else 8)))
+        sections.append(("deq qn U/V traffic (fused Broyden step)",
+                         bench_deq_backward.run_traffic))
     if want("spectral"):
         from benchmarks import bench_spectral
         sections.append(("spectral radius (Table E.1)", bench_spectral.run))
@@ -64,13 +72,27 @@ def main() -> None:
         t0 = time.time()
         print(f"\n==== {name} ====")
         try:
-            fn()
+            rows = fn()
+            if name.startswith("kernels") and rows:
+                _write_bench_kernels(rows)
             print(f"==== {name}: done in {time.time()-t0:.0f}s ====")
         except Exception:
             traceback.print_exc()
             failures.append(name)
     if failures:
         raise SystemExit(f"benchmark sections failed: {failures}")
+
+
+def _write_bench_kernels(rows: list[dict]) -> None:
+    """Persist the machine-readable kernel perf record (op, shape, impl,
+    wall-time, bytes-moved) so the perf trajectory is diffable across PRs."""
+    keep = ("op", "shape", "impl", "wall_ms", "bytes_moved", "unfused_bytes",
+            "uv_traffic_ratio", "max_abs_err")
+    out = [{k: r[k] for k in keep if k in r} for r in rows]
+    path = Path("results/benchmarks/BENCH_kernels.json")
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(out, indent=2))
+    print(f"# wrote {path} ({len(out)} rows)")
 
 
 if __name__ == "__main__":

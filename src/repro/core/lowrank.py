@@ -13,7 +13,11 @@ backward pass instead of running a second iterative inversion.
 TPU / SPMD adaptation (DESIGN.md §3):
   * The rank-one chain is stored as two stacked ``(m, B, *F)`` buffers so
     applying ``H`` (or ``H^T``) is two batched contractions — MXU work —
-    rather than a sequence of axpys.
+    rather than a sequence of axpys.  Applying is memory-bound, so
+    ``matvec_multi`` batches a whole stack of right-hand sides (with
+    per-RHS transpose) through ONE streaming pass over the buffers, and
+    ``apply_update`` writes the Broyden pair straight into its ring slot
+    (kernels/ops.lowrank_append) without a gather/scatter round-trip.
   * The feature dims ``*F`` are NEVER flattened: a DEQ over ``(B, S, d)``
     activations keeps ``d`` TP-sharded; all contractions use einsum
     ellipses, so GSPMD reduces the (m, B) coefficients with one small
@@ -84,13 +88,32 @@ class LowRank:
         idx = jnp.arange(m, dtype=jnp.int32)[:, None]
         return (idx < jnp.minimum(self.count, m)[None, :]).astype(jnp.float32)
 
+    def matvec_multi(
+        self,
+        xs: tuple[jax.Array, ...] | list[jax.Array],
+        transpose: tuple[bool, ...] | None = None,
+    ) -> tuple[jax.Array, ...]:
+        """Apply ``H`` and/or ``H^T`` to K right-hand sides in ONE streaming
+        pass over the U/V buffers (the fused Broyden-step hot path).
+
+        ``xs`` is a sequence of (B, *F) arrays; ``transpose[k]`` selects
+        ``H^T`` for the k-th RHS (default: all ``H``).  Returns a tuple of
+        (B, *F) results.  Mixed dtypes promote via the stack.
+        """
+        transpose = tuple(transpose) if transpose is not None \
+            else (False,) * len(xs)
+        out = kernel_ops.qn_apply_multi(
+            self.u, self.v, jnp.stack(list(xs)), self.alpha,
+            self._valid_mask(), transpose)
+        return tuple(out[k] for k in range(len(xs)))
+
     def matvec(self, x: jax.Array) -> jax.Array:
         """``H @ x`` batched over B: (B, *F) -> (B, *F)."""
-        return kernel_ops.qn_apply(self.u, self.v, x, self.alpha, self._valid_mask())
+        return self.matvec_multi((x,), (False,))[0]
 
     def rmatvec(self, x: jax.Array) -> jax.Array:
         """``H^T @ x`` — equivalently ``(x^T H)^T`` — batched over B."""
-        return kernel_ops.qn_apply(self.v, self.u, x, self.alpha, self._valid_mask())
+        return self.matvec_multi((x,), (True,))[0]
 
     def transpose(self) -> "LowRank":
         return LowRank(alpha=self.alpha, u=self.v, v=self.u, count=self.count)
@@ -101,21 +124,45 @@ class LowRank:
         """Append rank-one term ``a b^T`` for samples where ``update_mask``.
 
         ``a, b: (B, *F)``; ``update_mask: (B,)`` bool. Ring overwrite beyond
-        ``memory`` (standard limited-memory approximation).
+        ``memory`` (standard limited-memory approximation).  One fused
+        one-hot masked select per buffer — no gather/scatter round-trip.
         """
         m = self.memory
-        bsz = self.u.shape[1]
         slot = (self.count % m).astype(jnp.int32)  # (B,)
-        barange = jnp.arange(bsz)
-        mask = _expand(update_mask, a).astype(self.u.dtype)
-        new_u = self.u.at[slot, barange].set(
-            mask * a.astype(self.u.dtype) + (1.0 - mask) * self.u[slot, barange]
-        )
-        new_v = self.v.at[slot, barange].set(
-            mask * b.astype(self.v.dtype) + (1.0 - mask) * self.v[slot, barange]
-        )
+        hot = (jnp.arange(m, dtype=jnp.int32)[:, None] == slot[None, :])
+        hot = hot & update_mask[None, :]           # (m, B)
+        hot = hot.reshape(hot.shape + (1,) * (self.u.ndim - 2))
+        new_u = jnp.where(hot, a.astype(self.u.dtype)[None], self.u)
+        new_v = jnp.where(hot, b.astype(self.v.dtype)[None], self.v)
         new_count = self.count + update_mask.astype(jnp.int32)
         return LowRank(alpha=self.alpha, u=new_u, v=new_v, count=new_count)
+
+    def apply_update(
+        self,
+        s: jax.Array,           # (B, *F) step
+        hy: jax.Array,          # (B, *F) H @ y
+        b: jax.Array,           # (B, *F) H^T s
+        denom: jax.Array,       # (B,) s^T H y, pre-guarded (non-zero)
+        update_mask: jax.Array,  # (B,) bool
+    ) -> tuple["LowRank", jax.Array, jax.Array]:
+        """Fused Broyden good update: compute ``a = (s - Hy) / denom`` and
+        write the pair ``(a, b)`` into the ring slot in one kernel pass
+        (kernels/ops.lowrank_append) — no gather/scatter round-trip.
+
+        Returns ``(H_new, evicted_u, evicted_v)``: the slot's previous row
+        pair, so callers can rank-one-correct carried products like
+        ``H @ g`` when the ring wraps (the evicted pair was live iff
+        ``count >= memory``).
+        """
+        m = self.memory
+        slot = (self.count % m).astype(jnp.int32)
+        inv_den = 1.0 / denom.astype(jnp.float32)
+        new_u, new_v, ev_u, ev_v = kernel_ops.lowrank_append(
+            self.u, self.v, s, hy, b, inv_den, slot,
+            update_mask.astype(jnp.float32))
+        new_count = self.count + update_mask.astype(jnp.int32)
+        H = LowRank(alpha=self.alpha, u=new_u, v=new_v, count=new_count)
+        return H, ev_u, ev_v
 
     # -- diagnostics ----------------------------------------------------------
 

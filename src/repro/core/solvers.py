@@ -97,6 +97,15 @@ def broyden_solve(
 
     ``init_lowrank`` warm-starts the chain (the paper's *refine* strategy
     re-uses the forward chain, transposed, for the backward linear solve).
+
+    Streaming structure (the fused hot path): the loop carries
+    ``Hg = H_n @ g(z_n)`` so the direction costs nothing, and each iteration
+    makes exactly ONE streaming pass over the U/V buffers — a fused
+    ``matvec_multi`` computing ``H @ g(z_{n+1})`` and ``H^T @ s_n`` together.
+    ``H @ y_n`` falls out as ``H @ g(z_{n+1}) - Hg`` (linearity), and the
+    carried product is advanced to ``H_{n+1} @ g(z_{n+1})`` by a rank-one
+    correction using the appended pair and the ring-evicted pair returned by
+    the fused ``apply_update`` — O(B·D), no extra U/V traffic.
     """
     bsz, feat = z0.shape[0], z0.shape[1:]
     H0 = init_lowrank
@@ -106,30 +115,45 @@ def broyden_solve(
     g0 = g(z0)
     res0 = bnorm(g0)
     thresh = _stop_threshold(res0, bnorm(z0), cfg)
+    Hg0 = H0.matvec(g0.astype(jnp.float32))
 
     trace0 = jnp.full((max(cfg.max_steps, 1), bsz), jnp.inf, jnp.float32)
 
     def cond(state):
-        k, _, _, _, conv, _, _, _ = state
+        k, _, _, _, _, conv, _, _, _ = state
         return (k < cfg.max_steps) & ~jnp.all(conv)
 
     def body(state):
-        k, z, gz, H, conv, best_z, best_res, trace = state
-        p = -H.matvec(gz)
+        k, z, gz, H, Hg, conv, best_z, best_res, trace = state
+        p = -Hg
         active = ~conv
         am = _expand(active, z)
         z_new = jnp.where(am, z + cfg.step_size * p.astype(z.dtype), z)
         gz_new = jnp.where(am, g(z_new), gz)
 
         s = (z_new - z).astype(jnp.float32)
-        y = (gz_new - gz).astype(jnp.float32)
-        Hy = H.matvec(y)
+        g_new32 = gz_new.astype(jnp.float32)
+        # THE per-step U/V stream: H @ g(z_new) and H^T @ s, fused.
+        Hg_new, b = H.matvec_multi((g_new32, s), (False, True))
+        Hy = Hg_new - Hg                              # H @ (g_new - g_old)
         den = bdot(s, Hy)                             # (B,)
         safe = jnp.abs(den) > cfg.eps
         denom = jnp.where(safe, den, 1.0)
-        a = (s - Hy) / _expand(denom, s)
-        b = H.rmatvec(s)
-        H = H.append(a, b, active & safe)
+        upd = active & safe
+        wrapped = H.count >= H.memory                 # slot being overwritten
+        H, ev_u, ev_v = H.apply_update(s, Hy, b, denom, upd)
+
+        # Advance the carried product to H_{n+1} @ g_new: add the appended
+        # pair's contribution, remove the evicted pair's (storage precision,
+        # so the carry tracks what matvec over the new chain would compute).
+        a_st = ((s - Hy) / _expand(denom, s)).astype(H.u.dtype) \
+            .astype(jnp.float32)
+        b_st = b.astype(H.v.dtype).astype(jnp.float32)
+        gain = a_st * _expand(bdot(b_st, g_new32), s)
+        loss = ev_u.astype(jnp.float32) * _expand(
+            bdot(ev_v.astype(jnp.float32), g_new32)
+            * wrapped.astype(jnp.float32), s)
+        Hg = Hg_new + _expand(upd.astype(jnp.float32), s) * (gain - loss)
 
         res = bnorm(gz_new)
         improved = res < best_res
@@ -137,19 +161,19 @@ def broyden_solve(
         best_res = jnp.minimum(res, best_res)
         conv = conv | (res < thresh)
         trace = trace.at[k].set(jnp.where(active, res, trace[k]))
-        return (k + 1, z_new, gz_new, H, conv, best_z, best_res, trace)
+        return (k + 1, z_new, gz_new, H, Hg, conv, best_z, best_res, trace)
 
     state0 = (
-        jnp.int32(0), z0, g0, H0,
+        jnp.int32(0), z0, g0, H0, Hg0,
         res0 < thresh, z0, res0, trace0,
     )
     if cfg.unroll:
         state = state0
         for _ in range(cfg.max_steps):
             state = body(state)
-        k, z, gz, H, conv, best_z, best_res, trace = state
+        k, z, gz, H, _Hg, conv, best_z, best_res, trace = state
     else:
-        k, z, gz, H, conv, best_z, best_res, trace = jax.lax.while_loop(
+        k, z, gz, H, _Hg, conv, best_z, best_res, trace = jax.lax.while_loop(
             cond, body, state0
         )
     return SolveResult(best_z, H, best_res, k, conv, trace, {})
@@ -292,9 +316,9 @@ def adjoint_broyden_solve(
         ss = bdot(sigma, sigma)
         safe = ss > cfg.eps
         w_row = (sJT - sB) / _expand(jnp.where(safe, ss, 1.0), sJT)
-        # H update: H <- H - (H sigma)(w^T H) / (1 + w^T H sigma)
-        Hs = H.matvec(sigma)
-        wH = H.rmatvec(w_row)
+        # H update: H <- H - (H sigma)(w^T H) / (1 + w^T H sigma).
+        # H sigma and w^T H batch through one fused U/V stream.
+        Hs, wH = H.matvec_multi((sigma, w_row), (False, True))
         den = 1.0 + bdot(w_row, Hs)
         safe = safe & (jnp.abs(den) > cfg.eps)
         a = -Hs / _expand(jnp.where(safe, den, 1.0), Hs)
@@ -353,28 +377,33 @@ class LBFGSMemory(NamedTuple):
     count: Array  # () int32 — total pairs ever stored (ring)
 
 
-def lbfgs_two_loop(mem: LBFGSMemory, v: Array, gamma: Array | float = 1.0) -> Array:
-    """Apply the LBFGS inverse-Hessian estimate H to v (two-loop recursion).
-
-    This is THE SHINE operation for the bi-level setting: sharing H with the
-    hypergradient instead of running a fresh CG/Newton solve.
-    """
+def lbfgs_two_loop_multi(
+    mem: LBFGSMemory,
+    vs: tuple[Array, ...] | list[Array],
+    gamma: Array | float = 1.0,
+) -> tuple[Array, ...]:
+    """Apply the LBFGS inverse-Hessian estimate H to K vectors in ONE pass
+    over the (m, D) s/y memory (each ring pair is read once and contracted
+    against all K carried vectors — the L-BFGS analogue of the fused
+    ``qn_apply_multi`` stream; H is symmetric so there is no transposed
+    variant)."""
     m = mem.s.shape[0]
     n = jnp.minimum(mem.count, m)
     # iterate newest -> oldest: ring order
     order_new_to_old = (mem.count - 1 - jnp.arange(m)) % m
 
     def first_loop(carry, i):
-        q, alphas = carry
+        q, alphas = carry                                  # (K, D), (m, K)
         idx = order_new_to_old[i]
         valid = i < n
-        alpha = jnp.where(valid, mem.rho[idx] * jnp.dot(mem.s[idx], q), 0.0)
-        q = q - alpha * jnp.where(valid, mem.y[idx], 0.0)
+        alpha = jnp.where(valid, mem.rho[idx] * (q @ mem.s[idx]), 0.0)  # (K,)
+        q = q - alpha[:, None] * jnp.where(valid, mem.y[idx], 0.0)[None, :]
         return (q, alphas.at[i].set(alpha)), None
 
-    q0 = v.astype(jnp.float32)
+    q0 = jnp.stack([v.astype(jnp.float32) for v in vs])
+    kk = q0.shape[0]
     (q, alphas), _ = jax.lax.scan(
-        first_loop, (q0, jnp.zeros((m,), jnp.float32)), jnp.arange(m)
+        first_loop, (q0, jnp.zeros((m, kk), jnp.float32)), jnp.arange(m)
     )
     r = gamma * q
 
@@ -382,12 +411,23 @@ def lbfgs_two_loop(mem: LBFGSMemory, v: Array, gamma: Array | float = 1.0) -> Ar
         j = m - 1 - i
         idx = order_new_to_old[j]
         valid = j < n
-        beta = jnp.where(valid, mem.rho[idx] * jnp.dot(mem.y[idx], r), 0.0)
-        r = r + (alphas[j] - beta) * jnp.where(valid, mem.s[idx], 0.0)
+        beta = jnp.where(valid, mem.rho[idx] * (r @ mem.y[idx]), 0.0)  # (K,)
+        r = r + (alphas[j] - beta)[:, None] * \
+            jnp.where(valid, mem.s[idx], 0.0)[None, :]
         return r, None
 
     r, _ = jax.lax.scan(second_loop, r, jnp.arange(m))
-    return r
+    return tuple(r[k] for k in range(kk))
+
+
+def lbfgs_two_loop(mem: LBFGSMemory, v: Array, gamma: Array | float = 1.0) -> Array:
+    """Apply the LBFGS inverse-Hessian estimate H to v (two-loop recursion).
+
+    This is THE SHINE operation for the bi-level setting: sharing H with the
+    hypergradient instead of running a fresh CG/Newton solve.  Single-RHS
+    view of ``lbfgs_two_loop_multi``.
+    """
+    return lbfgs_two_loop_multi(mem, (v,), gamma)[0]
 
 
 def _mem_push(mem: LBFGSMemory, s: Array, y: Array, accept: Array) -> LBFGSMemory:

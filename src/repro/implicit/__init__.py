@@ -30,6 +30,7 @@ from repro.implicit.estimators import (
     fallback_cotangent,
     jfb_cotangent,
     shine_cotangent,
+    shine_cotangent_multi,
     solve_adjoint,
 )
 from repro.implicit.fixed_point import ImplicitStats, implicit_fixed_point
@@ -65,5 +66,6 @@ __all__ = [
     "register_estimator",
     "register_solver",
     "shine_cotangent",
+    "shine_cotangent_multi",
     "solve_adjoint",
 ]

@@ -26,6 +26,13 @@ BOTH problem classes: the DEQ adjoint (batched Broyden on
 ``(I - J_f)^T u = w`` with a ``LowRank`` shared inverse) and the bi-level
 hypergradient (CG on ``Hess q = w`` with the shared L-BFGS two-loop
 inverse).  The sharing logic therefore lives in exactly one place.
+
+Every inverse application here rides the fused multi-vector stream: the
+``LowRank`` paths (shine / fallback cotangents, and the refine solves,
+whose warm-started Broyden inner loop is the fused one-pass-per-iteration
+solver) go through ``qn_apply_multi``, and the bi-level path through
+``lbfgs_two_loop_multi`` — so the backward pass costs exactly one pass over
+the shared forward chain.
 """
 
 from __future__ import annotations
@@ -91,8 +98,16 @@ class EstimatorContext:
 
 
 def shine_cotangent(H: LowRank, w: Array) -> Array:
-    """u = H^T w — share the inverse estimate. O(m·d), no extra solve."""
+    """u = H^T w — share the inverse estimate. O(m·d), no extra solve; one
+    fused stream over the forward chain (``qn_apply_multi``, K=1)."""
     return H.rmatvec(w)
+
+
+def shine_cotangent_multi(H: LowRank, ws: tuple[Array, ...]) -> tuple[Array, ...]:
+    """``(H^T w_1, ..., H^T w_K)`` in ONE stream over the forward chain —
+    for callers holding several cotangents against the same fixed point
+    (e.g. multi-loss heads / per-task adjoints)."""
+    return H.matvec_multi(tuple(ws), (True,) * len(ws))
 
 
 def jfb_cotangent(w: Array) -> Array:

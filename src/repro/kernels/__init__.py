@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the performance hot spots SHINE creates or keeps:
 
-  qn_apply.py         low-rank quasi-Newton inverse application (SHINE core)
+  qn_apply.py         low-rank quasi-Newton inverse application (SHINE core):
+                      single-RHS, fused multi-RHS (one U/V stream for a
+                      whole Broyden step), fused ring-buffer update
   flash_attention.py  causal flash attention + single-token decode variant
   rmsnorm.py          fused RMSNorm
 

@@ -1,23 +1,47 @@
 """Jit'd public wrappers around the kernel layer.
 
-Dispatch policy:
-  * TPU backend          -> Pallas kernels (deployment path)
-  * anything else        -> pure-jnp reference (this CPU container, tests)
-  * impl="pallas_interpret" -> Pallas kernel body executed in Python
-    (used by the kernel test sweeps to validate the TPU code path on CPU)
+Dispatch table (every op takes ``impl``; ``None``/"auto" resolves by
+backend, and ``force_impl`` overrides globally for tests):
+
+  impl               | executes                          | selected when
+  -------------------+-----------------------------------+------------------
+  "ref"              | pure-jnp oracle (kernels/ref.py)  | auto on non-TPU
+                     |                                   | backends (CPU
+                     |                                   | container, tests)
+  "flash_xla"        | tiled online-softmax attention in | auto on CPU for
+                     | plain XLA (memory-faithful to the | attention with
+                     | Pallas kernel)                    | S*T >= 2^20 cells
+  "pallas"           | compiled Pallas TPU kernels       | auto on TPU (the
+                     |                                   | deployment path)
+  "pallas_interpret" | Pallas kernel bodies interpreted  | explicit only:
+                     | in Python on CPU                  | kernel test sweeps
+                     |                                   | (./test.sh kernels)
+
+Ops dispatched here: ``qn_apply`` (single-RHS SHINE inverse application),
+``qn_apply_multi`` (K stacked RHS, per-RHS H vs H^T, ONE stream over U/V —
+the hot path of every Broyden-family iteration), ``lowrank_append`` (fused
+Broyden ring-buffer update writing only the target slot row), ``attention``,
+``decode_attention``, ``rmsnorm``.
+
+The qn ops also keep trace-time stream statistics
+(``reset_qn_stream_stats``/``qn_stream_stats``): inside a ``lax.while_loop``
+the body traces once, so the counters report per-iteration call/byte costs —
+the bench harness uses them to verify a Broyden step performs exactly one
+fused U/V pass.
 
 Training differentiability: the Pallas flash-attention here implements the
 forward only; ``attention`` wraps it in a custom_vjp whose backward
 re-derives gradients from the reference oracle (recompute — consistent with
-the DEQ O(1)-memory posture). The qn_apply kernel is only ever used inside
-custom_vjp forward/backward bodies of the DEQ layer, so it needs no VJP of
-its own.
+the DEQ O(1)-memory posture). The qn ops are only ever used inside
+custom_vjp forward/backward bodies of the DEQ layer, so they need no VJP of
+their own.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Literal
+from typing import Literal, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +52,11 @@ from repro.kernels.flash_attention import (
     flash_attention_pallas,
 )
 from repro.kernels.flash_xla import flash_attention_xla
-from repro.kernels.qn_apply import qn_apply_pallas
+from repro.kernels.qn_apply import (
+    lowrank_append_pallas,
+    qn_apply_multi_pallas,
+    qn_apply_pallas,
+)
 from repro.kernels.rmsnorm import rmsnorm_pallas
 
 Impl = Literal["auto", "ref", "flash_xla", "pallas", "pallas_interpret"]
@@ -56,12 +84,73 @@ def _resolve(impl: Impl | None) -> Impl:
 
 
 # ---------------------------------------------------------------------------
-# qn_apply — the SHINE inverse-estimate application
+# qn_apply / qn_apply_multi — the SHINE inverse-estimate application
 # ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class QNStreamStats:
+    """Trace-time counters of qn inverse-application streaming cost.
+
+    ``calls`` counts qn_apply/qn_apply_multi invocations, ``rhs`` the total
+    right-hand sides applied, ``uv_bytes`` the analytic HBM bytes the kernel
+    streaming model reads from U/V.  Counters increment when the op is
+    TRACED: under ``lax.while_loop`` the body traces once, so after tracing
+    a solver these are exact per-iteration costs.
+    """
+
+    calls: int = 0
+    rhs: int = 0
+    uv_bytes: int = 0
+
+
+_QN_STATS = QNStreamStats()
+
+
+def reset_qn_stream_stats() -> None:
+    global _QN_STATS
+    _QN_STATS = QNStreamStats()
+
+
+def qn_stream_stats() -> QNStreamStats:
+    return dataclasses.replace(_QN_STATS)
+
+
+def qn_stream_bytes(m: int, bsz: int, dim: int, itemsize: int,
+                    transpose: Sequence[bool]) -> int:
+    """Analytic U/V bytes one fused application streams from HBM.
+
+    Per phase (coefficient, apply) a buffer is read once iff some RHS needs
+    it: uniform flags read one buffer per phase (2·m·B·D total, independent
+    of K); mixed flags read both per phase (4·m·B·D)."""
+    any_t, any_f = any(transpose), not all(transpose)
+    streams = 2 * (int(any_t) + int(any_f))
+    return streams * m * bsz * dim * itemsize
+
+
+def _record_stream(u: jax.Array, transpose: Sequence[bool]) -> None:
+    m, bsz = u.shape[0], u.shape[1]
+    dim = 1
+    for f in u.shape[2:]:
+        dim *= f
+    _QN_STATS.calls += 1
+    _QN_STATS.rhs += len(transpose)
+    _QN_STATS.uv_bytes += qn_stream_bytes(m, bsz, dim, u.dtype.itemsize,
+                                          transpose)
+
+
+def _pad_memory_axis(u2, v2, mask):
+    if u2.shape[0] % 8 != 0:  # pad qN memory axis to sublane multiple
+        pad = 8 - u2.shape[0] % 8
+        u2 = jnp.pad(u2, ((0, pad), (0, 0), (0, 0)))
+        v2 = jnp.pad(v2, ((0, pad), (0, 0), (0, 0)))
+        mask = jnp.pad(mask, ((0, pad), (0, 0)))
+    return u2, v2, mask
 
 
 def qn_apply(u, v, x, alpha, mask, impl: Impl | None = None) -> jax.Array:
     impl = _resolve(impl)
+    _record_stream(u, (False,))
     if impl == "ref":
         return ref.qn_apply_ref(u, v, x, alpha, mask)
     # Kernel path: flatten feature dims (per-shard local view on TPU).
@@ -69,15 +158,66 @@ def qn_apply(u, v, x, alpha, mask, impl: Impl | None = None) -> jax.Array:
     feat_shape = x.shape[1:]
     u2, v2 = u.reshape(m, bsz, -1), v.reshape(m, bsz, -1)
     x2 = x.reshape(bsz, -1)
-    if m % 8 != 0:  # pad qN memory axis to sublane multiple
-        pad = 8 - m % 8
-        u2 = jnp.pad(u2, ((0, pad), (0, 0), (0, 0)))
-        v2 = jnp.pad(v2, ((0, pad), (0, 0), (0, 0)))
-        mask = jnp.pad(mask, ((0, pad), (0, 0)))
+    u2, v2, mask = _pad_memory_axis(u2, v2, mask)
     out = qn_apply_pallas(
         u2, v2, x2, alpha, mask, interpret=(impl == "pallas_interpret")
     )
     return out.reshape((bsz,) + feat_shape)
+
+
+def qn_apply_multi(u, v, xs, alpha, mask,
+                   transpose: Sequence[bool] | None = None,
+                   impl: Impl | None = None) -> jax.Array:
+    """Apply H (and/or H^T, per the ``transpose`` flags) to the K stacked
+    right-hand sides ``xs: (K, B, *F)`` in ONE streaming pass over U/V.
+
+    Returns ``(K, B, *F)``; ``out[k] = (H^T if transpose[k] else H) @
+    xs[k]``.  This is THE fused Broyden-step primitive: the per-step
+    direction/matvec/rmatvec all batch through one invocation.
+    """
+    kk = xs.shape[0]
+    transpose = tuple(bool(t) for t in
+                      ((False,) * kk if transpose is None else transpose))
+    if len(transpose) != kk:
+        raise ValueError(f"transpose has {len(transpose)} flags for {kk} RHS")
+    impl = _resolve(impl)
+    _record_stream(u, transpose)
+    if impl == "ref":
+        return ref.qn_apply_multi_ref(u, v, xs, alpha, mask, transpose)
+    m, bsz = u.shape[0], u.shape[1]
+    feat_shape = xs.shape[2:]
+    u2, v2 = u.reshape(m, bsz, -1), v.reshape(m, bsz, -1)
+    xs2 = xs.reshape(kk, bsz, -1)
+    u2, v2, mask = _pad_memory_axis(u2, v2, mask)
+    out = qn_apply_multi_pallas(
+        u2, v2, xs2, alpha, mask, transpose=transpose,
+        interpret=(impl == "pallas_interpret"),
+    )
+    return out.reshape((kk, bsz) + feat_shape)
+
+
+def lowrank_append(u, v, s, hy, b, inv_den, slot, upd,
+                   impl: Impl | None = None):
+    """Fused Broyden ring-buffer update: write ``a = (s - Hy) * inv_den``
+    and ``b`` into ring slot ``slot`` of U/V for samples where ``upd``,
+    without a gather/scatter round-trip (the Pallas path touches only the
+    target row).  Returns ``(new_u, new_v, evicted_u, evicted_v)``.
+    """
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.lowrank_append_ref(u, v, s, hy, b, inv_den, slot, upd)
+    m, bsz = u.shape[0], u.shape[1]
+    feat_shape = u.shape[2:]
+    flat = lambda a, lead: a.reshape(lead + (-1,))
+    new_u, new_v, ev_u, ev_v = lowrank_append_pallas(
+        flat(u, (m, bsz)), flat(v, (m, bsz)), flat(s, (bsz,)),
+        flat(hy, (bsz,)), flat(b, (bsz,)), inv_den,
+        slot.astype(jnp.int32), upd,
+        interpret=(impl == "pallas_interpret"),
+    )
+    unflat = lambda a, lead: a.reshape(lead + feat_shape)
+    return (unflat(new_u, (m, bsz)), unflat(new_v, (m, bsz)),
+            unflat(ev_u, (bsz,)), unflat(ev_v, (bsz,)))
 
 
 # ---------------------------------------------------------------------------

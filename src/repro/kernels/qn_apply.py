@@ -1,22 +1,45 @@
-"""Pallas TPU kernel for the SHINE hot path: applying a limited-memory
-quasi-Newton inverse ``H = alpha*I + U^T V`` to a batch of vectors.
+"""Pallas TPU kernels for the SHINE hot path: applying a limited-memory
+quasi-Newton inverse ``H = alpha*I + U^T V`` — and maintaining it.
 
-    out[b] = alpha * x[b] + sum_i mask[i,b] * u[i,b,:] * <v[i,b,:], x[b,:]>
+    H @ x   = alpha * x[b] + sum_i mask[i,b] * u[i,b,:] * <v[i,b,:], x[b,:]>
+    H^T @ x = alpha * x[b] + sum_i mask[i,b] * v[i,b,:] * <u[i,b,:], x[b,:]>
 
-This op runs (a) once per Broyden iteration in the forward pass (three times,
-for matvec/rmatvec/direction), and (b) exactly once in the SHINE backward
-pass — it IS the "shared inverse estimate". It is memory-bound: 2·m·D reads
-per sample against m·D MACs twice, so the kernel streams U and V through
-VMEM in d-tiles, keeping the (m,) coefficient vector resident in a VMEM
-scratch accumulator across the d-grid (TPU grids execute sequentially, which
-makes cross-step scratch accumulation sound).
+This op runs up to three times per Broyden iteration in the forward pass
+(direction, matvec and rmatvec of the Sherman–Morrison update) and exactly
+once in the SHINE backward pass — it IS the "shared inverse estimate". It is
+memory-bound: the U/V streams dominate, so the fused multi-vector kernel
+amortizes ONE stream over U/V across a whole stack of right-hand sides.
 
-Two phases as two pallas_calls:
-  1. ``_coeff_kernel``  : c[b, :] = sum_tiles V[:, b, tile] @ x[b, tile]
-  2. ``_apply_kernel``  : out[b, tile] = alpha*x[b, tile] + c[b, :] @ U[:, b, tile]
+Kernels in this module:
 
-MXU alignment: the d-tile (default 512) is a multiple of 128 lanes; the m
-axis is zero-padded to a multiple of 8 sublanes by the wrapper in ops.py.
+``qn_apply_pallas``        single RHS (kept for the backward pass / K=1).
+``qn_apply_multi_pallas``  K stacked RHS, each independently applying H or
+                           H^T (static ``transpose`` flags).  Two phases as
+                           two pallas_calls sharing the d-tile stream:
+                             1. coefficient phase: accumulate a (K, m) block
+                                in a VMEM-resident output across the d-grid
+                                (TPU grids execute sequentially, which makes
+                                cross-step accumulation sound);
+                             2. apply phase: emit all K output tiles per
+                                U/V tile.
+                           A buffer is only streamed by a phase that needs
+                           it: with uniform flags each phase touches exactly
+                           one of U/V, so K same-direction applications cost
+                           one U stream + one V stream total (K x fewer
+                           bytes); mixed flags cost two of each (1.5 x fewer
+                           for the fused Broyden step).
+``lowrank_append_pallas``  fused Broyden ring-buffer update: computes the
+                           rank-one pair a_n = (s - Hy)/den in-kernel and
+                           writes ONLY the target ring slot via scalar-
+                           prefetched row indexing + input/output aliasing —
+                           no gather/scatter round-trip over the (m, B, D)
+                           buffers — and returns the evicted pair so the
+                           solver can rank-one-correct carried products.
+
+MXU alignment: the d-tile is clamped to a multiple of 128 lanes and the
+feature axis is zero-padded up to the lane boundary (never a ragged
+``min(block_d, dim)`` tile); the m axis is zero-padded to a multiple of 8
+sublanes by the wrapper in ops.py.
 """
 
 from __future__ import annotations
@@ -26,6 +49,33 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_LANES = 128
+
+
+def _round_up(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def _pad_features(block_d: int, dim: int, *arrays):
+    """Clamp the d-tile to a lane-aligned size and pad the feature axis of
+    each array (last axis) up to a multiple of it.  Returns (block_d, padded
+    arrays...).  ``min(block_d, dim)`` alone would produce unaligned tiles
+    whenever dim < block_d and dim % 128 != 0."""
+    block_d = min(block_d, _round_up(dim, _LANES))
+    dim_p = _round_up(dim, block_d)
+    if dim_p != dim:
+        arrays = tuple(
+            jnp.pad(a, ((0, 0),) * (a.ndim - 1) + ((0, dim_p - dim),))
+            for a in arrays
+        )
+    return (block_d,) + arrays
+
+
+# ---------------------------------------------------------------------------
+# Single-RHS apply (K = 1)
+# ---------------------------------------------------------------------------
 
 
 def _coeff_kernel(v_ref, x_ref, mask_ref, coeff_ref):
@@ -61,12 +111,7 @@ def qn_apply_pallas(
     interpret: bool = False,
 ) -> jax.Array:
     m, bsz, dim = u.shape
-    block_d = min(block_d, dim)
-    if dim % block_d != 0:
-        pad = block_d - dim % block_d
-        u = jnp.pad(u, ((0, 0), (0, 0), (0, pad)))
-        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad)))
-        x = jnp.pad(x, ((0, 0), (0, pad)))
+    block_d, u, v, x = _pad_features(block_d, dim, u, v, x)
     dim_p = x.shape[-1]
     nd = dim_p // block_d
     alpha_arr = jnp.broadcast_to(jnp.asarray(alpha, jnp.float32), (1,))
@@ -99,3 +144,240 @@ def qn_apply_pallas(
     )(u, x, coeff, alpha_arr)
 
     return out[:, :dim]
+
+
+# ---------------------------------------------------------------------------
+# Multi-RHS apply: K right-hand sides, per-RHS H vs H^T, one U/V stream
+# ---------------------------------------------------------------------------
+
+
+def _contract_d(x, w):
+    # (K, blk) x (m, blk) -> (K, m), f32 accumulation
+    return jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def _contract_m(c, w):
+    # (K, m) x (m, blk) -> (K, blk), f32 accumulation
+    return jax.lax.dot_general(
+        c, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def _make_coeff_multi_kernel(transpose: tuple[bool, ...]):
+    # ``transpose`` is static, so the kernel specializes: uniform flags bind
+    # a single buffer; mixed flags bind both plus a (K, 1) selector input.
+    any_t, any_f = any(transpose), not all(transpose)
+
+    def kernel(*refs):
+        refs = list(refs)
+        u_ref = refs.pop(0) if any_t else None
+        v_ref = refs.pop(0) if any_f else None
+        tsel_ref = refs.pop(0) if (any_t and any_f) else None
+        x_ref, coeff_ref = refs
+        j = pl.program_id(1)
+
+        @pl.when(j == 0)
+        def _init():
+            coeff_ref[...] = jnp.zeros_like(coeff_ref)
+
+        x = x_ref[:, 0, :].astype(jnp.float32)                 # (K, blk_d)
+        if any_t and any_f:
+            pu = _contract_d(x, u_ref[:, 0, :].astype(jnp.float32))
+            pv = _contract_d(x, v_ref[:, 0, :].astype(jnp.float32))
+            tsel = tsel_ref[:, :]                              # (K, 1) f32
+            partial = tsel * pu + (1.0 - tsel) * pv            # (K, m)
+        elif any_t:
+            partial = _contract_d(x, u_ref[:, 0, :].astype(jnp.float32))
+        else:
+            partial = _contract_d(x, v_ref[:, 0, :].astype(jnp.float32))
+        coeff_ref[0, :, :] += partial
+
+    return kernel
+
+
+def _make_apply_multi_kernel(transpose: tuple[bool, ...]):
+    any_t, any_f = any(transpose), not all(transpose)
+
+    def kernel(*refs):
+        refs = list(refs)
+        u_ref = refs.pop(0) if any_f else None
+        v_ref = refs.pop(0) if any_t else None
+        tsel_ref = refs.pop(0) if (any_t and any_f) else None
+        x_ref, coeff_ref, mask_ref, alpha_ref, out_ref = refs
+
+        x = x_ref[:, 0, :].astype(jnp.float32)                 # (K, blk_d)
+        c = coeff_ref[0, :, :] * mask_ref[:, 0][None, :]       # (K, m) f32
+        if any_t and any_f:
+            ou = _contract_m(c, u_ref[:, 0, :].astype(jnp.float32))
+            ov = _contract_m(c, v_ref[:, 0, :].astype(jnp.float32))
+            tsel = tsel_ref[:, :]                              # (K, 1) f32
+            term = tsel * ov + (1.0 - tsel) * ou               # (K, blk_d)
+        elif any_t:
+            term = _contract_m(c, v_ref[:, 0, :].astype(jnp.float32))
+        else:
+            term = _contract_m(c, u_ref[:, 0, :].astype(jnp.float32))
+        out_ref[:, 0, :] = (alpha_ref[0] * x + term).astype(out_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("transpose", "block_d",
+                                             "interpret"))
+def qn_apply_multi_pallas(
+    u: jax.Array,      # (m, B, D)
+    v: jax.Array,      # (m, B, D)
+    xs: jax.Array,     # (K, B, D) stacked right-hand sides
+    alpha: jax.Array,  # scalar f32
+    mask: jax.Array,   # (m, B) f32
+    *,
+    transpose: tuple[bool, ...],   # per-RHS: apply H^T instead of H
+    block_d: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """out[k] = (H^T if transpose[k] else H) @ xs[k], one stream over U/V.
+
+    The coefficient phase accumulates the (K, m) coefficient block in a
+    VMEM-resident output across the d-grid; the apply phase emits all K
+    output tiles per U/V tile.  Each phase only streams the buffer(s) its
+    flag mix requires.
+    """
+    m, bsz, dim = u.shape
+    kk = xs.shape[0]
+    assert len(transpose) == kk, (len(transpose), kk)
+    any_t, any_f = any(transpose), not all(transpose)
+    block_d, u, v, xs = _pad_features(block_d, dim, u, v, xs)
+    dim_p = xs.shape[-1]
+    nd = dim_p // block_d
+    alpha_arr = jnp.broadcast_to(jnp.asarray(alpha, jnp.float32), (1,))
+
+    uv_spec = pl.BlockSpec((m, 1, block_d), lambda b, j: (0, b, j))
+    xs_spec = pl.BlockSpec((kk, 1, block_d), lambda b, j: (0, b, j))
+    tsel_spec = pl.BlockSpec((kk, 1), lambda b, j: (0, 0))
+    tsel = jnp.asarray(transpose, jnp.float32)[:, None]        # (K, 1)
+
+    coeff_ins, coeff_args = [], []
+    if any_t:
+        coeff_ins.append(uv_spec)
+        coeff_args.append(u)
+    if any_f:
+        coeff_ins.append(uv_spec)
+        coeff_args.append(v)
+    if any_t and any_f:
+        coeff_ins.append(tsel_spec)
+        coeff_args.append(tsel)
+    coeff = pl.pallas_call(
+        _make_coeff_multi_kernel(transpose),
+        grid=(bsz, nd),
+        in_specs=coeff_ins + [xs_spec],
+        out_specs=pl.BlockSpec((1, kk, m), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, kk, m), jnp.float32),
+        interpret=interpret,
+    )(*coeff_args, xs)
+
+    apply_ins, apply_args = [], []
+    if any_f:
+        apply_ins.append(uv_spec)
+        apply_args.append(u)
+    if any_t:
+        apply_ins.append(uv_spec)
+        apply_args.append(v)
+    if any_t and any_f:
+        apply_ins.append(tsel_spec)
+        apply_args.append(tsel)
+    out = pl.pallas_call(
+        _make_apply_multi_kernel(transpose),
+        grid=(bsz, nd),
+        in_specs=apply_ins + [
+            xs_spec,
+            pl.BlockSpec((1, kk, m), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((m, 1), lambda b, j: (0, b)),
+            pl.BlockSpec((1,), lambda b, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((kk, 1, block_d), lambda b, j: (0, b, j)),
+        out_shape=jax.ShapeDtypeStruct((kk, bsz, dim_p), xs.dtype),
+        interpret=interpret,
+    )(*apply_args, xs, coeff, mask, alpha_arr)
+
+    return out[:, :, :dim]
+
+
+# ---------------------------------------------------------------------------
+# Fused Broyden ring-buffer update
+# ---------------------------------------------------------------------------
+
+
+def _append_kernel(slot_ref, u_ref, v_ref, s_ref, hy_ref, b_ref, den_ref,
+                   upd_ref, out_u_ref, out_v_ref, ev_u_ref, ev_v_ref):
+    del slot_ref  # consumed by the index maps (scalar prefetch)
+    old_u = u_ref[0, 0, :]
+    old_v = v_ref[0, 0, :]
+    ev_u_ref[0, :] = old_u
+    ev_v_ref[0, :] = old_v
+    upd = upd_ref[0] > 0.5
+    a = (s_ref[0, :].astype(jnp.float32)
+         - hy_ref[0, :].astype(jnp.float32)) * den_ref[0]
+    out_u_ref[0, 0, :] = jnp.where(upd, a.astype(out_u_ref.dtype), old_u)
+    out_v_ref[0, 0, :] = jnp.where(
+        upd, b_ref[0, :].astype(out_v_ref.dtype), old_v)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def lowrank_append_pallas(
+    u: jax.Array,        # (m, B, D)
+    v: jax.Array,        # (m, B, D)
+    s: jax.Array,        # (B, D) step
+    hy: jax.Array,       # (B, D) H @ y
+    b: jax.Array,        # (B, D) H^T s — the second half of the pair
+    inv_den: jax.Array,  # (B,) f32 1 / (s^T H y), pre-guarded
+    slot: jax.Array,     # (B,) int32 ring slot to write
+    upd: jax.Array,      # (B,) f32 1.0 where the sample appends
+    *,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Write the Broyden pair ``a = (s - Hy) * inv_den``, ``b`` into ring
+    slot ``slot[bb]`` of U/V in place, touching ONLY that (1, 1, D) row per
+    sample (scalar-prefetched row indexing + input/output aliasing — no
+    gather/scatter round-trip over the (m, B, D) buffers).
+
+    Returns ``(new_u, new_v, evicted_u, evicted_v)``; the evicted row is the
+    slot's previous content, letting callers rank-one-correct carried
+    products like ``H @ g`` when the ring wraps.
+    """
+    m, bsz, dim = u.shape
+    block_d, u, v, s, hy, b = _pad_features(block_d, dim, u, v, s, hy, b)
+    dim_p = u.shape[-1]
+    nd = dim_p // block_d
+
+    row_spec = pl.BlockSpec((1, 1, block_d), lambda bb, j, sl: (sl[bb], bb, j))
+    vec_spec = pl.BlockSpec((1, block_d), lambda bb, j, sl: (bb, j))
+    per_b = pl.BlockSpec((1,), lambda bb, j, sl: (bb,))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bsz, nd),
+        in_specs=[row_spec, row_spec, vec_spec, vec_spec, vec_spec,
+                  per_b, per_b],
+        out_specs=[row_spec, row_spec, vec_spec, vec_spec],
+    )
+    new_u, new_v, ev_u, ev_v = pl.pallas_call(
+        _append_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(u.shape, u.dtype),
+            jax.ShapeDtypeStruct(v.shape, v.dtype),
+            jax.ShapeDtypeStruct((bsz, dim_p), u.dtype),
+            jax.ShapeDtypeStruct((bsz, dim_p), v.dtype),
+        ],
+        # aliasing indices count the scalar-prefetch operand: slot=0, u=1, v=2
+        input_output_aliases={1: 0, 2: 1},
+        interpret=interpret,
+    )(slot, u, v, s, hy, b, inv_den.astype(jnp.float32),
+      upd.astype(jnp.float32))
+
+    if dim_p != dim:
+        new_u, new_v = new_u[..., :dim], new_v[..., :dim]
+        ev_u, ev_v = ev_u[..., :dim], ev_v[..., :dim]
+    return new_u, new_v, ev_u, ev_v

@@ -32,6 +32,55 @@ def qn_apply_ref(
     return out.astype(x.dtype)
 
 
+def qn_apply_multi_ref(
+    u: jax.Array,      # (m, B, *F)
+    v: jax.Array,      # (m, B, *F)
+    xs: jax.Array,     # (K, B, *F) stacked right-hand sides
+    alpha: jax.Array,  # scalar
+    mask: jax.Array,   # (m, B)
+    transpose: tuple[bool, ...] | None = None,
+) -> jax.Array:
+    """``out[k] = (H^T if transpose[k] else H) @ xs[k]`` — the multi-vector
+    oracle: per-RHS ``qn_apply_ref`` with U/V swapped for transposed RHS.
+    ``transpose=None`` applies ``H`` to every RHS (the op-layer contract)."""
+    if transpose is None:
+        transpose = (False,) * xs.shape[0]
+    outs = [
+        qn_apply_ref(v, u, xs[k], alpha, mask) if t
+        else qn_apply_ref(u, v, xs[k], alpha, mask)
+        for k, t in enumerate(transpose)
+    ]
+    return jnp.stack(outs) if outs else xs[:0]
+
+
+def lowrank_append_ref(
+    u: jax.Array,        # (m, B, *F)
+    v: jax.Array,        # (m, B, *F)
+    s: jax.Array,        # (B, *F)
+    hy: jax.Array,       # (B, *F)
+    b: jax.Array,        # (B, *F)
+    inv_den: jax.Array,  # (B,)
+    slot: jax.Array,     # (B,) int32
+    upd: jax.Array,      # (B,) bool / 0-1
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused Broyden ring-buffer update oracle: writes ``a = (s - Hy) *
+    inv_den`` and ``b`` into ring slot ``slot[bb]`` where ``upd``, via a
+    one-hot masked select (no gather/scatter round-trip), and returns the
+    evicted ``(u, v)`` row pair."""
+    m, bsz = u.shape[0], u.shape[1]
+    feat_axes = (1,) * (u.ndim - 2)
+    hot = (jnp.arange(m, dtype=jnp.int32)[:, None] == slot[None, :])
+    hot = hot & (upd.astype(jnp.float32) > 0.5)[None, :]       # (m, B)
+    hotf = hot.reshape((m, bsz) + feat_axes)
+    a = ((s.astype(jnp.float32) - hy.astype(jnp.float32))
+         * inv_den.astype(jnp.float32).reshape((bsz,) + feat_axes))
+    barange = jnp.arange(bsz)
+    ev_u, ev_v = u[slot, barange], v[slot, barange]
+    new_u = jnp.where(hotf, a.astype(u.dtype)[None], u)
+    new_v = jnp.where(hotf, b.astype(v.dtype)[None], v)
+    return new_u, new_v, ev_u, ev_v
+
+
 def _gqa_expand(k: jax.Array, num_heads: int) -> jax.Array:
     """(B, T, KV, hd) -> (B, T, H, hd) by repeating KV head groups."""
     b, t, kv, hd = k.shape

@@ -2,6 +2,10 @@
 # Tier-1 test runner: one command locally and in CI.
 #
 #   ./test.sh              run the whole suite (quiet)
+#   ./test.sh kernels      interpret-mode Pallas kernel sweep only: every
+#                          pallas_interpret parametrization in
+#                          tests/test_kernels.py, so the TPU code path is
+#                          exercised on CPU (extra pytest args pass through)
 #   ./test.sh tests/x.py   pass any pytest args through
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -10,5 +14,10 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # force the host CPU platform: tests must not try to grab an accelerator,
 # and multi-device tests spawn subprocesses that set their own flags.
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+if [[ "${1:-}" == "kernels" ]]; then
+  shift
+  exec python -m pytest -q tests/test_kernels.py "$@"
+fi
 
 exec python -m pytest -q "$@"

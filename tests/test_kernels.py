@@ -63,6 +63,107 @@ def test_qn_apply_block_tiling_edges():
                                rtol=1e-4, atol=1e-3)
 
 
+def test_qn_apply_small_dim_lane_padding():
+    """dim < block_d and not a multiple of 128: the feature axis must be
+    padded up to the lane boundary, never tiled raggedly."""
+    from repro.kernels.qn_apply import _pad_features
+    blk, u = _pad_features(512, 100, jnp.zeros((4, 2, 100)))
+    assert blk % 128 == 0 and u.shape[-1] % blk == 0
+    m, bsz, d = 4, 2, 100
+    ks = jax.random.split(jax.random.fold_in(KEY, 99), 3)
+    u = jax.random.normal(ks[0], (m, bsz, d))
+    v = jax.random.normal(ks[1], (m, bsz, d))
+    x = jax.random.normal(ks[2], (bsz, d))
+    mask = jnp.ones((m, bsz), jnp.float32)
+    want = ref.qn_apply_ref(u, v, x, jnp.float32(0.3), mask)
+    got = ops.qn_apply(u, v, x, jnp.float32(0.3), mask,
+                       impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# qn_apply_multi (the fused Broyden-step primitive)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,bsz,d", [(1, 1, 8), (4, 2, 100), (8, 3, 256),
+                                     (30, 2, 777)])
+@pytest.mark.parametrize("transpose", [
+    (False,), (True,), (False, True), (True, True, True),
+    (False, True, False, True),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_qn_apply_multi_pallas_vs_oracle(m, bsz, d, transpose, dtype):
+    kk = len(transpose)
+    ks = jax.random.split(jax.random.fold_in(KEY, m * 977 + d + kk), 4)
+    u = jax.random.normal(ks[0], (m, bsz, d), dtype)
+    v = jax.random.normal(ks[1], (m, bsz, d), dtype)
+    xs = jax.random.normal(ks[2], (kk, bsz, d), dtype)
+    count = jax.random.randint(ks[3], (bsz,), 0, m + 1)
+    mask = (jnp.arange(m)[:, None] < count[None, :]).astype(jnp.float32)
+    alpha = jnp.float32(0.7)
+    want = ref.qn_apply_multi_ref(u, v, xs, alpha, mask, transpose)
+    got = ops.qn_apply_multi(u, v, xs, alpha, mask, transpose,
+                             impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_qn_apply_multi_matches_single_calls():
+    """The fused op must agree with K independent qn_apply calls."""
+    m, bsz, d = 6, 2, 160
+    ks = jax.random.split(jax.random.fold_in(KEY, 5), 3)
+    u = jax.random.normal(ks[0], (m, bsz, d))
+    v = jax.random.normal(ks[1], (m, bsz, d))
+    xs = jax.random.normal(ks[2], (2, bsz, d))
+    mask = jnp.ones((m, bsz), jnp.float32)
+    alpha = jnp.float32(1.0)
+    fused = ops.qn_apply_multi(u, v, xs, alpha, mask, (False, True),
+                               impl="pallas_interpret")
+    single_f = ops.qn_apply(u, v, xs[0], alpha, mask, impl="pallas_interpret")
+    single_t = ops.qn_apply(v, u, xs[1], alpha, mask, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(fused[0]), np.asarray(single_f),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fused[1]), np.asarray(single_t),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_qn_stream_bytes_accounting():
+    """Uniform flags stream one U + one V pass total; mixed flags two each."""
+    m, bsz, d, item = 8, 2, 256, 4
+    uni = ops.qn_stream_bytes(m, bsz, d, item, (False, False, False))
+    mixed = ops.qn_stream_bytes(m, bsz, d, item, (False, True))
+    assert uni == 2 * m * bsz * d * item
+    assert mixed == 4 * m * bsz * d * item
+
+
+# ---------------------------------------------------------------------------
+# lowrank_append (fused Broyden ring-buffer update)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,bsz,d", [(2, 1, 8), (6, 3, 100), (16, 2, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lowrank_append_pallas_vs_oracle(m, bsz, d, dtype):
+    ks = jax.random.split(jax.random.fold_in(KEY, m * 31 + d), 7)
+    u = jax.random.normal(ks[0], (m, bsz, d), dtype)
+    v = jax.random.normal(ks[1], (m, bsz, d), dtype)
+    s = jax.random.normal(ks[2], (bsz, d))
+    hy = jax.random.normal(ks[3], (bsz, d))
+    b = jax.random.normal(ks[4], (bsz, d))
+    inv_den = jax.random.normal(ks[5], (bsz,))
+    slot = jax.random.randint(ks[6], (bsz,), 0, m)
+    upd = (jnp.arange(bsz) % 2 == 0).astype(jnp.float32)
+    want = ref.lowrank_append_ref(u, v, s, hy, b, inv_den, slot, upd)
+    got = ops.lowrank_append(u, v, s, hy, b, inv_den, slot, upd,
+                             impl="pallas_interpret")
+    for got_a, want_a in zip(got, want):
+        np.testing.assert_allclose(np.asarray(got_a, np.float32),
+                                   np.asarray(want_a, np.float32),
+                                   **_tol(dtype))
+
+
 # ---------------------------------------------------------------------------
 # rmsnorm
 # ---------------------------------------------------------------------------

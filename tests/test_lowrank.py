@@ -129,6 +129,89 @@ def test_multidim_features_stay_unflattened():
                                atol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# multi-apply (the fused Broyden-step primitive) vs the dense materialization
+# ---------------------------------------------------------------------------
+
+multi_dims = st.tuples(
+    st.integers(1, 3),    # batch
+    st.integers(1, 12),   # feature dim
+    st.integers(1, 9),    # memory (covers m % 8 != 0 padding)
+    st.integers(0, 11),   # number of appends (covers ragged count + wrap)
+    st.integers(1, 4),    # number of right-hand sides K
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(multi_dims, st.sampled_from(["f32", "bf16"]))
+def test_matvec_multi_matches_dense(shape, dtype_name):
+    """matvec_multi with per-RHS transpose flags == dense H / H^T applies,
+    across dtypes, ragged per-sample count, and non-sublane-multiple m."""
+    bsz, d, m, n, kk = shape
+    dtype = jnp.float32 if dtype_name == "f32" else jnp.bfloat16
+    key = jax.random.PRNGKey(bsz * 7919 + d * 311 + m * 37 + n * 5 + kk)
+    H = _random_lowrank(key, bsz, d, m, n)
+    H = LowRank(alpha=H.alpha, u=H.u.astype(dtype), v=H.v.astype(dtype),
+                count=H.count)
+    xs = [jax.random.normal(jax.random.fold_in(key, 50 + k), (bsz, d), dtype)
+          for k in range(kk)]
+    transpose = tuple(bool((n + k) % 2) for k in range(kk))
+    outs = H.matvec_multi(xs, transpose)
+    dense = np.asarray(H.dense())
+    tol = dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+    assert len(outs) == kk
+    for x, t, got in zip(xs, transpose, outs):
+        spec = "bji,bj->bi" if t else "bij,bj->bi"
+        want = np.einsum(spec, dense, np.asarray(x, np.float32))
+        np.testing.assert_allclose(np.asarray(got, np.float32), want, **tol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(dims)
+def test_matvec_multi_consistent_with_single(shape):
+    bsz, d, m, n = shape
+    key = jax.random.PRNGKey(hash(shape) % (2**31))
+    H = _random_lowrank(key, bsz, d, m, n)
+    x1 = jax.random.normal(jax.random.fold_in(key, 11), (bsz, d))
+    x2 = jax.random.normal(jax.random.fold_in(key, 12), (bsz, d))
+    got1, got2 = H.matvec_multi((x1, x2), (False, True))
+    np.testing.assert_allclose(np.asarray(got1), np.asarray(H.matvec(x1)),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got2), np.asarray(H.rmatvec(x2)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(dims)
+def test_apply_update_matches_append(shape):
+    """The fused Broyden update must be byte-equivalent to computing
+    a = (s - Hy)/den and appending, and must report the evicted pair."""
+    bsz, d, m, n = shape
+    key = jax.random.PRNGKey(hash(("upd",) + shape) % (2**31))
+    H = _random_lowrank(key, bsz, d, m, n)
+    s = jax.random.normal(jax.random.fold_in(key, 21), (bsz, d))
+    hy = jax.random.normal(jax.random.fold_in(key, 22), (bsz, d))
+    b = jax.random.normal(jax.random.fold_in(key, 23), (bsz, d))
+    den = 1.0 + jnp.abs(jax.random.normal(jax.random.fold_in(key, 24), (bsz,)))
+    upd = jnp.asarray([(i + n) % 3 != 0 for i in range(bsz)])
+
+    slot = (H.count % m).astype(jnp.int32)
+    old_u = np.asarray(H.u)[np.asarray(slot), np.arange(bsz)]
+    old_v = np.asarray(H.v)[np.asarray(slot), np.arange(bsz)]
+
+    a = (s - hy) / den[:, None]
+    want = H.append(a, b, upd)
+    got, ev_u, ev_v = H.apply_update(s, hy, b, den, upd)
+    np.testing.assert_allclose(np.asarray(got.u), np.asarray(want.u),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got.v), np.asarray(want.v),
+                               rtol=1e-6, atol=1e-6)
+    assert got.count.tolist() == want.count.tolist()
+    np.testing.assert_allclose(np.asarray(ev_u), old_u, atol=0)
+    np.testing.assert_allclose(np.asarray(ev_v), old_v, atol=0)
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_sherman_morrison_inverse_roundtrip(dtype):
     """Broyden-style: H built as inverse of B = I + sum a b^T must satisfy
