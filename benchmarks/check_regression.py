@@ -1,0 +1,156 @@
+"""Kernel perf-regression gate: fresh bench vs the committed baseline.
+
+``python -m benchmarks.check_regression`` re-measures the interpret-safe
+kernel sweep (``benchmarks.bench_kernels.run``) on this host, persists the
+fresh record next to the baseline (``BENCH_kernels.fresh.json`` — the
+committed ``BENCH_kernels.json`` is never overwritten by the gate), and
+fails (exit 1) when, for any (op, shape, impl) row present in the baseline:
+
+  * the row disappeared from the fresh record (coverage shrank), or
+  * ``bytes_moved`` GREW on a fused op (``qn_apply_multi*`` /
+    ``lowrank_append``) — the analytic streaming model is
+    hardware-independent, so any growth is a real fusion regression, or
+  * ``wall_ms`` exceeds ``ratio * host_scale * baseline + slack``.  Wall
+    time IS hardware-dependent (the baseline is committed from one machine,
+    CI re-measures on another), so the gate self-calibrates: with >= 3
+    comparable rows, the MEDIAN fresh/baseline wall ratio is taken as the
+    host-speed factor (clamped to [1, 4] — only slowdowns are corrected,
+    and never more than 4x) and divided out before gating.  A uniformly
+    slower runner therefore stays green, while ONE op blowing up relative
+    to the fleet still trips the 1.3x ratio.  The absolute slack (default
+    0.25 ms) keeps sub-millisecond rows from flaking on jitter — these are
+    CPU oracle timings of ops whose real target is the TPU kernel, so the
+    gate is a trajectory tripwire, not a microbenchmark.
+
+``--fresh PATH`` compares a pre-measured record instead of re-running;
+``--update-baseline`` rewrites the committed baseline from the fresh
+measurement (use after an intentional perf change, and commit the diff).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+BASELINE = Path("results/benchmarks/BENCH_kernels.json")
+FRESH = Path("results/benchmarks/BENCH_kernels.fresh.json")
+FUSED_OPS = ("qn_apply_multi", "lowrank_append")
+
+# the machine-readable record keeps the same fields benchmarks/run.py writes
+KEEP = ("op", "shape", "impl", "wall_ms", "bytes_moved", "unfused_bytes",
+        "uv_traffic_ratio", "max_abs_err")
+
+
+def _key(row: dict) -> tuple:
+    return (row["op"], row["shape"], row["impl"])
+
+
+def measure() -> list[dict]:
+    from benchmarks import bench_kernels
+
+    rows = bench_kernels.run()
+    return [{k: r[k] for k in KEEP if k in r} for r in rows]
+
+
+def _host_scale(base: list[dict], fresh_by: dict) -> float:
+    """Median fresh/baseline wall ratio = the host-speed factor (see module
+    docstring).  1.0 when fewer than 3 comparable rows exist — a single-row
+    record must not calibrate away its own regression."""
+    ratios = []
+    for b in base:
+        f = fresh_by.get(_key(b))
+        bw = b.get("wall_ms")
+        fw = f.get("wall_ms") if f else None
+        if bw and fw:
+            ratios.append(fw / bw)
+    if len(ratios) < 3:
+        return 1.0
+    ratios.sort()
+    mid = len(ratios) // 2
+    med = ratios[mid] if len(ratios) % 2 else (ratios[mid - 1] + ratios[mid]) / 2
+    return min(max(med, 1.0), 4.0)
+
+
+def compare(base: list[dict], fresh: list[dict], *, wall_ratio: float,
+            wall_slack_ms: float) -> int:
+    fresh_by = {_key(r): r for r in fresh}
+    scale = _host_scale(base, fresh_by)
+    if scale != 1.0:
+        print(f"note host-speed calibration: this host measures "
+              f"{scale:.2f}x the baseline host (median over rows); wall "
+              "limits scaled accordingly")
+    bad = 0
+    for b in base:
+        k = _key(b)
+        f = fresh_by.get(k)
+        tag = f"{k[0]} {k[1]} [{k[2]}]"
+        if f is None:
+            print(f"FAIL {tag}: row missing from fresh record")
+            bad += 1
+            continue
+        fused = any(k[0].startswith(p) for p in FUSED_OPS)
+        if b.get("bytes_moved") is not None and f.get("bytes_moved") is not None:
+            if f["bytes_moved"] > b["bytes_moved"]:
+                level = "FAIL" if fused else "warn"
+                print(f"{level} {tag}: bytes_moved {b['bytes_moved']} -> "
+                      f"{f['bytes_moved']}"
+                      + ("" if fused else " (unfused op: not gating)"))
+                bad += fused
+        bw, fw = b.get("wall_ms"), f.get("wall_ms")
+        if bw is not None and fw is not None:
+            limit = wall_ratio * scale * bw + wall_slack_ms
+            if fw > limit:
+                print(f"FAIL {tag}: wall {bw}ms -> {fw}ms "
+                      f"(> {wall_ratio}x * {scale:.2f} host scale "
+                      f"+ {wall_slack_ms}ms slack)")
+                bad += 1
+        err = f.get("max_abs_err")
+        if err is not None and err > 10 * max(b.get("max_abs_err") or 0.0, 1e-3):
+            print(f"warn {tag}: max_abs_err {b.get('max_abs_err')} -> {err}")
+    extra = sorted(set(fresh_by) - {_key(b) for b in base})
+    for k in extra:
+        print(f"note new row {k[0]} {k[1]} [{k[2]}] (not in baseline — "
+              "refresh with --update-baseline to start gating it)")
+    print(f"check_regression: {len(base)} baseline rows, {bad} violations")
+    return 1 if bad else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", type=Path, default=BASELINE)
+    ap.add_argument("--fresh", type=Path, default=None,
+                    help="compare this record instead of re-measuring")
+    ap.add_argument("--write-fresh", type=Path, default=FRESH)
+    ap.add_argument("--wall-ratio", type=float, default=1.3)
+    ap.add_argument("--wall-slack-ms", type=float, default=0.25)
+    ap.add_argument("--update-baseline", action="store_true")
+    args = ap.parse_args()
+
+    if not args.baseline.exists():
+        print(f"check_regression: baseline {args.baseline} missing -> FAIL "
+              "(regenerate with `python -m benchmarks.run --only kernels` "
+              "and commit it)")
+        return 1
+    base = json.loads(args.baseline.read_text())
+
+    if args.fresh is not None:
+        fresh = json.loads(args.fresh.read_text())
+    else:
+        fresh = measure()
+        args.write_fresh.parent.mkdir(parents=True, exist_ok=True)
+        args.write_fresh.write_text(json.dumps(fresh, indent=2))
+        print(f"# wrote {args.write_fresh} ({len(fresh)} rows)")
+
+    if args.update_baseline:
+        args.baseline.write_text(json.dumps(fresh, indent=2))
+        print(f"# baseline {args.baseline} updated — commit the diff")
+        return 0
+
+    return compare(base, fresh, wall_ratio=args.wall_ratio,
+                   wall_slack_ms=args.wall_slack_ms)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

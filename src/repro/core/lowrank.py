@@ -118,6 +118,11 @@ class LowRank:
     def transpose(self) -> "LowRank":
         return LowRank(alpha=self.alpha, u=self.v, v=self.u, count=self.count)
 
+    def constrain(self, fn) -> "LowRank":
+        """Apply a layout hook to both (m, B, *F) buffers (sharded batched
+        solves pin U/V batch-sharded alongside the solver state)."""
+        return dataclasses.replace(self, u=fn(self.u), v=fn(self.v))
+
     # -- updates -------------------------------------------------------------
 
     def append(self, a: jax.Array, b: jax.Array, update_mask: jax.Array) -> "LowRank":

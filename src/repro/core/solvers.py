@@ -36,6 +36,32 @@ from repro.core.lowrank import LowRank, _expand, bdot, bnorm
 Array = jax.Array
 
 
+class SolveSharding(NamedTuple):
+    """Layout hooks threaded through a batched solve under SPMD.
+
+    ``state``   applied to every (B, *F) iterate/carry — pins the solver
+                state to the caller's activation layout (batch over the DP
+                mesh axes, features optionally TP-sharded).
+    ``memory``  applied to every (m, B, *F) quasi-Newton buffer — pins the
+                low-rank (U, V) chain batch-sharded alongside the state, so
+                ``qn_apply_multi`` runs device-local over batch and the only
+                collective is the feature reduce on the coefficient block.
+
+    Both default to identity; hooks must be cheap (``with_sharding_constraint``
+    closures). The whole-batch convergence reduction (``jnp.all(conv)`` in
+    the loop condition) is the one unavoidable cross-device step-count
+    collective — it is what drives early exit for the batched solve.
+    """
+
+    state: Callable[[Array], Array]
+    memory: Callable[[Array], Array]
+
+
+# Module-level identity hooks: a stable default object keeps jit caches warm
+# for the unsharded path.
+NO_SHARDING = SolveSharding(state=lambda a: a, memory=lambda a: a)
+
+
 @dataclasses.dataclass(frozen=True)
 class SolverConfig:
     max_steps: int = 30
@@ -84,6 +110,8 @@ def broyden_solve(
     *,
     init_lowrank: LowRank | None = None,
     alpha0: float = 1.0,
+    sharding: SolveSharding | None = None,
+    freeze_mask: Array | None = None,
 ) -> SolveResult:
     """Solve ``g(z) = 0`` for a batch ``z0: (B, D)``.
 
@@ -106,16 +134,25 @@ def broyden_solve(
     carried product is advanced to ``H_{n+1} @ g(z_{n+1})`` by a rank-one
     correction using the appended pair and the ring-evicted pair returned by
     the fused ``apply_update`` — O(B·D), no extra U/V traffic.
+
+    Batched serving mode: ``freeze_mask: (B,) bool`` marks samples (padding
+    slots, already-served requests) as converged at entry — they never move,
+    never consume qN memory, and the whole-batch ``all(conv)`` early exit
+    fires as soon as every *live* sample is done.  ``sharding`` pins the
+    iterate and the (U, V) memory to the caller's SPMD layout.
     """
     bsz, feat = z0.shape[0], z0.shape[1:]
+    sh = sharding or NO_SHARDING
+    z0 = sh.state(z0)
     H0 = init_lowrank
     if H0 is None:
         H0 = LowRank.identity(bsz, feat, cfg.memory, alpha=alpha0, dtype=z0.dtype)
+    H0 = H0.constrain(sh.memory)
 
     g0 = g(z0)
     res0 = bnorm(g0)
     thresh = _stop_threshold(res0, bnorm(z0), cfg)
-    Hg0 = H0.matvec(g0.astype(jnp.float32))
+    Hg0 = sh.state(H0.matvec(g0.astype(jnp.float32)))
 
     trace0 = jnp.full((max(cfg.max_steps, 1), bsz), jnp.inf, jnp.float32)
 
@@ -128,7 +165,7 @@ def broyden_solve(
         p = -Hg
         active = ~conv
         am = _expand(active, z)
-        z_new = jnp.where(am, z + cfg.step_size * p.astype(z.dtype), z)
+        z_new = sh.state(jnp.where(am, z + cfg.step_size * p.astype(z.dtype), z))
         gz_new = jnp.where(am, g(z_new), gz)
 
         s = (z_new - z).astype(jnp.float32)
@@ -163,9 +200,12 @@ def broyden_solve(
         trace = trace.at[k].set(jnp.where(active, res, trace[k]))
         return (k + 1, z_new, gz_new, H, Hg, conv, best_z, best_res, trace)
 
+    conv0 = res0 < thresh
+    if freeze_mask is not None:
+        conv0 = conv0 | freeze_mask
     state0 = (
         jnp.int32(0), z0, g0, H0, Hg0,
-        res0 < thresh, z0, res0, trace0,
+        conv0, z0, res0, trace0,
     )
     if cfg.unroll:
         state = state0
@@ -190,9 +230,13 @@ def fixed_point_solve(
     cfg: SolverConfig,
     *,
     damping: float = 1.0,
+    sharding: SolveSharding | None = None,
+    freeze_mask: Array | None = None,
 ) -> SolveResult:
     """Damped Picard iteration on ``z <- (1-d) z + d f(z)``; residual f(z)-z."""
     bsz = z0.shape[0]
+    sh = sharding or NO_SHARDING
+    z0 = sh.state(z0)
     H = LowRank.identity(bsz, 1, 1, alpha=1.0)  # placeholder (JFB shares I)
     res0 = bnorm(f(z0) - z0)
     thresh = _stop_threshold(res0, bnorm(z0), cfg)
@@ -205,14 +249,18 @@ def fixed_point_solve(
     def body(state):
         k, z, conv, best_res, trace = state
         fz = f(z)
-        z_new = jnp.where(_expand(conv, z), z, (1 - damping) * z + damping * fz)
+        z_new = sh.state(
+            jnp.where(_expand(conv, z), z, (1 - damping) * z + damping * fz))
         res = bnorm(fz - z)
         trace = trace.at[k].set(jnp.where(conv, trace[k], res))
         best_res = jnp.minimum(best_res, res)
         conv = conv | (res < thresh)
         return (k + 1, z_new, conv, best_res, trace)
 
-    state0 = (jnp.int32(0), z0, res0 < thresh, res0, trace0)
+    conv0 = res0 < thresh
+    if freeze_mask is not None:
+        conv0 = conv0 | freeze_mask
+    state0 = (jnp.int32(0), z0, conv0, res0, trace0)
     if cfg.unroll:
         state = state0
         for _ in range(cfg.max_steps):
@@ -230,16 +278,21 @@ def anderson_solve(
     *,
     mixing: float = 1.0,
     ridge: float = 1e-8,
+    sharding: SolveSharding | None = None,
+    freeze_mask: Array | None = None,
 ) -> SolveResult:
     """Anderson acceleration with window m = cfg.memory (type-II)."""
     bsz, feat = z0.shape[0], z0.shape[1:]
     m = min(cfg.memory, 8)
+    sh = sharding or NO_SHARDING
+    z0 = sh.state(z0)
     res0 = bnorm(f(z0) - z0)
     thresh = _stop_threshold(res0, bnorm(z0), cfg)
     trace0 = jnp.full((max(cfg.max_steps, 1), bsz), jnp.inf, jnp.float32)
 
-    Z = jnp.zeros((m, bsz) + feat, z0.dtype)   # iterate history
-    F = jnp.zeros((m, bsz) + feat, z0.dtype)   # residual history
+    # history buffers share the qN-memory layout: (m, B, *F), batch-sharded
+    Z = sh.memory(jnp.zeros((m, bsz) + feat, z0.dtype))   # iterate history
+    F = sh.memory(jnp.zeros((m, bsz) + feat, z0.dtype))   # residual history
 
     def cond(state):
         k, *_, conv, _ = state
@@ -263,14 +316,18 @@ def anderson_solve(
         w = w * valid[None, :]
         w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-12)
         z_and = jnp.einsum("bi,ib...->b...", w, Z.astype(jnp.float32)).astype(z.dtype)
-        z_new = jnp.where(_expand(conv, z), z, (1 - mixing) * z + mixing * z_and)
+        z_new = sh.state(
+            jnp.where(_expand(conv, z), z, (1 - mixing) * z + mixing * z_and))
         res = bnorm(r)
         trace = trace.at[k].set(jnp.where(conv, trace[k], res))
         conv = conv | (res < thresh)
         return (k + 1, z_new, Z, F, conv, trace)
 
+    conv0 = res0 < thresh
+    if freeze_mask is not None:
+        conv0 = conv0 | freeze_mask
     k, z, Z, F, conv, trace = jax.lax.while_loop(
-        cond, body, (jnp.int32(0), z0, Z, F, res0 < thresh, trace0)
+        cond, body, (jnp.int32(0), z0, Z, F, conv0, trace0)
     )
     H = LowRank.identity(bsz, 1, 1, alpha=1.0)
     return SolveResult(z, H, bnorm(f(z) - z), k, conv, trace, {})
@@ -288,6 +345,8 @@ def adjoint_broyden_solve(
     *,
     outer_grad: Callable[[Array], Array] | None = None,
     sigma_from_step: bool = False,  # secant direction: step instead of residual
+    sharding: SolveSharding | None = None,
+    freeze_mask: Array | None = None,
 ) -> SolveResult:
     """Adjoint Broyden: secant ``sigma^T B_{n+1} = sigma^T J_g(z_{n+1})``.
 
@@ -300,8 +359,11 @@ def adjoint_broyden_solve(
     hypergradient (3) consumes. Requires ``outer_grad``.
     """
     bsz, feat = z0.shape[0], z0.shape[1:]
+    sh = sharding or NO_SHARDING
+    z0 = sh.state(z0)
     B = LowRank.identity(bsz, feat, cfg.memory, alpha=1.0, dtype=jnp.float32)
     H = LowRank.identity(bsz, feat, cfg.memory, alpha=1.0, dtype=jnp.float32)
+    B, H = B.constrain(sh.memory), H.constrain(sh.memory)
 
     g0 = g(z0)
     res0 = bnorm(g0)
@@ -335,7 +397,7 @@ def adjoint_broyden_solve(
         active = ~conv
         am = _expand(active, z)
         p = -H.matvec(gz.astype(jnp.float32))
-        z_new = jnp.where(am, z + cfg.step_size * p.astype(z.dtype), z)
+        z_new = sh.state(jnp.where(am, z + cfg.step_size * p.astype(z.dtype), z))
         gz_new = jnp.where(am, g(z_new), gz)
 
         if sigma_from_step:
@@ -360,7 +422,10 @@ def adjoint_broyden_solve(
         conv = conv | (res < thresh)
         return (k + 1, z_new, gz_new, B2, H2, conv, trace)
 
-    state0 = (jnp.int32(0), z0, g0, B, H, res0 < thresh, trace0)
+    conv0 = res0 < thresh
+    if freeze_mask is not None:
+        conv0 = conv0 | freeze_mask
+    state0 = (jnp.int32(0), z0, g0, B, H, conv0, trace0)
     k, z, gz, B, H, conv, trace = jax.lax.while_loop(cond, body, state0)
     return SolveResult(z, H, bnorm(gz), k, conv, trace, {"B": B})
 

@@ -33,7 +33,16 @@ from repro.implicit.estimators import (
     shine_cotangent_multi,
     solve_adjoint,
 )
-from repro.implicit.fixed_point import ImplicitStats, implicit_fixed_point
+from repro.implicit.engine import (
+    CoalescedBatch,
+    batched_solve,
+    coalesce_states,
+)
+from repro.implicit.fixed_point import (
+    ImplicitStats,
+    implicit_fixed_point,
+    solve_sharding,
+)
 from repro.implicit.pytree import pack_state, ravel_state
 from repro.implicit.registry import (
     ESTIMATORS,
@@ -46,6 +55,7 @@ from repro.implicit.registry import (
 __all__ = [
     "AdjointResult",
     "BackwardConfig",
+    "CoalescedBatch",
     "ESTIMATORS",
     "EstimatorContext",
     "ForwardConfig",
@@ -54,7 +64,9 @@ __all__ = [
     "Registry",
     "SOLVERS",
     "adjoint_system",
+    "batched_solve",
     "bilevel_context",
+    "coalesce_states",
     "deq_context",
     "estimate_cotangent",
     "estimate_hypergrad_cotangent",
@@ -68,4 +80,5 @@ __all__ = [
     "shine_cotangent",
     "shine_cotangent_multi",
     "solve_adjoint",
+    "solve_sharding",
 ]

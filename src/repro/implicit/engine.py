@@ -1,0 +1,113 @@
+"""Batched fixed-point engine: coalesced, sharded, per-sample-masked solves.
+
+Serving traffic is ragged: requests arrive one at a time, differ in
+difficulty (iterations to converge) and leave at different times.  Running
+one solve per request wastes the accelerator; running a naive batch makes
+every request pay for the slowest sample.  This module is the middle path —
+the batched solve mode of the tentpole engine:
+
+  * ``coalesce_states`` packs a ragged list of per-request states into one
+    fixed-slot batch (padding slots repeat the first request and are masked
+    invalid), so one jitted solve serves the whole wave.
+  * ``batched_solve`` runs the registered forward solver ONCE over the
+    batch with per-sample convergence masking: converged and invalid
+    samples freeze (their updates are masked out, they consume no
+    quasi-Newton memory), and the whole-batch ``all(converged)`` reduction
+    — the step-count collective — drives early exit, so the batch stops as
+    soon as the last *live* sample converges.
+  * under a mesh, the solver state and the low-rank (U, V) memory are
+    pinned batch-sharded via ``solve_sharding``; each device then solves
+    its batch shard fully locally and the only cross-device chatter is the
+    per-step convergence reduction (plus the coefficient-block reduce when
+    the feature axes are TP-sharded).
+
+This is the *inference* engine: no ``custom_vjp``, no saved residuals.
+Training (always a full, valid batch) goes through
+``implicit_fixed_point``, which shares all the machinery below except the
+freeze mask.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.implicit.config import ImplicitConfig
+from repro.implicit.fixed_point import ImplicitStats, prepare_flat_problem
+from repro.implicit.registry import SOLVERS
+
+# populate the registry on import (mirrors fixed_point.py)
+from repro.implicit import solvers as _builtin_solvers  # noqa: F401
+
+Array = jax.Array
+Pytree = Any
+
+
+class CoalescedBatch(NamedTuple):
+    """A wave of requests packed into one fixed-slot solver batch."""
+
+    z0: Pytree        # (slots, ...) stacked initial states
+    valid: Array      # (slots,) bool — False for padding slots
+    unbatch: Callable[[Pytree], list[Pytree]]  # batch -> per-request states
+
+
+def coalesce_states(states: list[Pytree], slots: int | None = None) -> CoalescedBatch:
+    """Stack per-request state pytrees (no leading batch dim) into one batch.
+
+    ``slots`` pads the batch to a fixed size (keeping the jitted solve's
+    shape stable across waves); padding repeats request 0 and is marked
+    invalid, so the solver freezes it at entry — padding costs no
+    iterations and no quasi-Newton memory.
+    """
+    if not states:
+        raise ValueError("coalesce_states needs at least one request")
+    n = len(states)
+    slots = n if slots is None else slots
+    if slots < n:
+        raise ValueError(f"{n} requests do not fit {slots} slots")
+    padded = list(states) + [states[0]] * (slots - n)
+    z0 = jax.tree_util.tree_map(lambda *leaves: jnp.stack(leaves), *padded)
+    valid = jnp.arange(slots) < n
+
+    def unbatch(z: Pytree) -> list[Pytree]:
+        return [jax.tree_util.tree_map(lambda a: a[i], z) for i in range(n)]
+
+    return CoalescedBatch(z0=z0, valid=valid, unbatch=unbatch)
+
+
+def batched_solve(
+    f: Callable[[Any, Any, Pytree], Pytree],
+    params: Any,
+    x: Any,
+    z0: Pytree,
+    cfg: ImplicitConfig,
+    *,
+    valid: Array | None = None,
+    ctx=None,
+    state_axes: tuple[str | None, ...] | None = None,
+) -> tuple[Pytree, ImplicitStats]:
+    """One batched forward solve of ``z = f(params, x, z)`` (inference only).
+
+    ``valid: (B,) bool`` marks live samples; the rest are frozen at ``z0``
+    (returned untouched, reported converged).  ``ctx``/``state_axes`` pin
+    the solve to the model's SPMD layout exactly as in
+    ``implicit_fixed_point``.  Jit-able; differentiating through it unrolls
+    the solver loop — use ``implicit_fixed_point`` for training.
+    """
+    z0_flat, unravel, f_flat, sharding = prepare_flat_problem(
+        f, z0, ctx, state_axes)
+    freeze = None if valid is None else ~valid
+
+    solver = SOLVERS.get(cfg.forward.solver)
+    res = _builtin_solvers.call_solver(
+        solver, lambda z: f_flat(params, x, z), z0_flat, cfg.solver_cfg(),
+        sharding=sharding, freeze_mask=freeze)
+    z = res.z
+    if valid is not None:
+        # padding/finished slots return their input state bit-for-bit
+        mask = valid.reshape(valid.shape + (1,) * (z.ndim - 1))
+        z = jnp.where(mask, z, z0_flat)
+    stats = ImplicitStats(res.residual, res.n_steps, res.converged, res.trace)
+    return unravel(z), stats

@@ -152,11 +152,13 @@ def solve_adjoint(
     *,
     u0: Array | None = None,
     init_lowrank: LowRank | None = None,
+    sharding=None,
 ) -> SolveResult:
     """Iteratively solve the adjoint system with Broyden (original backward)."""
     psi = adjoint_system(vjp_z, w)
     u0 = w if u0 is None else u0
-    return broyden_solve(psi, u0, cfg, init_lowrank=init_lowrank)
+    return broyden_solve(psi, u0, cfg, init_lowrank=init_lowrank,
+                         sharding=sharding)
 
 
 # ---------------------------------------------------------------------------
@@ -217,15 +219,18 @@ def deq_context(
     vjp_z: Callable[[Array], Array],
     w: Array,
     H: LowRank,
+    sharding=None,
 ) -> EstimatorContext:
     """DEQ adjoint: batched Broyden on ``(I - J_f)^T u = w``; the shared
-    inverse is the forward Broyden chain (transposed for warm starts)."""
+    inverse is the forward Broyden chain (transposed for warm starts).
+    ``sharding`` pins the refine/full solves to the forward solve's layout."""
     bsz = w.shape[0]
 
     def solve(b, u0, steps, warm):
         res = solve_adjoint(
             vjp_z, b, cfg.adjoint_cfg(steps),
             u0=u0, init_lowrank=(H.transpose() if warm else None),
+            sharding=sharding,
         )
         return res.z, res.residual, res.n_steps
 
@@ -303,10 +308,11 @@ def estimate_cotangent(
     vjp_z: Callable[[Array], Array],
     w: Array,
     H: LowRank,
+    sharding=None,
 ) -> AdjointResult:
     """Run the configured estimator on the DEQ adjoint problem."""
     estimator = ESTIMATORS.get(cfg.backward.estimator)
-    return estimator(cfg, deq_context(cfg, vjp_z, w, H))
+    return estimator(cfg, deq_context(cfg, vjp_z, w, H, sharding=sharding))
 
 
 def estimate_hypergrad_cotangent(

@@ -25,6 +25,7 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.solvers import SolveSharding
 from repro.implicit.config import ImplicitConfig
 from repro.implicit.estimators import estimate_cotangent
 from repro.implicit.pytree import ravel_state
@@ -44,9 +45,51 @@ class ImplicitStats(NamedTuple):
     trace: Array       # (max_steps, B)
 
 
-def _solve_forward(f_z, z0, cfg: ImplicitConfig, outer_grad=None):
+def solve_sharding(ctx, state_axes) -> SolveSharding | None:
+    """Build the solver layout hooks from a :class:`ShardCtx`.
+
+    ``state_axes`` are the logical axis names of the (single-leaf) solver
+    state, e.g. ``("batch", "seq_res", "embed_act")`` for the DEQ-LM or
+    ``("batch", "flat")`` for a packed multi-leaf state.  The quasi-Newton
+    (U, V) memory is ``(m,) + state`` and rides the same rules with the
+    ``qn_mem`` logical axis prepended, so it stays batch-sharded next to
+    the state it preconditions.  Returns None (identity hooks) off-mesh.
+    """
+    if ctx is None or ctx.mesh is None:
+        return None
+    axes = tuple(state_axes)
+    return SolveSharding(
+        state=lambda a: ctx.constrain(a, axes),
+        memory=lambda a: ctx.constrain(a, ("qn_mem",) + axes),
+    )
+
+
+def prepare_flat_problem(f, z0, ctx, state_axes):
+    """Shared preamble of ``implicit_fixed_point`` and ``engine.batched_solve``:
+    pack the state, resolve the effective state axes (packed / multi-leaf
+    states use ``("batch", flat...)``), build the layout hooks, and wrap the
+    user's pytree map ``f(params, x, z)`` into its flat-state counterpart.
+
+    Returns ``(z0_flat, unravel, f_flat, sharding)``.
+    """
+    z0_flat, unravel = ravel_state(z0)
+    packed = len(jax.tree_util.tree_leaves(z0)) > 1
+    if packed or state_axes is None:
+        state_axes = ("batch",) + (None,) * (z0_flat.ndim - 1)
+    sharding = solve_sharding(ctx, state_axes)
+
+    def f_flat(p, xx, z_flat):
+        return ravel_state(f(p, xx, unravel(z_flat)))[0]
+
+    return z0_flat, unravel, f_flat, sharding
+
+
+def _solve_forward(f_z, z0, cfg: ImplicitConfig, outer_grad=None,
+                   sharding=None, freeze_mask=None):
     solver = SOLVERS.get(cfg.forward.solver)
-    return solver(f_z, z0, cfg.solver_cfg(), outer_grad=outer_grad)
+    return _builtin_solvers.call_solver(
+        solver, f_z, z0, cfg.solver_cfg(), outer_grad=outer_grad,
+        sharding=sharding, freeze_mask=freeze_mask)
 
 
 def _bind_outer(outer_grad, params, x):
@@ -55,22 +98,23 @@ def _bind_outer(outer_grad, params, x):
     return lambda z: outer_grad(params, x, z)
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
-def _implicit(f, cfg: ImplicitConfig, outer_grad, params, x, z0):
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _implicit(f, cfg: ImplicitConfig, outer_grad, sharding, params, x, z0):
     res = _solve_forward(lambda z: f(params, x, z), z0, cfg,
-                         _bind_outer(outer_grad, params, x))
+                         _bind_outer(outer_grad, params, x), sharding)
     stats = ImplicitStats(res.residual, res.n_steps, res.converged, res.trace)
     return res.z, stats
 
 
-def _implicit_fwd(f, cfg: ImplicitConfig, outer_grad, params, x, z0):
+def _implicit_fwd(f, cfg: ImplicitConfig, outer_grad, sharding, params, x, z0):
     res = _solve_forward(lambda z: f(params, x, z), z0, cfg,
-                         _bind_outer(outer_grad, params, x))
+                         _bind_outer(outer_grad, params, x), sharding)
     stats = ImplicitStats(res.residual, res.n_steps, res.converged, res.trace)
     return (res.z, stats), (params, x, res.z, res.lowrank)
 
 
-def _implicit_bwd(f, cfg: ImplicitConfig, outer_grad, saved, cotangents):
+def _implicit_bwd(f, cfg: ImplicitConfig, outer_grad, sharding, saved,
+                  cotangents):
     params, x, z_star, H = saved
     w, _stats_bar = cotangents  # stats carry no gradient
 
@@ -78,7 +122,7 @@ def _implicit_bwd(f, cfg: ImplicitConfig, outer_grad, saved, cotangents):
     _, vjp = jax.vjp(lambda p, xx, z: f(p, xx, z), params, x, z_star)
     vjp_z = lambda u: vjp(u.astype(z_star.dtype))[2]
 
-    adj = estimate_cotangent(cfg, vjp_z, w, H)
+    adj = estimate_cotangent(cfg, vjp_z, w, H, sharding=sharding)
     p_bar, x_bar, _ = vjp(adj.u.astype(z_star.dtype))
     z0_bar = jnp.zeros_like(z_star)  # init point does not influence z*
     return p_bar, x_bar, z0_bar
@@ -95,6 +139,8 @@ def implicit_fixed_point(
     cfg: ImplicitConfig,
     *,
     outer_grad: Callable[[Any, Any, Pytree], Pytree] | None = None,
+    ctx=None,
+    state_axes: tuple[str | None, ...] | None = None,
 ) -> tuple[Pytree, ImplicitStats]:
     """Differentiable fixed point of ``z = f(params, x, z)`` over pytrees.
 
@@ -103,18 +149,25 @@ def implicit_fixed_point(
     OPA extra updates in the adjoint-Broyden forward (paper §2.3); leave
     None otherwise.
 
+    Sharded solves: pass the model's ``ctx: ShardCtx`` plus the logical axis
+    names of the *single-leaf* state (``state_axes``) to pin the solver
+    iterate and the quasi-Newton (U, V) memory to the activation layout —
+    batch over the DP mesh axes, so the inverse-estimate application is
+    device-local and only the per-step convergence reduction crosses
+    devices.  Multi-leaf states pack to ``(B, D)`` and use
+    ``("batch", "flat")`` regardless of ``state_axes``.
+
     IMPORTANT: everything traced must flow through the differentiable args
     ``(params, x, z0)``, never through f's closure (tracer leak otherwise).
     """
-    z0_flat, unravel = ravel_state(z0)
-
-    def f_flat(p, xx, z_flat):
-        return ravel_state(f(p, xx, unravel(z_flat)))[0]
+    z0_flat, unravel, f_flat, sharding = prepare_flat_problem(
+        f, z0, ctx, state_axes)
 
     outer_flat = None
     if outer_grad is not None:
         def outer_flat(p, xx, z_flat):  # noqa: F811
             return ravel_state(outer_grad(p, xx, unravel(z_flat)))[0]
 
-    z_flat, stats = _implicit(f_flat, cfg, outer_flat, params, x, z0_flat)
+    z_flat, stats = _implicit(f_flat, cfg, outer_flat, sharding, params, x,
+                              z0_flat)
     return unravel(z_flat), stats

@@ -2,15 +2,23 @@
 
 Thin adapters from the registry's uniform signature
 
-    solver(f, z0, cfg, *, outer_grad=None) -> SolveResult
+    solver(f, z0, cfg, *, outer_grad=None, sharding=None, freeze_mask=None)
+        -> SolveResult
 
 (where ``f(z) -> z`` is the fixed-point map) onto the quasi-Newton root
 solvers in ``core/solvers.py``, which variously want the residual
 ``g(z) = z - f(z)`` (Broyden family) or ``f`` itself (Picard/Anderson).
+
+``sharding`` is a :class:`repro.core.solvers.SolveSharding` pinning the
+solver state and quasi-Newton memory to the caller's SPMD layout;
+``freeze_mask: (B,) bool`` marks samples as converged at entry (the batched
+serving mode — padding/finished slots never iterate).  Both are optional
+and every registered solver must accept them.
 """
 
 from __future__ import annotations
 
+import inspect
 from typing import Callable
 
 import jax
@@ -28,26 +36,61 @@ from repro.implicit.registry import register_solver
 Array = jax.Array
 
 
+def call_solver(solver, f, z0, cfg, *, outer_grad=None, sharding=None,
+                freeze_mask=None):
+    """Invoke a registered solver, tolerating legacy signatures.
+
+    Externally registered solvers may predate the ``sharding`` /
+    ``freeze_mask`` kwargs.  ``sharding`` is a pure layout hint, so it is
+    silently dropped for solvers that don't take it; ``freeze_mask``
+    CHANGES SEMANTICS (frozen samples must not move), so it is forwarded
+    only to solvers that NAME the parameter — a bare ``**kwargs`` does not
+    prove the solver honours the mask, and silently dropping it there
+    would let frozen serving slots keep iterating.
+    """
+    kw = {"outer_grad": outer_grad, "sharding": sharding,
+          "freeze_mask": freeze_mask}
+    params = inspect.signature(solver).parameters
+    var_kw = any(p.kind is p.VAR_KEYWORD for p in params.values())
+    if "freeze_mask" not in params:
+        if freeze_mask is not None:
+            raise TypeError(
+                f"solver {solver!r} does not declare freeze_mask; batched "
+                "per-sample masking needs a mask-aware solver")
+        del kw["freeze_mask"]
+    if not var_kw:
+        for name in list(kw):
+            if name not in params:
+                del kw[name]
+    return solver(f, z0, cfg, **kw)
+
+
 @register_solver("broyden")
 def _broyden(f: Callable[[Array], Array], z0: Array, cfg: SolverConfig, *,
-             outer_grad=None) -> SolveResult:
-    return broyden_solve(lambda z: z - f(z), z0, cfg)
+             outer_grad=None, sharding=None, freeze_mask=None) -> SolveResult:
+    return broyden_solve(lambda z: z - f(z), z0, cfg,
+                         sharding=sharding, freeze_mask=freeze_mask)
 
 
 @register_solver("adjoint_broyden")
 def _adjoint_broyden(f: Callable[[Array], Array], z0: Array, cfg: SolverConfig, *,
-                     outer_grad=None) -> SolveResult:
+                     outer_grad=None, sharding=None,
+                     freeze_mask=None) -> SolveResult:
     return adjoint_broyden_solve(lambda z: z - f(z), z0, cfg,
-                                 outer_grad=outer_grad)
+                                 outer_grad=outer_grad, sharding=sharding,
+                                 freeze_mask=freeze_mask)
 
 
 @register_solver("fixed_point")
 def _fixed_point(f: Callable[[Array], Array], z0: Array, cfg: SolverConfig, *,
-                 outer_grad=None) -> SolveResult:
-    return fixed_point_solve(f, z0, cfg)
+                 outer_grad=None, sharding=None,
+                 freeze_mask=None) -> SolveResult:
+    return fixed_point_solve(f, z0, cfg, sharding=sharding,
+                             freeze_mask=freeze_mask)
 
 
 @register_solver("anderson")
 def _anderson(f: Callable[[Array], Array], z0: Array, cfg: SolverConfig, *,
-              outer_grad=None) -> SolveResult:
-    return anderson_solve(f, z0, cfg)
+              outer_grad=None, sharding=None, freeze_mask=None) -> SolveResult:
+    return anderson_solve(f, z0, cfg, sharding=sharding,
+                          freeze_mask=freeze_mask)

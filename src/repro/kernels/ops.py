@@ -23,6 +23,14 @@ the hot path of every Broyden-family iteration), ``lowrank_append`` (fused
 Broyden ring-buffer update writing only the target slot row), ``attention``,
 ``decode_attention``, ``rmsnorm``.
 
+SPMD posture (the sharded batched fixed-point engine): the solvers pin the
+(U, V) chain batch-sharded next to the state, so on the ref path every qn
+op is fully device-local over batch; when the *feature* axes are
+TP-sharded, the RHS are grouped by transpose flag and each group's
+coefficients reduce in ONE einsum over the whole (K_g, m, B) block —
+a single collective per flag group, not one per RHS (kernels/ref.py).
+The Pallas path always sees the per-shard local view.
+
 The qn ops also keep trace-time stream statistics
 (``reset_qn_stream_stats``/``qn_stream_stats``): inside a ``lax.while_loop``
 the body traces once, so the counters report per-iteration call/byte costs —

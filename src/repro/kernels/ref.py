@@ -41,16 +41,34 @@ def qn_apply_multi_ref(
     transpose: tuple[bool, ...] | None = None,
 ) -> jax.Array:
     """``out[k] = (H^T if transpose[k] else H) @ xs[k]`` — the multi-vector
-    oracle: per-RHS ``qn_apply_ref`` with U/V swapped for transposed RHS.
-    ``transpose=None`` applies ``H`` to every RHS (the op-layer contract)."""
+    oracle.  ``transpose=None`` applies ``H`` to every RHS (the op-layer
+    contract).
+
+    The RHS are grouped by transpose flag and each group's coefficients are
+    one einsum over the whole (K_g, m, B) block, so under GSPMD a TP-sharded
+    feature axis costs a SINGLE collective per flag group on the coefficient
+    block (not one per RHS), and a batch-sharded solve stays fully
+    device-local.  Per phase only the buffer(s) the flag mix needs are read,
+    matching the streaming model in ``kernels/ops.qn_stream_bytes``.
+    """
+    kk = xs.shape[0]
     if transpose is None:
-        transpose = (False,) * xs.shape[0]
-    outs = [
-        qn_apply_ref(v, u, xs[k], alpha, mask) if t
-        else qn_apply_ref(u, v, xs[k], alpha, mask)
-        for k, t in enumerate(transpose)
-    ]
-    return jnp.stack(outs) if outs else xs[:0]
+        transpose = (False,) * kk
+    xf = xs.astype(jnp.float32)
+    maskf = mask.astype(jnp.float32)
+    out = jnp.zeros(xs.shape, jnp.float32)
+    for t in (False, True):
+        idx = [k for k, tk in enumerate(transpose) if bool(tk) is t]
+        if not idx:
+            continue
+        cb, ab = (v, u) if not t else (u, v)   # coefficient / apply buffers
+        grp = xf[jnp.asarray(idx)]
+        coeff = jnp.einsum("mb...,kb...->kmb", cb.astype(jnp.float32), grp)
+        coeff = coeff * maskf[None]
+        res = alpha * grp + jnp.einsum(
+            "kmb,mb...->kb...", coeff, ab.astype(jnp.float32))
+        out = out.at[jnp.asarray(idx)].set(res)
+    return out.astype(xs.dtype)
 
 
 def lowrank_append_ref(

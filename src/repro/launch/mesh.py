@@ -24,11 +24,7 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"mesh {shape} needs {n} devices, have {len(devices)} "
             "(the dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512)"
         )
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-        devices=devices[:n],
-    )
+    return _make_mesh(shape, axes, devices[:n])
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
@@ -36,8 +32,21 @@ def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     import jax
 
     n = int(np.prod(shape))
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-        devices=jax.devices()[:n],
-    )
+    return _make_mesh(shape, axes, jax.devices()[:n])
+
+
+def _make_mesh(shape, axes, devices):
+    """`jax.make_mesh` across jax versions: `axis_types` (explicit-sharding
+    Auto) only exists from 0.5; older versions are Auto-only, so dropping the
+    kwarg is semantics-preserving."""
+    import jax
+    import inspect
+
+    if "axis_types" in inspect.signature(jax.make_mesh).parameters:
+        kinds = getattr(jax.sharding, "AxisType", None)
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(kinds.Auto,) * len(axes),
+            devices=devices,
+        )
+    return jax.make_mesh(shape, axes, devices=devices)

@@ -3,37 +3,67 @@
 Spins up the fixed-slot continuous-batching loop (runtime/serving.py) on a
 reduced config and drains a synthetic request stream — the CPU-runnable
 counterpart of the decode_32k / long_500k dry-run cells.
+
+``--mesh DxM`` runs the loop sharded (decode rules: batch over "data",
+sequence-sharded KV over "model") on a forced multi-device host platform —
+the CPU rehearsal of the sharded batched serving path.  Set it together
+with ``--force-devices N`` (which must win the race with jax backend
+initialization, so it is applied before any device query).
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import time
-
-import jax
-import numpy as np
-
-from repro.configs.registry import ARCHS, smoke_config
-from repro.models import lm
-from repro.parallel.sharding import ShardCtx
-from repro.runtime.serving import Request, ServeLoop
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=sorted(ARCHS), default="minicpm-2b")
+    ap.add_argument("--arch", default="minicpm-2b")
     ap.add_argument("--deq", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="run sharded on a (data=D, model=M) mesh")
+    ap.add_argument("--force-devices", type=int, default=0,
+                    help="forced host CPU device count (CPU multi-device "
+                         "rehearsal; must be >= D*M)")
     args = ap.parse_args()
 
+    if args.force_devices:
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count="
+            f"{args.force_devices}").strip()
+
+    import jax
+    import numpy as np
+
+    from repro.configs.registry import ARCHS, smoke_config
+    from repro.launch.mesh import make_test_mesh
+    from repro.models import lm
+    from repro.parallel.sharding import DECODE_RULES, ShardCtx
+    from repro.runtime.serving import Request, ServeLoop
+
+    if args.arch not in ARCHS:
+        raise SystemExit(f"unknown arch {args.arch!r}; have {sorted(ARCHS)}")
     cfg = smoke_config(args.arch, deq=args.deq)
     if cfg.family == "audio":
         raise SystemExit("encoder-only arch: no autoregressive serving")
-    ctx = ShardCtx.for_mesh(None)
+    if args.mesh:
+        d, m = (int(v) for v in args.mesh.lower().split("x"))
+        if len(jax.devices()) < d * m:
+            raise SystemExit(
+                f"mesh {d}x{m} needs {d*m} devices, have "
+                f"{len(jax.devices())} (use --force-devices)")
+        mesh = make_test_mesh((d, m), ("data", "model"))
+        ctx = ShardCtx.for_mesh(mesh, DECODE_RULES)
+    else:
+        ctx = ShardCtx.for_mesh(None)
     params = lm.init_params(cfg, jax.random.PRNGKey(args.seed))
 
     loop = ServeLoop(params, cfg, ctx, slots=args.slots, max_len=args.max_len)

@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.implicit import ImplicitConfig, implicit_fixed_point
+from repro.implicit import ImplicitConfig, batched_solve, implicit_fixed_point
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
@@ -295,12 +295,17 @@ def apply_stack(
     caches: dict | None = None,
     cache_index: Array | None = None,
     train: bool = True,
+    active: Array | None = None,
 ):
-    """Runs all stack groups. Returns (x, new_caches, aux)."""
+    """Runs all stack groups. Returns (x, new_caches, aux).
+
+    ``active: (B,) bool`` (serving only) freezes inactive batch slots in the
+    DEQ fixed-point solve — they pay no solver iterations."""
     aux = {"moe_aux": jnp.float32(0.0), "moe_z": jnp.float32(0.0)}
 
     if cfg.deq.enabled:
-        return _apply_deq(params, x, cfg, ctx, positions, caches, cache_index, train)
+        return _apply_deq(params, x, cfg, ctx, positions, caches, cache_index,
+                          train, active)
 
     shared = params.get("shared_attn")
     new_caches: dict = {}
@@ -355,7 +360,8 @@ def apply_stack(
     return x, (new_caches if caches is not None else None), aux
 
 
-def _apply_deq(params, x_emb, cfg, ctx, positions, caches, cache_index, train):
+def _apply_deq(params, x_emb, cfg, ctx, positions, caches, cache_index, train,
+               active=None):
     """The paper's technique at LM scale: weight-tied block group solved to a
     fixed point, with SHINE-family backward (cfg.deq.backward)."""
     d = cfg.deq
@@ -363,7 +369,10 @@ def _apply_deq(params, x_emb, cfg, ctx, positions, caches, cache_index, train):
     shared = params.get("shared_attn")
 
     # single-array state: implicit_fixed_point keeps (B, S, d) unflattened,
-    # so TP-sharded activations stay sharded through the solver
+    # so TP-sharded activations stay sharded through the solver; under a
+    # mesh these axes also pin the solver's quasi-Newton (U, V) memory
+    # batch-sharded next to the state (sharded batched solve)
+    state_axes = ("batch", "seq_res", "embed_act")
     deq_cfg = ImplicitConfig.from_strings(
         solver=d.solver, max_steps=d.max_steps, tol=d.tol, memory=d.memory,
         backward=d.backward, refine_steps=d.refine_steps,
@@ -387,7 +396,9 @@ def _apply_deq(params, x_emb, cfg, ctx, positions, caches, cache_index, train):
             return ctx.constrain(h, ("batch", "seq_res", "embed_act"))
 
         z0 = jnp.zeros_like(x_emb)
-        z_star, stats = implicit_fixed_point(f, p_all, (x_emb, positions), z0, deq_cfg)
+        z_star, stats = implicit_fixed_point(f, p_all, (x_emb, positions), z0,
+                                             deq_cfg, ctx=ctx,
+                                             state_axes=state_axes)
         aux = {"moe_aux": jnp.float32(0.0), "moe_z": jnp.float32(0.0),
                "deq_residual": jnp.mean(stats.residual),
                "deq_steps": stats.n_steps.astype(jnp.float32)}
@@ -406,9 +417,18 @@ def _apply_deq(params, x_emb, cfg, ctx, positions, caches, cache_index, train):
         return h
 
     z0 = jnp.zeros_like(x_emb)
-    z_star, stats = implicit_fixed_point(
-        f_dec, p_all, (x_emb, positions, caches, cache_index), z0, deq_cfg
-    )
+    if active is not None:
+        # serving: freeze inactive slots in the batched solve (no backward
+        # pass exists at decode time, so the inference engine applies)
+        z_star, stats = batched_solve(
+            f_dec, p_all, (x_emb, positions, caches, cache_index), z0,
+            deq_cfg, valid=active, ctx=ctx, state_axes=state_axes,
+        )
+    else:
+        z_star, stats = implicit_fixed_point(
+            f_dec, p_all, (x_emb, positions, caches, cache_index), z0, deq_cfg,
+            ctx=ctx, state_axes=state_axes,
+        )
     # one more pass to materialize the updated caches at the fixed point
     h = z_star + x_emb
     new_list = []
@@ -526,14 +546,16 @@ def prefill(params, batch: dict, cfg: ModelConfig, ctx: ShardCtx, max_len: int):
 
 
 def decode_step(params, caches, tokens: Array, cache_index: Array,
-                cfg: ModelConfig, ctx: ShardCtx):
+                cfg: ModelConfig, ctx: ShardCtx, active: Array | None = None):
     """One decode step. tokens: (B,), cache_index: (B,). Returns
-    (logits (B, V), new caches)."""
+    (logits (B, V), new caches).  ``active: (B,) bool`` lets the serving
+    loop freeze finished/empty slots inside the DEQ fixed-point solve."""
     batch = {"tokens": tokens[:, None]}
     x = embed_tokens(params["embed"], batch["tokens"], cfg, ctx)
     pos = cache_index[:, None]
     x, caches, _aux = apply_stack(
-        params, x, cfg, ctx, pos, caches, cache_index, train=False
+        params, x, cfg, ctx, pos, caches, cache_index, train=False,
+        active=active,
     )
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = lm_logits(params["embed"], x, cfg, ctx)

@@ -160,7 +160,10 @@ def rules_for_mesh(rules: ShardingRules, mesh: Mesh | None) -> ShardingRules:
         if isinstance(v, str):
             return v if v in names else None
         kept = tuple(a for a in v if a in names)
-        return kept if kept else None
+        if not kept:
+            return None
+        # unwrap 1-tuples so specs compare equal to the plain-string form
+        return kept[0] if len(kept) == 1 else kept
 
     return ShardingRules({k: fix(v) for k, v in rules.table.items()})
 

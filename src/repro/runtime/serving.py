@@ -6,6 +6,19 @@ slots; each engine tick runs ONE jitted decode_step for all active slots
 region. Completion: EOS or max_new_tokens. This is the vLLM-style skeleton
 scaled to the container; the jitted step functions are exactly the ones the
 dry-run lowers at production shapes.
+
+Batched-engine behaviour (the sharded batched fixed-point engine):
+
+  * **Request coalescing** — admission groups every queued same-length
+    prompt wave into ONE batched prefill call (jit cache keyed by
+    ``(prompt_len, wave_size)``), instead of one compile + one call per
+    request.
+  * **Per-sample convergence masking** — the active-slot mask is passed
+    into ``decode_step``; for DEQ models the fixed-point solver freezes
+    inactive slots (they consume no iterations and no quasi-Newton
+    memory), and the solve early-exits once every live slot converges.
+  * Under a mesh (``ctx.mesh``), the decode step and the solver's (U, V)
+    memory run batch-sharded — see ``repro.implicit.engine``.
 """
 
 from __future__ import annotations
@@ -44,11 +57,30 @@ class ServeLoop:
         self.caches = lm.init_cache(cfg, slots, max_len)
         self.lengths = jnp.zeros((slots,), jnp.int32)
         self.cur_tok = jnp.zeros((slots,), jnp.int32)
+        # stats: how many prefill calls / prefilled requests (coalescing
+        # means calls <= requests)
+        self.prefill_calls = 0
+        self.prefill_requests = 0
 
         self._decode = jax.jit(
-            lambda p, c, t, i: lm.decode_step(p, c, t, i, cfg, ctx)
+            lambda p, c, t, i, a: lm.decode_step(p, c, t, i, cfg, ctx,
+                                                 active=a)
         )
         self._prefill_cache = {}
+        # The batch axis of each cache leaf, probed once from shapes (batch
+        # sits at axis 1 under the stacked-layer leading axis, or axis 2 for
+        # unit-stacked SSM caches — probing is robust to new layouts).
+        # Batch-independent leaves get -1, NOT None: tree_map treats None as
+        # an empty subtree and would raise a structure mismatch in _admit.
+        p1 = jax.eval_shape(lambda: lm.init_cache(cfg, 1, max_len))
+        p2 = jax.eval_shape(lambda: lm.init_cache(cfg, 2, max_len))
+        self._cache_batch_axis = jax.tree_util.tree_map(
+            lambda a, b: next(
+                (i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y),
+                -1,
+            ),
+            p1, p2,
+        )
 
     # -- admission -----------------------------------------------------
 
@@ -56,29 +88,38 @@ class ServeLoop:
         self.queue.put(req)
 
     def _admit(self) -> None:
-        for s in range(self.slots):
-            if self.active[s] is not None or self.queue.empty():
-                continue
-            req = self.queue.get()
-            self.active[s] = req
-            plen = len(req.prompt)
-            key = plen
+        free = [s for s in range(self.slots) if self.active[s] is None]
+        wave: list[tuple[int, Request]] = []
+        while free and not self.queue.empty():
+            wave.append((free.pop(0), self.queue.get()))
+        if not wave:
+            return
+        # coalesce: one batched prefill per prompt length present in the wave
+        by_len: dict[int, list[tuple[int, Request]]] = {}
+        for slot, req in wave:
+            by_len.setdefault(len(req.prompt), []).append((slot, req))
+        for plen, group in by_len.items():
+            key = (plen, len(group))
             if key not in self._prefill_cache:
                 self._prefill_cache[key] = jax.jit(
                     lambda p, toks: lm.prefill(
                         p, {"tokens": toks}, self.cfg, self.ctx, self.max_len
                     )
                 )
-            toks = jnp.asarray([req.prompt], jnp.int32)
-            logits, cache1, lens = self._prefill_cache[key](self.params, toks)
-            # copy slot-0 of the fresh cache into slot s of the live cache
-            self.caches = jax.tree_util.tree_map(
-                lambda live, new: _slot_write(live, new, s), self.caches, cache1,
-            )
-            nxt = int(jnp.argmax(logits[0, -1]))
-            req.out.append(nxt)
-            self.lengths = self.lengths.at[s].set(plen)
-            self.cur_tok = self.cur_tok.at[s].set(nxt)
+            toks = jnp.asarray([req.prompt for _, req in group], jnp.int32)
+            logits, cache_new, _lens = self._prefill_cache[key](self.params, toks)
+            self.prefill_calls += 1
+            self.prefill_requests += len(group)
+            for row, (slot, req) in enumerate(group):
+                self.caches = jax.tree_util.tree_map(
+                    lambda live, new, ax: _slot_write(live, new, slot, row, ax),
+                    self.caches, cache_new, self._cache_batch_axis,
+                )
+                nxt = int(jnp.argmax(logits[row, -1]))
+                req.out.append(nxt)
+                self.active[slot] = req
+                self.lengths = self.lengths.at[slot].set(plen)
+                self.cur_tok = self.cur_tok.at[slot].set(nxt)
 
     # -- engine tick -----------------------------------------------------
 
@@ -89,7 +130,8 @@ class ServeLoop:
         if not mask.any():
             return 0
         logits, self.caches = self._decode(
-            self.params, self.caches, self.cur_tok, self.lengths
+            self.params, self.caches, self.cur_tok, self.lengths,
+            jnp.asarray(mask),
         )
         nxt = jnp.argmax(logits, -1).astype(jnp.int32)
         self.lengths = self.lengths + jnp.asarray(mask, jnp.int32)
@@ -115,16 +157,15 @@ class ServeLoop:
         return reqs
 
 
-def _slot_write(live: jax.Array, new: jax.Array, slot: int) -> jax.Array:
-    """Write batch-slot 0 of ``new`` into batch-slot ``slot`` of ``live``.
-
-    Cache layouts put batch at axis 1 (stacked-layer leading axis) or axis 2
-    (unit-stacked SSM caches) — detected by matching the size-1 batch dim of
-    the single-request cache."""
-    for ax in range(1, new.ndim):
-        if new.shape[ax] == 1 and live.shape[ax] != 1:
-            idx = [slice(None)] * live.ndim
-            idx[ax] = slice(slot, slot + 1)
-            return live.at[tuple(idx)].set(new)
-    # shapes already match (scalar-per-batch caches)
-    return live
+def _slot_write(live: jax.Array, new: jax.Array, slot: int, row: int,
+                batch_axis: int) -> jax.Array:
+    """Write batch-row ``row`` of ``new`` into batch-slot ``slot`` of
+    ``live`` along the probed ``batch_axis`` (-1 = scalar-per-batch cache
+    leaves with no batch axis: already identical across requests)."""
+    if batch_axis < 0:
+        return live
+    idx = [slice(None)] * live.ndim
+    idx[batch_axis] = slice(row, row + 1)
+    piece = new[tuple(idx)]
+    idx[batch_axis] = slice(slot, slot + 1)
+    return live.at[tuple(idx)].set(piece)

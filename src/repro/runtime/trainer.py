@@ -61,6 +61,16 @@ class Trainer:
             # fail fast (with the registered options listed) before jit
             SOLVERS.get(cfg.deq.solver)
             ESTIMATORS.get(cfg.deq.backward)
+        if ctx.mesh is not None:
+            # fail fast before jit: the batched fixed-point solve (and plain
+            # DP) shards the batch over the DP axes; an indivisible batch
+            # would error deep inside GSPMD with an opaque message
+            dp = ctx.axis_size("batch")
+            if dp > 1 and tcfg.global_batch % dp != 0:
+                raise ValueError(
+                    f"global_batch={tcfg.global_batch} not divisible by the "
+                    f"data-parallel mesh extent {dp} (axes behind 'batch')"
+                )
         self.loss_fn = loss_fn or (
             lambda p, b: lm.loss_fn(p, b, cfg, ctx, z_loss=tcfg.z_loss)
         )

@@ -1,12 +1,21 @@
 #!/usr/bin/env bash
 # Tier-1 test runner: one command locally and in CI.
 #
-#   ./test.sh              run the whole suite (quiet)
+#   ./test.sh              tier-1 suite, gated on tests/baseline_failures.txt
+#                          (exit 0 iff no failure OUTSIDE the recorded
+#                          baseline — "no worse than seed", machine-checked)
 #   ./test.sh kernels      interpret-mode Pallas kernel sweep only: every
 #                          pallas_interpret parametrization in
 #                          tests/test_kernels.py, so the TPU code path is
 #                          exercised on CPU (extra pytest args pass through)
-#   ./test.sh tests/x.py   pass any pytest args through
+#   ./test.sh ci           what CI runs, reproducible offline: tier-1 suite
+#                          + kernel sweep (both emitting JUnit XML under
+#                          results/junit/) + the bench perf-regression gate
+#                          (benchmarks/check_regression.py) — no network,
+#                          no installs
+#   ./test.sh lint         ruff when available, else a dependency-free
+#                          compileall pass (the container has no linter)
+#   ./test.sh tests/x.py   pass any pytest args through (ungated)
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -15,9 +24,45 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # and multi-device tests spawn subprocesses that set their own flags.
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
-if [[ "${1:-}" == "kernels" ]]; then
-  shift
-  exec python -m pytest -q tests/test_kernels.py "$@"
-fi
+run_gated() {
+  # pytest + baseline gate: known failures don't fail the build, NEW ones do
+  local junit="$1"; shift
+  mkdir -p results/junit
+  set +e
+  python -m pytest --junitxml="$junit" "$@"
+  local code=$?
+  set -e
+  python tests/check_baseline.py --junit "$junit" \
+    --baseline tests/baseline_failures.txt --pytest-exit "$code"
+}
 
-exec python -m pytest -q "$@"
+case "${1:-}" in
+  "")
+    run_gated results/junit/tier1.xml -q
+    ;;
+  kernels)
+    shift
+    exec python -m pytest -q tests/test_kernels.py "$@"
+    ;;
+  ci)
+    shift
+    run_gated results/junit/tier1.xml -q
+    mkdir -p results/junit
+    python -m pytest -q tests/test_kernels.py \
+      --junitxml=results/junit/kernels.xml
+    python -m benchmarks.check_regression
+    echo "ci: tier-1 + kernel sweep + bench regression gate all green"
+    ;;
+  lint)
+    shift
+    if command -v ruff >/dev/null 2>&1; then
+      ruff check src tests benchmarks
+    else
+      python -m compileall -q src tests benchmarks
+      echo "lint: compileall clean (ruff unavailable — full lint runs in CI)"
+    fi
+    ;;
+  *)
+    exec python -m pytest -q "$@"
+    ;;
+esac

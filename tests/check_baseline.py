@@ -1,0 +1,118 @@
+"""Machine-check "tier-1 no worse than the seed".
+
+Reads a pytest JUnit XML report and the known-failure baseline
+(``tests/baseline_failures.txt``: one ``tests/file.py::test_id`` per line,
+``#`` comments allowed) and exits
+
+  0  every failure in the report is in the baseline (and the run neither
+     crashed nor failed to collect),
+  1  any NEW failure / collection error appeared — a regression,
+  1  the report is missing/empty (a silently-skipped suite must not gate
+     green).
+
+Baseline entries that now PASS are reported so the file can shrink — the
+gate stays green (a fixed test is progress, not a regression), but CI logs
+nag until the line is removed.
+
+Usage:  python tests/check_baseline.py --junit results/junit/tier1.xml \
+            --baseline tests/baseline_failures.txt [--pytest-exit N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import xml.etree.ElementTree as ET
+from pathlib import Path
+
+
+def load_baseline(path: Path) -> set[str]:
+    if not path.exists():
+        return set()
+    out = set()
+    for line in path.read_text().splitlines():
+        line = line.strip()
+        if line and not line.startswith("#"):
+            out.add(line)
+    return out
+
+
+def testcase_id(case: ET.Element) -> str:
+    """Rebuild the pytest node id ``path::[class::]name`` from junit attrs.
+
+    The default (xunit2) report only carries the dotted ``classname``
+    (``tests.test_x[.TestClass]``); the file/class split is recovered by
+    probing which dotted prefix is an existing .py file (the checker runs
+    from the repo root, like pytest)."""
+    cls = case.get("classname", "")
+    name = case.get("name", "")
+    file_attr = case.get("file")
+    if file_attr:
+        mod = file_attr.replace("/", ".").removesuffix(".py")
+        inner = cls[len(mod) + 1:] if cls.startswith(mod + ".") else ""
+        return f"{file_attr}{'::' + inner if inner else ''}::{name}"
+    parts = cls.split(".")
+    for i in range(len(parts), 0, -1):
+        cand = Path("/".join(parts[:i]) + ".py")
+        if cand.exists():
+            inner = "::".join(parts[i:])
+            return f"{cand}{'::' + inner if inner else ''}::{name}"
+    return f"{cls.replace('.', '/')}.py::{name}"
+
+
+def collect_failures(junit: Path) -> tuple[list[str], int]:
+    root = ET.parse(junit).getroot()
+    suites = root.iter("testsuite") if root.tag == "testsuites" else [root]
+    failures, total = [], 0
+    for suite in suites:
+        for case in suite.iter("testcase"):
+            total += 1
+            if case.find("failure") is not None or case.find("error") is not None:
+                failures.append(testcase_id(case))
+    return failures, total
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--junit", required=True, type=Path)
+    ap.add_argument("--baseline", required=True, type=Path)
+    ap.add_argument("--pytest-exit", type=int, default=None,
+                    help="exit code of the pytest run (2+ = crash/usage "
+                         "error: always a regression)")
+    args = ap.parse_args()
+
+    if args.pytest_exit is not None and args.pytest_exit not in (0, 1):
+        print(f"check_baseline: pytest exited {args.pytest_exit} "
+              "(interrupted / internal / usage error) -> FAIL")
+        return 1
+    if not args.junit.exists():
+        print(f"check_baseline: {args.junit} missing -> FAIL")
+        return 1
+
+    failures, total = collect_failures(args.junit)
+    if total == 0:
+        print("check_baseline: report contains zero testcases -> FAIL")
+        return 1
+
+    baseline = load_baseline(args.baseline)
+    new = sorted(set(failures) - baseline)
+    fixed = sorted(f for f in baseline if f not in set(failures))
+
+    print(f"check_baseline: {total} cases, {len(failures)} failed "
+          f"({len(baseline)} baselined)")
+    if fixed:
+        print("  baseline entries now PASSING — remove them from "
+              f"{args.baseline}:")
+        for f in fixed:
+            print(f"    {f}")
+    if new:
+        print("  NEW failures (not in baseline) — regression:")
+        for f in new:
+            print(f"    {f}")
+        return 1
+    print("  no new failures: tier-1 is no worse than the recorded baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,6 +11,13 @@ import pytest
 jax.config.update("jax_enable_x64", False)
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: multi-device subprocess tests (forced host device count)",
+    )
+
+
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)

@@ -1,0 +1,148 @@
+"""Tests for the CI gate itself: the baseline failure gate
+(tests/check_baseline.py) and the bench perf-regression comparator
+(benchmarks/check_regression.py).  Pure-python and instant — if the gate
+logic rots, CI green becomes meaningless, so the gate is tier-1 too."""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+JUNIT = """<?xml version="1.0"?>
+<testsuites><testsuite name="pytest" tests="3">
+<testcase classname="tests.test_solvers" name="test_a" time="0.1"/>
+<testcase classname="tests.test_solvers" name="test_b" time="0.1">
+  <failure message="x">boom</failure></testcase>
+<testcase classname="tests.test_sharding" name="test_c" time="0.1">
+  <error message="x">err</error></testcase>
+</testsuite></testsuites>"""
+
+
+def _run_baseline(tmp_path, xml, baseline, pytest_exit=1):
+    junit = tmp_path / "junit.xml"
+    junit.write_text(xml)
+    bl = tmp_path / "baseline.txt"
+    bl.write_text(baseline)
+    r = subprocess.run(
+        [sys.executable, "tests/check_baseline.py", "--junit", str(junit),
+         "--baseline", str(bl), "--pytest-exit", str(pytest_exit)],
+        capture_output=True, text=True, cwd=REPO)
+    return r.returncode, r.stdout
+
+
+def test_baseline_gate_passes_on_known_failures(tmp_path):
+    code, _ = _run_baseline(
+        tmp_path, JUNIT,
+        "tests/test_solvers.py::test_b\ntests/test_sharding.py::test_c\n")
+    assert code == 0
+
+
+def test_baseline_gate_fails_on_new_failure(tmp_path):
+    code, out = _run_baseline(tmp_path, JUNIT,
+                              "tests/test_solvers.py::test_b\n")
+    assert code == 1
+    assert "tests/test_sharding.py::test_c" in out
+
+
+def test_baseline_gate_nags_on_fixed_entries_but_stays_green(tmp_path):
+    code, out = _run_baseline(
+        tmp_path, JUNIT,
+        "tests/test_solvers.py::test_b\ntests/test_sharding.py::test_c\n"
+        "tests/test_solvers.py::test_gone\n")
+    assert code == 0
+    assert "now PASSING" in out and "test_gone" in out
+
+
+def test_baseline_gate_fails_on_pytest_crash_and_empty_report(tmp_path):
+    clean = JUNIT.replace('<failure message="x">boom</failure>', "") \
+                 .replace('<error message="x">err</error>', "")
+    code, _ = _run_baseline(tmp_path, clean, "", pytest_exit=2)
+    assert code == 1
+    empty = ('<?xml version="1.0"?><testsuites>'
+             '<testsuite tests="0"></testsuite></testsuites>')
+    code, _ = _run_baseline(tmp_path, empty, "", pytest_exit=0)
+    assert code == 1
+
+
+# ---------------------------------------------------------------------------
+# bench regression comparator
+# ---------------------------------------------------------------------------
+
+
+def _run_regression(tmp_path, base_rows, fresh_rows, extra_args=()):
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(base_rows))
+    fresh = tmp_path / "fresh.json"
+    fresh.write_text(json.dumps(fresh_rows))
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.check_regression",
+         "--baseline", str(base), "--fresh", str(fresh), *extra_args],
+        capture_output=True, text=True, cwd=REPO,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"})
+    return r.returncode, r.stdout + r.stderr
+
+
+ROW = {"op": "qn_apply_multi[broyden_step]", "shape": "m16xB8xD1024xK2",
+       "impl": "ref", "wall_ms": 0.2, "bytes_moved": 1000}
+
+
+def test_regression_gate_green_when_unchanged(tmp_path):
+    code, out = _run_regression(tmp_path, [ROW], [ROW])
+    assert code == 0, out
+
+
+def test_regression_gate_fails_on_fused_bytes_growth(tmp_path):
+    worse = dict(ROW, bytes_moved=1001)
+    code, out = _run_regression(tmp_path, [ROW], [worse])
+    assert code == 1 and "bytes_moved" in out
+
+
+def test_regression_gate_fails_on_wall_time_blowup(tmp_path):
+    # 1.3x + 0.25ms slack on 0.2ms = 0.51ms; 5ms is a real blowup
+    worse = dict(ROW, wall_ms=5.0)
+    code, out = _run_regression(tmp_path, [ROW], [worse])
+    assert code == 1 and "wall" in out
+
+
+def test_regression_gate_tolerates_jitter_within_slack(tmp_path):
+    jitter = dict(ROW, wall_ms=0.4)   # < 1.3 * 0.2 + 0.25
+    code, out = _run_regression(tmp_path, [ROW], [jitter])
+    assert code == 0, out
+
+
+def test_regression_gate_fails_on_missing_row(tmp_path):
+    code, out = _run_regression(tmp_path, [ROW], [])
+    assert code == 1 and "missing" in out
+
+
+def test_regression_gate_calibrates_uniformly_slower_host(tmp_path):
+    """A CI runner that is 2x slower across the board must stay green (the
+    median fresh/base ratio is divided out), while one op blowing up
+    relative to the fleet still fails."""
+    base = [dict(ROW, shape=f"s{i}", wall_ms=1.0) for i in range(4)]
+    uniform = [dict(r, wall_ms=2.0) for r in base]
+    code, out = _run_regression(tmp_path, base, uniform)
+    assert code == 0, out
+    assert "host-speed calibration" in out
+
+    one_bad = [dict(r, wall_ms=1.0) for r in base]
+    one_bad[2]["wall_ms"] = 5.0
+    code, out = _run_regression(tmp_path, base, one_bad)
+    assert code == 1 and "s2" in out
+
+
+def test_regression_gate_single_row_cannot_self_calibrate(tmp_path):
+    """With < 3 rows there is no fleet to calibrate against: a lone row's
+    blowup must not be absorbed as a 'slow host'."""
+    worse = dict(ROW, wall_ms=5.0)
+    code, out = _run_regression(tmp_path, [ROW], [worse])
+    assert code == 1, out
+
+
+def test_regression_gate_unfused_bytes_growth_only_warns(tmp_path):
+    base = dict(ROW, op="rmsnorm")
+    worse = dict(base, bytes_moved=2000)
+    code, out = _run_regression(tmp_path, [base], [worse])
+    assert code == 0 and "warn" in out

@@ -1,0 +1,235 @@
+"""Serving-engine tests: batched request coalescing and per-sample
+convergence masking in the batched fixed-point engine (the ragged-traffic
+behaviour the tentpole adds).
+
+The engine-level tests drive ``repro.implicit.batched_solve`` /
+``coalesce_states`` directly on small problems with known fixed points; the
+loop-level tests check that ``ServeLoop`` admission coalesces same-length
+prompt waves into single batched prefill calls without changing results.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import smoke_config
+from repro.core.lowrank import bnorm
+from repro.implicit import ImplicitConfig, batched_solve, coalesce_states
+from repro.models import lm
+from repro.parallel.sharding import ShardCtx
+from repro.runtime.serving import Request, ServeLoop
+
+CTX = ShardCtx.for_mesh(None)
+
+
+def _contraction_problem(rates):
+    """Per-sample damped map z <- r_b * z + b with known fixed point."""
+    rates = jnp.asarray(rates, jnp.float32)[:, None]
+    b = jnp.arange(1.0, 1.0 + rates.shape[0])[:, None] * jnp.ones((1, 8))
+
+    def f(params, x, z):
+        return rates * z + x
+
+    z_star = b / (1.0 - rates)
+    return f, b, z_star
+
+
+# ---------------------------------------------------------------------------
+# engine: per-sample convergence masking
+# ---------------------------------------------------------------------------
+
+
+def test_batched_solve_ragged_batch_padding_frozen():
+    """Ragged wave: 3 requests coalesced into 4 slots. Valid samples reach
+    their fixed points; the padding slot returns its input bit-for-bit and
+    never consumes solver work."""
+    states = [jnp.zeros((8,)) + i for i in range(3)]
+    batch = coalesce_states(states, slots=4)
+    assert batch.z0.shape == (4, 8)
+    np.testing.assert_array_equal(np.asarray(batch.valid),
+                                  [True, True, True, False])
+
+    f, b, z_star = _contraction_problem([0.5, 0.5, 0.5, 0.5])
+    cfg = ImplicitConfig.from_strings(solver="broyden", max_steps=40,
+                                      tol=1e-6, memory=16)
+    z, stats = batched_solve(f, None, b, batch.z0, cfg, valid=batch.valid)
+    np.testing.assert_allclose(np.asarray(z[:3]), np.asarray(z_star[:3]),
+                               rtol=1e-4, atol=1e-4)
+    # padding slot: input state untouched (it repeated request 0)
+    np.testing.assert_array_equal(np.asarray(z[3]), np.asarray(batch.z0[3]))
+    assert bool(stats.converged.all())
+    outs = batch.unbatch(z)
+    assert len(outs) == 3 and outs[0].shape == (8,)
+
+
+def test_batched_solve_one_hard_sample_freezes_easy_ones():
+    """One slow-contracting sample dominates the step count; the easy
+    samples converge early, freeze (their per-sample trace stops recording),
+    and still end at their own fixed points."""
+    f, b, z_star = _contraction_problem([0.2, 0.2, 0.2, 0.93])
+    cfg = ImplicitConfig.from_strings(solver="fixed_point", max_steps=200,
+                                      tol=1e-5, memory=1)
+    z0 = jnp.zeros_like(b)
+    z, stats = batched_solve(f, None, b, z0, cfg)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(z_star),
+                               rtol=1e-3, atol=1e-3)
+    per_sample_steps = np.isfinite(np.asarray(stats.trace)).sum(axis=0)
+    assert per_sample_steps[3] > 3 * per_sample_steps[0], per_sample_steps
+    # the batch ran exactly as long as its hardest sample needed
+    assert int(stats.n_steps) == per_sample_steps.max()
+    assert bool(stats.converged.all())
+
+
+def test_batched_solve_all_converged_early_exit():
+    """A wave admitted at its fixed point exits before the first iteration:
+    the step-count collective sees all-converged at entry."""
+    f, b, z_star = _contraction_problem([0.5, 0.5])
+    cfg = ImplicitConfig.from_strings(solver="broyden", max_steps=50,
+                                      tol=1e-4, memory=8)
+    z, stats = batched_solve(f, None, b, z_star, cfg)
+    assert int(stats.n_steps) == 0
+    assert bool(stats.converged.all())
+    np.testing.assert_allclose(np.asarray(z), np.asarray(z_star), rtol=1e-5)
+
+
+def test_batched_solve_multi_leaf_pytree_state():
+    """Multi-leaf states pack to (B, D) through the same preamble as
+    implicit_fixed_point — the engine must re-ravel f's pytree output."""
+    A = 0.5 * jnp.eye(4)
+    b1 = jnp.ones((3, 4))
+    b2 = 2.0 * jnp.ones((3, 2))
+
+    def f(params, x, z):
+        return {"a": z["a"] @ A + x["a"], "b": 0.25 * z["b"] + x["b"]}
+
+    z0 = {"a": jnp.zeros((3, 4)), "b": jnp.zeros((3, 2))}
+    cfg = ImplicitConfig.from_strings(solver="broyden", max_steps=50,
+                                      tol=1e-6, memory=16)
+    z, stats = batched_solve(f, None, {"a": b1, "b": b2}, z0, cfg,
+                             valid=jnp.asarray([True, True, False]))
+    np.testing.assert_allclose(np.asarray(z["a"][:2]), 2.0, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(z["b"][:2]), 8.0 / 3.0, rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(z["a"][2]), 0.0)  # padding
+    np.testing.assert_array_equal(np.asarray(z["b"][2]), 0.0)
+
+
+def test_batched_solve_rejects_mask_blind_solver():
+    """A solver that only declares **kwargs must not be trusted with a
+    freeze mask (it could silently iterate frozen serving slots)."""
+    from repro.implicit import register_solver
+    from repro.core.solvers import fixed_point_solve
+
+    @register_solver("_test_mask_blind")
+    def _mask_blind(f, z0, cfg, **kwargs):
+        return fixed_point_solve(f, z0, cfg)
+
+    f, b, _ = _contraction_problem([0.5, 0.5])
+    cfg = ImplicitConfig.from_strings(solver="_test_mask_blind",
+                                      max_steps=10, tol=1e-4, memory=4)
+    with pytest.raises(TypeError, match="freeze_mask"):
+        batched_solve(f, None, b, jnp.zeros_like(b), cfg,
+                      valid=jnp.asarray([True, False]))
+    # without a mask the legacy-style solver still works
+    z, _ = batched_solve(f, None, b, jnp.zeros_like(b), cfg)
+    assert z.shape == b.shape
+
+
+def test_batched_solve_all_frozen_runs_zero_steps():
+    """An all-invalid wave (every slot padding) must cost zero iterations."""
+    f, b, _ = _contraction_problem([0.5, 0.5])
+    cfg = ImplicitConfig.from_strings(solver="broyden", max_steps=50,
+                                      tol=1e-6, memory=8)
+    z0 = jnp.ones_like(b) * 7.0
+    z, stats = batched_solve(f, None, b, z0, cfg,
+                             valid=jnp.zeros((2,), bool))
+    assert int(stats.n_steps) == 0
+    np.testing.assert_array_equal(np.asarray(z), np.asarray(z0))
+
+
+# ---------------------------------------------------------------------------
+# serving loop: request coalescing
+# ---------------------------------------------------------------------------
+
+
+def _tiny_cfg():
+    cfg = smoke_config("minicpm-2b")
+    return dataclasses.replace(
+        cfg, num_layers=2, d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+        vocab_size=128, head_dim=16)
+
+
+def test_serving_coalesces_same_length_wave_into_one_prefill():
+    cfg = _tiny_cfg()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    loop = ServeLoop(params, cfg, CTX, slots=4, max_len=64, eos_id=-1)
+    reqs = [Request(uid=i, prompt=[3, 5, 7, 11 + i], max_new_tokens=4)
+            for i in range(4)]
+    loop.drain(reqs)
+    assert loop.prefill_requests == 4
+    assert loop.prefill_calls == 1          # one batched call for the wave
+    assert all(len(r.out) == 4 for r in reqs)
+
+
+def test_serving_coalesced_results_match_sequential():
+    """Coalescing is a batching change only: a 4-slot loop that prefills a
+    wave in one call must emit exactly the tokens of a 1-slot loop that
+    serves the same requests back to back."""
+    cfg = _tiny_cfg()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = [[3, 5, 7, 11 + i] for i in range(4)]
+
+    batched = ServeLoop(params, cfg, CTX, slots=4, max_len=64, eos_id=-1)
+    reqs_b = [Request(uid=i, prompt=p, max_new_tokens=5)
+              for i, p in enumerate(prompts)]
+    batched.drain(reqs_b)
+
+    solo = ServeLoop(params, cfg, CTX, slots=1, max_len=64, eos_id=-1)
+    reqs_s = [Request(uid=i, prompt=p, max_new_tokens=5)
+              for i, p in enumerate(prompts)]
+    solo.drain(reqs_s)
+
+    for rb, rs in zip(reqs_b, reqs_s):
+        assert rb.out == rs.out, (rb.uid, rb.out, rs.out)
+
+
+def test_serving_mixed_length_wave_groups_by_length():
+    cfg = _tiny_cfg()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    loop = ServeLoop(params, cfg, CTX, slots=4, max_len=64, eos_id=-1)
+    reqs = [Request(uid=0, prompt=[3, 5], max_new_tokens=3),
+            Request(uid=1, prompt=[3, 5, 7], max_new_tokens=3),
+            Request(uid=2, prompt=[4, 6], max_new_tokens=3),
+            Request(uid=3, prompt=[4, 6, 8], max_new_tokens=3)]
+    loop.drain(reqs)
+    assert loop.prefill_requests == 4
+    assert loop.prefill_calls == 2          # one per distinct prompt length
+    assert all(len(r.out) == 3 for r in reqs)
+
+
+def test_deq_decode_active_mask_matches_unmasked():
+    """decode_step with an all-active mask equals the maskless call, and a
+    partially-active mask leaves logits of active slots unchanged (frozen
+    slots pay no solver work but active results are identical)."""
+    cfg = smoke_config("minicpm-2b", deq=True)
+    cfg = dataclasses.replace(
+        cfg, num_layers=2, d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+        vocab_size=128, head_dim=16)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray([[3, 5, 7, 11], [4, 6, 8, 12]], jnp.int32)
+    _logits, caches, lens = lm.prefill(params, {"tokens": toks}, cfg, CTX, 16)
+    step_tok = jnp.asarray([9, 10], jnp.int32)
+
+    out_ref, _ = lm.decode_step(params, caches, step_tok, lens, cfg, CTX)
+    out_all, _ = lm.decode_step(params, caches, step_tok, lens, cfg, CTX,
+                                active=jnp.asarray([True, True]))
+    np.testing.assert_allclose(np.asarray(out_ref, np.float32),
+                               np.asarray(out_all, np.float32),
+                               rtol=1e-5, atol=1e-5)
+    out_part, _ = lm.decode_step(params, caches, step_tok, lens, cfg, CTX,
+                                 active=jnp.asarray([True, False]))
+    np.testing.assert_allclose(np.asarray(out_part[0], np.float32),
+                               np.asarray(out_all[0], np.float32),
+                               rtol=2e-3, atol=2e-3)
