@@ -138,6 +138,13 @@ def run() -> list[dict]:
                      "max_abs_err": float(jnp.abs(
                          got.astype(jnp.float32) - want.astype(jnp.float32)).max())})
 
+    # warm-start iteration counts ride the same machine-readable record so
+    # check_regression gates them exactly like bytes_moved (deterministic on
+    # fixed seeds — growth is a real warm-start regression, not hw noise)
+    from benchmarks import bench_warm_start
+
+    rows.extend(bench_warm_start.bench_rows())
+
     emit("kernels", rows)
     return rows
 

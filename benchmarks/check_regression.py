@@ -10,6 +10,10 @@ fails (exit 1) when, for any (op, shape, impl) row present in the baseline:
   * ``bytes_moved`` GREW on a fused op (``qn_apply_multi*`` /
     ``lowrank_append``) — the analytic streaming model is
     hardware-independent, so any growth is a real fusion regression, or
+  * ``n_iters`` GREW on a warm-start row (``warm_start[*]``) beyond a
+    +1-iteration slack — the solver's iteration count on fixed seeds is
+    deterministic like the byte model, so growth means the carried solve
+    state stopped paying for itself, or
   * ``wall_ms`` exceeds ``ratio * host_scale * baseline + slack``.  Wall
     time IS hardware-dependent (the baseline is committed from one machine,
     CI re-measures on another), so the gate self-calibrates: with >= 3
@@ -37,10 +41,14 @@ from pathlib import Path
 BASELINE = Path("results/benchmarks/BENCH_kernels.json")
 FRESH = Path("results/benchmarks/BENCH_kernels.fresh.json")
 FUSED_OPS = ("qn_apply_multi", "lowrank_append")
+# iteration counts are deterministic on fixed seeds, but the last iteration
+# can flip on platform reduction-order wobble — allow one
+ITER_SLACK = 1
 
 # the machine-readable record keeps the same fields benchmarks/run.py writes
 KEEP = ("op", "shape", "impl", "wall_ms", "bytes_moved", "unfused_bytes",
-        "uv_traffic_ratio", "max_abs_err")
+        "uv_traffic_ratio", "n_iters", "cold_iters", "iters_ratio",
+        "max_abs_err")
 
 
 def _key(row: dict) -> tuple:
@@ -98,6 +106,11 @@ def compare(base: list[dict], fresh: list[dict], *, wall_ratio: float,
                       f"{f['bytes_moved']}"
                       + ("" if fused else " (unfused op: not gating)"))
                 bad += fused
+        if b.get("n_iters") is not None and f.get("n_iters") is not None:
+            if f["n_iters"] > b["n_iters"] + ITER_SLACK:
+                print(f"FAIL {tag}: n_iters {b['n_iters']} -> {f['n_iters']} "
+                      f"(warm-start regression; slack +{ITER_SLACK})")
+                bad += 1
         bw, fw = b.get("wall_ms"), f.get("wall_ms")
         if bw is not None and fw is not None:
             limit = wall_ratio * scale * bw + wall_slack_ms

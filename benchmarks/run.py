@@ -22,7 +22,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: bilevel,opa,deq,spectral,"
-                         "nlls,kernels,roofline")
+                         "nlls,kernels,warm_start,roofline")
     ap.add_argument("--fast", action="store_true",
                     help="reduced iteration counts")
     args = ap.parse_args()
@@ -63,6 +63,14 @@ def main() -> None:
     if want("kernels"):
         from benchmarks import bench_kernels
         sections.append(("kernels vs oracles", bench_kernels.run))
+    # the kernels section already embeds the warm-start rows (they ride
+    # BENCH_kernels.json); run the standalone section only when it is
+    # explicitly requested without kernels, to avoid double-measuring
+    if want("warm_start") and (only is not None and "kernels" not in only):
+        from benchmarks import bench_warm_start
+        sections.append(
+            ("warm-start lifecycle (cold vs carried solves)",
+             bench_warm_start.run))
     if want("roofline"):
         from benchmarks import roofline
         sections.append(("roofline (dry-run derived)", roofline.run))
@@ -87,7 +95,8 @@ def _write_bench_kernels(rows: list[dict]) -> None:
     """Persist the machine-readable kernel perf record (op, shape, impl,
     wall-time, bytes-moved) so the perf trajectory is diffable across PRs."""
     keep = ("op", "shape", "impl", "wall_ms", "bytes_moved", "unfused_bytes",
-            "uv_traffic_ratio", "max_abs_err")
+            "uv_traffic_ratio", "n_iters", "cold_iters", "iters_ratio",
+            "max_abs_err")
     out = [{k: r[k] for k in keep if k in r} for r in rows]
     path = Path("results/benchmarks/BENCH_kernels.json")
     path.parent.mkdir(parents=True, exist_ok=True)

@@ -114,10 +114,19 @@ class CheckpointManager:
         template: Pytree,
         step: int | None = None,
         shardings: Pytree | None = None,
+        fill_missing_prefixes: tuple[str, ...] = (),
     ) -> tuple[int, Pytree, dict]:
         """Restore into the structure of ``template``; each leaf is placed
         with the matching entry of ``shardings`` (tree of NamedSharding or
-        None) — this is where elastic resharding happens."""
+        None) — this is where elastic resharding happens.
+
+        ``fill_missing_prefixes``: template leaves whose key path starts
+        with one of these prefixes may be ABSENT from the checkpoint and
+        are zero-filled (forward compatibility for state the writer didn't
+        have — e.g. the ``.carry`` solve state restoring from a pre-carry
+        checkpoint, where all-zeros IS the cold carry).  Any other missing
+        key still raises: silently zeroing parameters would be catastrophic.
+        """
         self.wait()
         step = step if step is not None else self.latest_step()
         if step is None:
@@ -135,12 +144,22 @@ class CheckpointManager:
                 shardings, is_leaf=lambda x: x is None or hasattr(x, "spec")
             )
         leaves = []
+        filled = []
         for (path, tmpl), sh in zip(paths, shard_leaves):
             key = jax.tree_util.keystr(path)
-            arr = data[key]
-            if tuple(arr.shape) != tuple(tmpl.shape):
-                raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {tmpl.shape}")
-            arr = arr.astype(tmpl.dtype)
+            if key not in data.files and any(
+                    key.startswith(p) for p in fill_missing_prefixes):
+                arr = np.zeros(tuple(tmpl.shape), tmpl.dtype)
+                filled.append(key)
+            else:
+                arr = data[key]
+                if tuple(arr.shape) != tuple(tmpl.shape):
+                    raise ValueError(
+                        f"shape mismatch at {key}: {arr.shape} vs {tmpl.shape}")
+                arr = arr.astype(tmpl.dtype)
             leaves.append(jax.device_put(arr, sh) if sh is not None
                           else jax.numpy.asarray(arr))
+        if filled:
+            print(f"checkpoint restore: zero-filled {len(filled)} leaves "
+                  f"missing from step_{step} ({filled[0]} ...)")
         return step, jax.tree_util.tree_unflatten(treedef, leaves), manifest["extra"]

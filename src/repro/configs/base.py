@@ -228,3 +228,11 @@ class TrainConfig:
     checkpoint_every: int = 0
     checkpoint_dir: str = ""
     keep_checkpoints: int = 3
+    # DEQ persistent solve state across train steps:
+    #   "state" — warm-start the ITERATE only, quasi-Newton chain rebuilt
+    #             each step (robust for i.i.d. fresh batches: a chain built
+    #             against last step's samples degrades this step's solve);
+    #   "full"  — iterate AND chain (repeated/similar-batch regimes:
+    #             full-batch training, fine-tuning on a small set);
+    #   "off"   — cold-start every step.
+    deq_carry: str = "state"

@@ -91,6 +91,12 @@ class HOAGConfig:
     cg_steps: int = 100
     cg_tol: float = 1e-8
     refine_steps: int = 5
+    # warm-start the inner solve's L-BFGS secant memory (= the SHINE inverse
+    # estimate the hypergradient shares) from the previous outer iterate, on
+    # top of the z warm start HOAG always does; stale pairs wash out of the
+    # ring as new curvature lands.  False = rebuild curvature each outer step
+    # (the pre-carry behaviour).
+    warm_start: bool = True
 
     def implicit_cfg(self) -> ImplicitConfig:
         """The backward sub-config this mode implies for the registry.
@@ -153,10 +159,23 @@ def run_hoag(
     seed: int = 0,
     verbose: bool = False,
 ) -> list[OuterRecord]:
-    """Outer gradient descent on log-theta with warm-started inner solves."""
+    """Outer gradient descent on log-theta with warm-started inner solves.
+
+    Warm starts (``cfg.warm_start``, on by default) thread BOTH halves of
+    the persistent solve state across outer iterations: the previous inner
+    solution ``z`` seeds the next solve, and the previous L-BFGS secant
+    memory — the SHINE inverse estimate the hypergradient shares — seeds
+    its curvature model, so each outer step pays only the marginal
+    iterations its theta update actually needs.
+    """
     log_theta = jnp.asarray(np.log(theta0), jnp.float32)
     z = jnp.zeros((problem.dim,), jnp.float32)
-    mem = None
+    mem = LBFGSMemory(
+        s=jnp.zeros((cfg.inner.memory, problem.dim), jnp.float32),
+        y=jnp.zeros((cfg.inner.memory, problem.dim), jnp.float32),
+        rho=jnp.zeros((cfg.inner.memory,), jnp.float32),
+        count=jnp.int32(0),
+    )
     history: list[OuterRecord] = []
     t0 = time.perf_counter()
     tol = cfg.inner.tol
@@ -167,7 +186,7 @@ def run_hoag(
     # tolerance must be static for jit; pre-build one solver per tol level
     solver_cache: dict[float, Callable] = {}
 
-    def solve_at(z0, log_t, tol_now: float):
+    def solve_at(z0, log_t, mem0, tol_now: float):
         key = round(float(np.log10(max(tol_now, 1e-12))), 3)
         if key not in solver_cache:
             icfg = dataclasses.replace(
@@ -175,7 +194,7 @@ def run_hoag(
             )
 
             @jax.jit
-            def _solve(z0, log_t, _icfg=icfg):
+            def _solve(z0, log_t, mem0, _icfg=icfg):
                 theta = jnp.exp(log_t)
                 return lbfgs_solve(
                     lambda zz: problem.inner_grad(zz, theta),
@@ -185,17 +204,19 @@ def run_hoag(
                     dg_dtheta=(
                         (lambda zz: problem.dg_dtheta(zz, theta)) if use_opa else None
                     ),
+                    mem0=mem0,
                 )
 
             solver_cache[key] = _solve
-        return solver_cache[key](z0, log_t)
+        return solver_cache[key](z0, log_t, mem0)
 
     hyper_jit = jax.jit(
         lambda th, z_, mem_: hypergradient(problem, th, z_, mem_, cfg)
     )
 
+    cold_mem = mem
     for k in range(cfg.outer_steps):
-        res = solve_at(z, log_theta, tol)
+        res = solve_at(z, log_theta, mem if cfg.warm_start else cold_mem, tol)
         z = res.z
         mem = res.memory
         theta = jnp.exp(log_theta)

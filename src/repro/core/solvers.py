@@ -36,6 +36,174 @@ from repro.core.lowrank import LowRank, _expand, bdot, bnorm
 Array = jax.Array
 
 
+# ---------------------------------------------------------------------------
+# Persistent solve state: the carry threaded across outer iterations
+# ---------------------------------------------------------------------------
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("z", "lowrank", "warm", "age"),
+    meta_fields=(),
+)
+@dataclasses.dataclass
+class SolveCarry:
+    """Reusable solver state threaded ACROSS solves (train steps, decode
+    tokens, bilevel outer iterations) — SHINE's shared inverse estimate made
+    first-class beyond the boundary of one call.
+
+    ``z: (B, *F)``        the previous converged iterate (warm-start point).
+    ``lowrank``           the quasi-Newton ring memory ``(m, B, *F)`` with
+                          its per-sample validity ``count`` — the inverse
+                          estimate carried forward, so ``lowrank_append``
+                          keeps its fused one-pass ring semantics across
+                          solves.
+    ``warm: (B,) bool``   per-sample validity: ``False`` rows cold-start
+                          from the caller's ``z0`` with an identity inverse
+                          (their ring count is masked to zero), so slot
+                          eviction is a per-row flag flip — no buffer wipe.
+    ``age: (B,) int32``   staleness stat: solves since the row was last
+                          reset (0 = cold / just evicted).
+
+    The carry is a plain pytree: it rides in ``TrainState``, shards via the
+    same ``SolveSharding`` layout as the live solve, donates cleanly, and
+    checkpoints through ``checkpoint/manager`` untouched.
+    """
+
+    z: Array
+    lowrank: LowRank
+    warm: Array
+    age: Array
+
+    @property
+    def memory(self) -> int:
+        return self.lowrank.memory
+
+
+def init_solve_carry(
+    batch: int,
+    feat: tuple[int, ...] | int,
+    memory: int,
+    *,
+    alpha: float = 1.0,
+    dtype=jnp.float32,
+) -> SolveCarry:
+    """An all-cold carry: every row starts from the caller's ``z0``."""
+    feat = (feat,) if isinstance(feat, int) else tuple(feat)
+    return SolveCarry(
+        z=jnp.zeros((batch,) + feat, dtype),
+        lowrank=LowRank.identity(batch, feat, memory, alpha=alpha, dtype=dtype),
+        warm=jnp.zeros((batch,), bool),
+        age=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def reset_carry_rows(carry: SolveCarry, evict: Array) -> SolveCarry:
+    """Per-sample eviction: rows where ``evict`` is True return to cold-start
+    behaviour (``warm=False``, ring count zeroed — the stale slot contents
+    stay in place but are masked invalid, exactly like a fresh identity)."""
+    keep = ~evict
+    lr = dataclasses.replace(
+        carry.lowrank, count=jnp.where(keep, carry.lowrank.count, 0))
+    return SolveCarry(
+        z=carry.z,
+        lowrank=lr,
+        warm=carry.warm & keep,
+        age=jnp.where(keep, carry.age, 0),
+    )
+
+
+def carry_state_only(carry: SolveCarry) -> SolveCarry:
+    """Drop the quasi-Newton chain from a carry (ring counts zeroed), keeping
+    the iterate warm.  The chain encodes curvature of the PREVIOUS problem's
+    samples; when every outer step sees a fresh batch, a stale chain first
+    helps then actively degrades the solve (measured: iterations grow past
+    the cold count within ~10 steps), while the iterate alone transfers the
+    params-driven equilibrium structure and stays reliably ahead of cold.
+    """
+    bsz = carry.z.shape[0]
+    return dataclasses.replace(
+        carry,
+        lowrank=dataclasses.replace(
+            carry.lowrank, count=jnp.zeros((bsz,), jnp.int32)))
+
+
+def seed_carry(carry: SolveCarry, z: Array) -> SolveCarry:
+    """Warm-start every row at ``z`` with a FRESH inverse (ring count zeroed).
+
+    Used when the iterate transfers across problems of different state shape
+    — e.g. a prefill equilibrium's last token seeding the first decode solve:
+    the (m, B, S, d) prefill chain cannot become a (m, B, 1, d) decode chain,
+    but its fixed point can still seed ``z``.
+    """
+    bsz = carry.z.shape[0]
+    return SolveCarry(
+        z=z.astype(carry.z.dtype),
+        lowrank=dataclasses.replace(
+            carry.lowrank, count=jnp.zeros((bsz,), jnp.int32)),
+        warm=jnp.ones((bsz,), bool),
+        age=jnp.zeros((bsz,), jnp.int32),
+    )
+
+
+def _carry_start(carry: SolveCarry | None, z0: Array, memory: int):
+    """Resolve the effective start ``(z0, init_lowrank)`` from a carry.
+
+    Warm rows start at ``carry.z`` with the carried ring chain; cold rows
+    keep the caller's ``z0`` and see an empty (identity) chain via a masked
+    count.  Returns ``(z0, None)`` when no carry is given.
+    """
+    if carry is None:
+        return z0, None
+    if carry.lowrank.u.shape[1:] != (z0.shape[0],) + z0.shape[1:]:
+        raise ValueError(
+            f"carry memory shape {carry.lowrank.u.shape} does not match "
+            f"solver state {z0.shape}")
+    if carry.memory != memory:
+        raise ValueError(
+            f"carry holds {carry.memory} ring slots but the solver is "
+            f"configured with memory={memory}; rebuild the carry")
+    wm = _expand(carry.warm, z0)
+    z_start = jnp.where(wm, carry.z.astype(z0.dtype), z0)
+    H0 = dataclasses.replace(
+        carry.lowrank,
+        count=jnp.where(carry.warm, carry.lowrank.count, 0))
+    return z_start, H0
+
+
+def _carry_out(
+    carry: SolveCarry | None,
+    z: Array,
+    H: LowRank | None,
+    entry_frozen: Array,
+) -> SolveCarry | None:
+    """Package the post-solve state as next call's carry.
+
+    Rows frozen at entry (freeze-masked serving slots) are preserved
+    BIT-FOR-BIT: their iterate never moved, their ring count never advanced,
+    and their ``warm``/``age`` flags are left untouched.  ``H=None`` keeps
+    the carried chain as-is (solvers without a reusable chain: Picard /
+    Anderson z-only reuse).
+    """
+    if carry is None:
+        return None
+    lr = carry.lowrank
+    if H is not None:
+        lr = LowRank(
+            alpha=lr.alpha,
+            u=H.u.astype(lr.u.dtype),
+            v=H.v.astype(lr.v.dtype),
+            count=H.count,
+        )
+    live = ~entry_frozen
+    return SolveCarry(
+        z=z.astype(carry.z.dtype),
+        lowrank=lr,
+        warm=carry.warm | live,
+        age=carry.age + live.astype(jnp.int32),
+    )
+
+
 class SolveSharding(NamedTuple):
     """Layout hooks threaded through a batched solve under SPMD.
 
@@ -90,6 +258,13 @@ class SolveResult(NamedTuple):
     converged: Array         # (B,) bool
     trace: Array             # (max_steps, B) residual history (inf-padded)
     aux: dict
+    # updated persistent state for the next solve; None unless the caller
+    # passed a carry in (structure in == structure out)
+    carry: SolveCarry | None = None
+
+
+def _entry_frozen(freeze_mask: Array | None, bsz: int) -> Array:
+    return jnp.zeros((bsz,), bool) if freeze_mask is None else freeze_mask
 
 
 def _stop_threshold(g0_norm: Array, z_norm: Array, cfg: SolverConfig) -> Array:
@@ -112,6 +287,7 @@ def broyden_solve(
     alpha0: float = 1.0,
     sharding: SolveSharding | None = None,
     freeze_mask: Array | None = None,
+    carry: SolveCarry | None = None,
 ) -> SolveResult:
     """Solve ``g(z) = 0`` for a batch ``z0: (B, D)``.
 
@@ -140,11 +316,17 @@ def broyden_solve(
     never consume qN memory, and the whole-batch ``all(conv)`` early exit
     fires as soon as every *live* sample is done.  ``sharding`` pins the
     iterate and the (U, V) memory to the caller's SPMD layout.
+
+    Warm starts: ``carry`` (see :class:`SolveCarry`) replaces BOTH the start
+    iterate and the initial inverse estimate per sample — warm rows resume
+    from the previous solve's ``(z, U, V)``, cold rows fall back to
+    ``z0``/identity.  The updated carry is returned in ``SolveResult.carry``.
     """
     bsz, feat = z0.shape[0], z0.shape[1:]
     sh = sharding or NO_SHARDING
+    z0, carry_H = _carry_start(carry, z0, cfg.memory)
     z0 = sh.state(z0)
-    H0 = init_lowrank
+    H0 = init_lowrank if init_lowrank is not None else carry_H
     if H0 is None:
         H0 = LowRank.identity(bsz, feat, cfg.memory, alpha=alpha0, dtype=z0.dtype)
     H0 = H0.constrain(sh.memory)
@@ -216,7 +398,8 @@ def broyden_solve(
         k, z, gz, H, _Hg, conv, best_z, best_res, trace = jax.lax.while_loop(
             cond, body, state0
         )
-    return SolveResult(best_z, H, best_res, k, conv, trace, {})
+    carry_out = _carry_out(carry, best_z, H, _entry_frozen(freeze_mask, bsz))
+    return SolveResult(best_z, H, best_res, k, conv, trace, {}, carry_out)
 
 
 # ---------------------------------------------------------------------------
@@ -232,10 +415,18 @@ def fixed_point_solve(
     damping: float = 1.0,
     sharding: SolveSharding | None = None,
     freeze_mask: Array | None = None,
+    carry: SolveCarry | None = None,
 ) -> SolveResult:
-    """Damped Picard iteration on ``z <- (1-d) z + d f(z)``; residual f(z)-z."""
+    """Damped Picard iteration on ``z <- (1-d) z + d f(z)``; residual f(z)-z.
+
+    Carry reuse is iterate-only (Picard keeps no quasi-Newton memory): warm
+    rows start at ``carry.z``, and the carried ring buffers pass through
+    untouched so the carry pytree structure stays stable across solvers.
+    """
     bsz = z0.shape[0]
     sh = sharding or NO_SHARDING
+    if carry is not None:
+        z0, _ = _carry_start(carry, z0, carry.memory)  # validates shapes
     z0 = sh.state(z0)
     H = LowRank.identity(bsz, 1, 1, alpha=1.0)  # placeholder (JFB shares I)
     res0 = bnorm(f(z0) - z0)
@@ -268,7 +459,8 @@ def fixed_point_solve(
         k, z, conv, best_res, trace = state
     else:
         k, z, conv, best_res, trace = jax.lax.while_loop(cond, body, state0)
-    return SolveResult(z, H, best_res, k, conv, trace, {})
+    carry_out = _carry_out(carry, z, None, _entry_frozen(freeze_mask, bsz))
+    return SolveResult(z, H, best_res, k, conv, trace, {}, carry_out)
 
 
 def anderson_solve(
@@ -280,11 +472,19 @@ def anderson_solve(
     ridge: float = 1e-8,
     sharding: SolveSharding | None = None,
     freeze_mask: Array | None = None,
+    carry: SolveCarry | None = None,
 ) -> SolveResult:
-    """Anderson acceleration with window m = cfg.memory (type-II)."""
+    """Anderson acceleration with window m = cfg.memory (type-II).
+
+    Carry reuse is iterate-only (the Anderson residual window is rebuilt —
+    it is only meaningful around the current iterate); the carried ring
+    buffers pass through untouched.
+    """
     bsz, feat = z0.shape[0], z0.shape[1:]
     m = min(cfg.memory, 8)
     sh = sharding or NO_SHARDING
+    if carry is not None:
+        z0, _ = _carry_start(carry, z0, carry.memory)  # validates shapes
     z0 = sh.state(z0)
     res0 = bnorm(f(z0) - z0)
     thresh = _stop_threshold(res0, bnorm(z0), cfg)
@@ -330,7 +530,8 @@ def anderson_solve(
         cond, body, (jnp.int32(0), z0, Z, F, conv0, trace0)
     )
     H = LowRank.identity(bsz, 1, 1, alpha=1.0)
-    return SolveResult(z, H, bnorm(f(z) - z), k, conv, trace, {})
+    carry_out = _carry_out(carry, z, None, _entry_frozen(freeze_mask, bsz))
+    return SolveResult(z, H, bnorm(f(z) - z), k, conv, trace, {}, carry_out)
 
 
 # ---------------------------------------------------------------------------
@@ -347,6 +548,7 @@ def adjoint_broyden_solve(
     sigma_from_step: bool = False,  # secant direction: step instead of residual
     sharding: SolveSharding | None = None,
     freeze_mask: Array | None = None,
+    carry: SolveCarry | None = None,
 ) -> SolveResult:
     """Adjoint Broyden: secant ``sigma^T B_{n+1} = sigma^T J_g(z_{n+1})``.
 
@@ -357,9 +559,16 @@ def adjoint_broyden_solve(
     OPA: every ``cfg.opa_freq`` steps an extra update is applied with
     ``sigma = H^T dL/dz(z_n)`` (Eq. 8), which is exactly the direction the
     hypergradient (3) consumes. Requires ``outer_grad``.
+
+    Carry reuse is iterate-only: warm-starting H without B would break the
+    ``H = B^{-1}`` invariant the update coefficients rely on, so the chains
+    are rebuilt each solve.  The new H chain IS packaged into the returned
+    carry (the SHINE estimate keeps flowing to consumers), but its count is
+    what this solve built, not a continuation.
     """
     bsz, feat = z0.shape[0], z0.shape[1:]
     sh = sharding or NO_SHARDING
+    z0, _ = _carry_start(carry, z0, cfg.memory)  # validates; H not reused
     z0 = sh.state(z0)
     B = LowRank.identity(bsz, feat, cfg.memory, alpha=1.0, dtype=jnp.float32)
     H = LowRank.identity(bsz, feat, cfg.memory, alpha=1.0, dtype=jnp.float32)
@@ -427,7 +636,8 @@ def adjoint_broyden_solve(
         conv0 = conv0 | freeze_mask
     state0 = (jnp.int32(0), z0, g0, B, H, conv0, trace0)
     k, z, gz, B, H, conv, trace = jax.lax.while_loop(cond, body, state0)
-    return SolveResult(z, H, bnorm(gz), k, conv, trace, {"B": B})
+    carry_out = _carry_out(carry, z, H, _entry_frozen(freeze_mask, bsz))
+    return SolveResult(z, H, bnorm(gz), k, conv, trace, {"B": B}, carry_out)
 
 
 # ---------------------------------------------------------------------------
@@ -527,8 +737,15 @@ def lbfgs_solve(
     value_fn: Callable[[Array], Array] | None = None,
     dg_dtheta: Callable[[Array], Array] | None = None,  # OPA direction source
     max_ls: int = 20,
+    mem0: LBFGSMemory | None = None,
 ) -> LBFGSResult:
     """L-BFGS minimization via its gradient ``grad_fn`` (= g_theta of Eq. 2).
+
+    ``mem0`` warm-starts the secant ring memory — the HOAG outer loop passes
+    the previous outer iterate's memory so both the inner solve AND the
+    SHINE inverse estimate (the two-loop recursion the hypergradient shares)
+    resume instead of rebuilding curvature from scratch.  Stale pairs from
+    the previous hyperparameter wash out of the ring as new pairs land.
 
     Line search: backtracking Armijo on ``value_fn`` when given, else fixed
     unit step (Thm 3 remark covers alpha_n = 1 near the solution).
@@ -541,12 +758,16 @@ def lbfgs_solve(
     """
     dim = z0.shape[0]
     m = cfg.memory
-    mem0 = LBFGSMemory(
-        s=jnp.zeros((m, dim), jnp.float32),
-        y=jnp.zeros((m, dim), jnp.float32),
-        rho=jnp.zeros((m,), jnp.float32),
-        count=jnp.int32(0),
-    )
+    if mem0 is None:
+        mem0 = LBFGSMemory(
+            s=jnp.zeros((m, dim), jnp.float32),
+            y=jnp.zeros((m, dim), jnp.float32),
+            rho=jnp.zeros((m,), jnp.float32),
+            count=jnp.int32(0),
+        )
+    elif mem0.s.shape != (m, dim):
+        raise ValueError(
+            f"mem0 holds {mem0.s.shape} but the solver needs ({m}, {dim})")
     g0 = grad_fn(z0)
     gn0 = jnp.linalg.norm(g0)
     trace0 = jnp.full((max(cfg.max_steps, 1),), jnp.inf, jnp.float32)

@@ -33,13 +33,24 @@ from repro.implicit.estimators import (
     shine_cotangent_multi,
     solve_adjoint,
 )
+from repro.core.solvers import (
+    SolveCarry,
+    carry_state_only,
+    init_solve_carry,
+    reset_carry_rows,
+    seed_carry,
+)
 from repro.implicit.engine import (
+    CarryCache,
     CoalescedBatch,
     batched_solve,
     coalesce_states,
+    write_carry_rows,
+    write_carry_slot,
 )
 from repro.implicit.fixed_point import (
     ImplicitStats,
+    carry_for_state,
     implicit_fixed_point,
     solve_sharding,
 )
@@ -55,6 +66,7 @@ from repro.implicit.registry import (
 __all__ = [
     "AdjointResult",
     "BackwardConfig",
+    "CarryCache",
     "CoalescedBatch",
     "ESTIMATORS",
     "EstimatorContext",
@@ -63,22 +75,30 @@ __all__ = [
     "ImplicitStats",
     "Registry",
     "SOLVERS",
+    "SolveCarry",
     "adjoint_system",
     "batched_solve",
     "bilevel_context",
+    "carry_for_state",
+    "carry_state_only",
     "coalesce_states",
     "deq_context",
     "estimate_cotangent",
     "estimate_hypergrad_cotangent",
     "fallback_cotangent",
     "implicit_fixed_point",
+    "init_solve_carry",
     "jfb_cotangent",
     "pack_state",
     "ravel_state",
     "register_estimator",
     "register_solver",
+    "reset_carry_rows",
+    "seed_carry",
     "shine_cotangent",
     "shine_cotangent_multi",
     "solve_adjoint",
     "solve_sharding",
+    "write_carry_rows",
+    "write_carry_slot",
 ]

@@ -29,11 +29,12 @@ freeze mask.
 
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.solvers import SolveCarry, reset_carry_rows
 from repro.implicit.config import ImplicitConfig
 from repro.implicit.fixed_point import ImplicitStats, prepare_flat_problem
 from repro.implicit.registry import SOLVERS
@@ -87,7 +88,8 @@ def batched_solve(
     valid: Array | None = None,
     ctx=None,
     state_axes: tuple[str | None, ...] | None = None,
-) -> tuple[Pytree, ImplicitStats]:
+    carry: SolveCarry | None = None,
+) -> tuple[Pytree, ImplicitStats] | tuple[Pytree, ImplicitStats, SolveCarry]:
     """One batched forward solve of ``z = f(params, x, z)`` (inference only).
 
     ``valid: (B,) bool`` marks live samples; the rest are frozen at ``z0``
@@ -95,6 +97,11 @@ def batched_solve(
     the solve to the model's SPMD layout exactly as in
     ``implicit_fixed_point``.  Jit-able; differentiating through it unrolls
     the solver loop — use ``implicit_fixed_point`` for training.
+
+    ``carry`` warm-starts per slot and turns the return into ``(z, stats,
+    new_carry)``.  Frozen slots (``valid=False``) keep their carry rows
+    BIT-FOR-BIT — they neither move nor age — so a slot can sit idle across
+    waves without its state drifting.
     """
     z0_flat, unravel, f_flat, sharding = prepare_flat_problem(
         f, z0, ctx, state_axes)
@@ -103,11 +110,104 @@ def batched_solve(
     solver = SOLVERS.get(cfg.forward.solver)
     res = _builtin_solvers.call_solver(
         solver, lambda z: f_flat(params, x, z), z0_flat, cfg.solver_cfg(),
-        sharding=sharding, freeze_mask=freeze)
+        sharding=sharding, freeze_mask=freeze, carry=carry)
     z = res.z
     if valid is not None:
         # padding/finished slots return their input state bit-for-bit
         mask = valid.reshape(valid.shape + (1,) * (z.ndim - 1))
         z = jnp.where(mask, z, z0_flat)
     stats = ImplicitStats(res.residual, res.n_steps, res.converged, res.trace)
-    return unravel(z), stats
+    if carry is None:
+        return unravel(z), stats
+    return unravel(z), stats, res.carry
+
+
+# ---------------------------------------------------------------------------
+# Per-slot carry cache (the serving engine's persistent solve state)
+# ---------------------------------------------------------------------------
+
+
+def write_carry_rows(dst: SolveCarry, src: SolveCarry,
+                     slots: Sequence[int], rows: Sequence[int]) -> SolveCarry:
+    """Copy batch-rows ``rows`` of ``src`` into batch-slots ``slots`` of
+    ``dst`` in ONE scatter per buffer (all SolveCarry fields; the qN ring
+    buffers scatter along their batch axis 1).  Used to place a coalesced
+    wave's seeded carries into the serving loop's slot layout — one call
+    per wave, not one full-buffer copy per request."""
+    sl = jnp.asarray(list(slots), jnp.int32)
+    rw = jnp.asarray(list(rows), jnp.int32)
+    lr_d, lr_s = dst.lowrank, src.lowrank
+    return SolveCarry(
+        z=dst.z.at[sl].set(src.z[rw].astype(dst.z.dtype)),
+        lowrank=type(lr_d)(
+            alpha=lr_d.alpha,
+            u=lr_d.u.at[:, sl].set(lr_s.u[:, rw].astype(lr_d.u.dtype)),
+            v=lr_d.v.at[:, sl].set(lr_s.v[:, rw].astype(lr_d.v.dtype)),
+            count=lr_d.count.at[sl].set(lr_s.count[rw]),
+        ),
+        warm=dst.warm.at[sl].set(src.warm[rw]),
+        age=dst.age.at[sl].set(src.age[rw]),
+    )
+
+
+def write_carry_slot(dst: SolveCarry, src: SolveCarry, slot: int,
+                     row: int) -> SolveCarry:
+    """Single-request view of :func:`write_carry_rows`."""
+    return write_carry_rows(dst, src, (slot,), (row,))
+
+
+class CarryCache:
+    """Host-side per-slot :class:`SolveCarry` store for the serving engine.
+
+    Each of the engine's fixed batch slots owns one carry row, keyed by the
+    request id currently leased to the slot.  ``lease`` binds a slot to a
+    request and EVICTS the previous occupant's state (per-row cold reset —
+    a recycled slot must never warm-start from a stranger's equilibrium);
+    ``release`` evicts explicitly when a request completes.  The batched
+    carry itself is device data: pass ``.carry`` into the jitted solve and
+    hand the updated pytree back via ``update``.
+    """
+
+    def __init__(self, make_cold: Callable[[], SolveCarry], slots: int):
+        self.slots = slots
+        self._owner: list[Any] = [None] * slots
+        self.carry: SolveCarry = make_cold()
+        self.evictions = 0
+        if self.carry.z.shape[0] != slots:
+            raise ValueError(
+                f"cold carry has batch {self.carry.z.shape[0]} for "
+                f"{slots} slots")
+
+    def _reset(self, slot: int) -> None:
+        mask = jnp.arange(self.slots) == slot
+        self.carry = reset_carry_rows(self.carry, mask)
+        self.evictions += 1
+
+    def lease(self, slot: int, request_id: Any, *,
+              reset: bool = True) -> None:
+        """Bind ``slot`` to ``request_id``; evicts any previous occupant.
+
+        ``reset=False`` skips the device-side cold reset (ownership
+        bookkeeping and the eviction count only) — for callers about to
+        overwrite EVERY field of the row anyway (e.g. the admission path,
+        which scatters a freshly seeded carry right after leasing).
+        """
+        if self._owner[slot] == request_id and request_id is not None:
+            return
+        self._owner[slot] = request_id
+        if reset:
+            self._reset(slot)
+        else:
+            self.evictions += 1
+
+    def release(self, slot: int) -> None:
+        """Request finished: free the slot and evict its carry."""
+        self._owner[slot] = None
+        self._reset(slot)
+
+    def owner(self, slot: int) -> Any:
+        return self._owner[slot]
+
+    def update(self, carry: SolveCarry) -> None:
+        """Adopt the post-solve carry returned by the jitted step."""
+        self.carry = carry

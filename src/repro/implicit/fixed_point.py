@@ -25,7 +25,7 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.solvers import SolveSharding
+from repro.core.solvers import SolveCarry, SolveSharding, init_solve_carry
 from repro.implicit.config import ImplicitConfig
 from repro.implicit.estimators import estimate_cotangent
 from repro.implicit.pytree import ravel_state
@@ -85,11 +85,11 @@ def prepare_flat_problem(f, z0, ctx, state_axes):
 
 
 def _solve_forward(f_z, z0, cfg: ImplicitConfig, outer_grad=None,
-                   sharding=None, freeze_mask=None):
+                   sharding=None, freeze_mask=None, carry=None):
     solver = SOLVERS.get(cfg.forward.solver)
     return _builtin_solvers.call_solver(
         solver, f_z, z0, cfg.solver_cfg(), outer_grad=outer_grad,
-        sharding=sharding, freeze_mask=freeze_mask)
+        sharding=sharding, freeze_mask=freeze_mask, carry=carry)
 
 
 def _bind_outer(outer_grad, params, x):
@@ -98,25 +98,58 @@ def _bind_outer(outer_grad, params, x):
     return lambda z: outer_grad(params, x, z)
 
 
+def _shape_structs(tree):
+    """Shape/dtype skeleton of a pytree — saved in the custom_vjp residuals
+    instead of the real buffers, so the backward can synthesize zero
+    cotangents without keeping the (m, B, *F) ring buffers alive from
+    forward to backward."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.result_type(x)), tree)
+
+
+def _zeros_cotangent(tree):
+    """Symbolically-zero cotangent for an arbitrary (possibly int/bool)
+    pytree of arrays or ShapeDtypeStructs: float leaves get dense zeros,
+    non-inexact leaves get float0 — the stop-gradient guarantee for carried
+    solve state."""
+    import numpy as np
+
+    def zero(leaf):
+        if jnp.issubdtype(leaf.dtype, jnp.inexact):
+            return jnp.zeros(leaf.shape, leaf.dtype)
+        return np.zeros(leaf.shape, jax.dtypes.float0)
+
+    return jax.tree_util.tree_map(zero, tree)
+
+
 @partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
-def _implicit(f, cfg: ImplicitConfig, outer_grad, sharding, params, x, z0):
+def _implicit(f, cfg: ImplicitConfig, outer_grad, sharding, params, x, z0,
+              carry):
     res = _solve_forward(lambda z: f(params, x, z), z0, cfg,
-                         _bind_outer(outer_grad, params, x), sharding)
+                         _bind_outer(outer_grad, params, x), sharding,
+                         carry=carry)
     stats = ImplicitStats(res.residual, res.n_steps, res.converged, res.trace)
-    return res.z, stats
+    return res.z, stats, res.carry
 
 
-def _implicit_fwd(f, cfg: ImplicitConfig, outer_grad, sharding, params, x, z0):
+def _implicit_fwd(f, cfg: ImplicitConfig, outer_grad, sharding, params, x, z0,
+                  carry):
+    # The carry is a pure warm start: stop_gradient here makes the intent
+    # explicit (the bwd below also returns a symbolically-zero cotangent for
+    # it), so stale state can NEVER perturb the implicit gradient.
+    carry = jax.tree_util.tree_map(jax.lax.stop_gradient, carry)
     res = _solve_forward(lambda z: f(params, x, z), z0, cfg,
-                         _bind_outer(outer_grad, params, x), sharding)
+                         _bind_outer(outer_grad, params, x), sharding,
+                         carry=carry)
     stats = ImplicitStats(res.residual, res.n_steps, res.converged, res.trace)
-    return (res.z, stats), (params, x, res.z, res.lowrank)
+    return (res.z, stats, res.carry), (params, x, res.z, res.lowrank,
+                                       _shape_structs(carry))
 
 
 def _implicit_bwd(f, cfg: ImplicitConfig, outer_grad, sharding, saved,
                   cotangents):
-    params, x, z_star, H = saved
-    w, _stats_bar = cotangents  # stats carry no gradient
+    params, x, z_star, H, carry = saved  # carry: shape structs only
+    w, _stats_bar, _carry_bar = cotangents  # stats/carry carry no gradient
 
     # One VJP of f at the fixed point (recompute — O(1) memory).
     _, vjp = jax.vjp(lambda p, xx, z: f(p, xx, z), params, x, z_star)
@@ -125,7 +158,7 @@ def _implicit_bwd(f, cfg: ImplicitConfig, outer_grad, sharding, saved,
     adj = estimate_cotangent(cfg, vjp_z, w, H, sharding=sharding)
     p_bar, x_bar, _ = vjp(adj.u.astype(z_star.dtype))
     z0_bar = jnp.zeros_like(z_star)  # init point does not influence z*
-    return p_bar, x_bar, z0_bar
+    return p_bar, x_bar, z0_bar, _zeros_cotangent(carry)
 
 
 _implicit.defvjp(_implicit_fwd, _implicit_bwd)
@@ -141,13 +174,22 @@ def implicit_fixed_point(
     outer_grad: Callable[[Any, Any, Pytree], Pytree] | None = None,
     ctx=None,
     state_axes: tuple[str | None, ...] | None = None,
-) -> tuple[Pytree, ImplicitStats]:
+    carry: SolveCarry | None = None,
+) -> tuple[Pytree, ImplicitStats] | tuple[Pytree, ImplicitStats, SolveCarry]:
     """Differentiable fixed point of ``z = f(params, x, z)`` over pytrees.
 
     ``f`` must map a state pytree to one of identical structure/shapes.
     ``outer_grad(params, x, z) -> dL/dz`` (same pytree structure) enables
     OPA extra updates in the adjoint-Broyden forward (paper §2.3); leave
     None otherwise.
+
+    ``carry`` (see :func:`carry_for_state`) warm-starts the solve from a
+    previous call's state and makes the return a 3-tuple ``(z*, stats,
+    new_carry)``.  Stop-gradient guarantees: the carry contributes NOTHING
+    to the implicit gradient — the backward returns a symbolically-zero
+    cotangent for it, and the returned carry is stop_gradient'ed — so
+    warm-started training steps compute bit-identical gradients to cold
+    ones once the forward converges to the same fixed point.
 
     Sharded solves: pass the model's ``ctx: ShardCtx`` plus the logical axis
     names of the *single-leaf* state (``state_axes``) to pin the solver
@@ -168,6 +210,20 @@ def implicit_fixed_point(
         def outer_flat(p, xx, z_flat):  # noqa: F811
             return ravel_state(outer_grad(p, xx, unravel(z_flat)))[0]
 
-    z_flat, stats = _implicit(f_flat, cfg, outer_flat, sharding, params, x,
-                              z0_flat)
-    return unravel(z_flat), stats
+    z_flat, stats, carry_out = _implicit(f_flat, cfg, outer_flat, sharding,
+                                         params, x, z0_flat, carry)
+    if carry is None:
+        return unravel(z_flat), stats
+    return unravel(z_flat), stats, jax.tree_util.tree_map(
+        jax.lax.stop_gradient, carry_out)
+
+
+def carry_for_state(z0: Pytree, cfg: ImplicitConfig, *,
+                    dtype=None) -> SolveCarry:
+    """Build an all-cold :class:`SolveCarry` matching the FLAT solver state
+    of ``z0`` (single-leaf states keep their shape; multi-leaf states pack
+    to ``(B, D)``) and ``cfg.memory`` ring slots."""
+    z0_flat, _ = ravel_state(z0)
+    return init_solve_carry(
+        z0_flat.shape[0], z0_flat.shape[1:], cfg.memory,
+        dtype=dtype or z0_flat.dtype)

@@ -37,27 +37,34 @@ Array = jax.Array
 
 
 def call_solver(solver, f, z0, cfg, *, outer_grad=None, sharding=None,
-                freeze_mask=None):
+                freeze_mask=None, carry=None):
     """Invoke a registered solver, tolerating legacy signatures.
 
     Externally registered solvers may predate the ``sharding`` /
-    ``freeze_mask`` kwargs.  ``sharding`` is a pure layout hint, so it is
-    silently dropped for solvers that don't take it; ``freeze_mask``
-    CHANGES SEMANTICS (frozen samples must not move), so it is forwarded
-    only to solvers that NAME the parameter — a bare ``**kwargs`` does not
-    prove the solver honours the mask, and silently dropping it there
-    would let frozen serving slots keep iterating.
+    ``freeze_mask`` / ``carry`` kwargs.  ``sharding`` is a pure layout hint,
+    so it is silently dropped for solvers that don't take it;
+    ``freeze_mask`` CHANGES SEMANTICS (frozen samples must not move), so it
+    is forwarded only to solvers that NAME the parameter — a bare
+    ``**kwargs`` does not prove the solver honours the mask, and silently
+    dropping it there would let frozen serving slots keep iterating.
+    ``carry`` likewise: the caller expects ``SolveResult.carry`` back, so a
+    solver that cannot thread it must fail loudly rather than silently
+    cold-start every step.
     """
     kw = {"outer_grad": outer_grad, "sharding": sharding,
-          "freeze_mask": freeze_mask}
+          "freeze_mask": freeze_mask, "carry": carry}
     params = inspect.signature(solver).parameters
     var_kw = any(p.kind is p.VAR_KEYWORD for p in params.values())
-    if "freeze_mask" not in params:
-        if freeze_mask is not None:
-            raise TypeError(
-                f"solver {solver!r} does not declare freeze_mask; batched "
-                "per-sample masking needs a mask-aware solver")
-        del kw["freeze_mask"]
+    for name in ("freeze_mask", "carry"):
+        if name not in params:
+            if kw[name] is not None:
+                raise TypeError(
+                    f"solver {solver!r} does not declare {name}; "
+                    + ("batched per-sample masking needs a mask-aware solver"
+                       if name == "freeze_mask" else
+                       "persistent solve-state reuse needs a carry-aware "
+                       "solver"))
+            del kw[name]
     if not var_kw:
         for name in list(kw):
             if name not in params:
@@ -67,30 +74,33 @@ def call_solver(solver, f, z0, cfg, *, outer_grad=None, sharding=None,
 
 @register_solver("broyden")
 def _broyden(f: Callable[[Array], Array], z0: Array, cfg: SolverConfig, *,
-             outer_grad=None, sharding=None, freeze_mask=None) -> SolveResult:
+             outer_grad=None, sharding=None, freeze_mask=None,
+             carry=None) -> SolveResult:
     return broyden_solve(lambda z: z - f(z), z0, cfg,
-                         sharding=sharding, freeze_mask=freeze_mask)
+                         sharding=sharding, freeze_mask=freeze_mask,
+                         carry=carry)
 
 
 @register_solver("adjoint_broyden")
 def _adjoint_broyden(f: Callable[[Array], Array], z0: Array, cfg: SolverConfig, *,
                      outer_grad=None, sharding=None,
-                     freeze_mask=None) -> SolveResult:
+                     freeze_mask=None, carry=None) -> SolveResult:
     return adjoint_broyden_solve(lambda z: z - f(z), z0, cfg,
                                  outer_grad=outer_grad, sharding=sharding,
-                                 freeze_mask=freeze_mask)
+                                 freeze_mask=freeze_mask, carry=carry)
 
 
 @register_solver("fixed_point")
 def _fixed_point(f: Callable[[Array], Array], z0: Array, cfg: SolverConfig, *,
                  outer_grad=None, sharding=None,
-                 freeze_mask=None) -> SolveResult:
+                 freeze_mask=None, carry=None) -> SolveResult:
     return fixed_point_solve(f, z0, cfg, sharding=sharding,
-                             freeze_mask=freeze_mask)
+                             freeze_mask=freeze_mask, carry=carry)
 
 
 @register_solver("anderson")
 def _anderson(f: Callable[[Array], Array], z0: Array, cfg: SolverConfig, *,
-              outer_grad=None, sharding=None, freeze_mask=None) -> SolveResult:
+              outer_grad=None, sharding=None, freeze_mask=None,
+              carry=None) -> SolveResult:
     return anderson_solve(f, z0, cfg, sharding=sharding,
-                          freeze_mask=freeze_mask)
+                          freeze_mask=freeze_mask, carry=carry)

@@ -175,13 +175,15 @@ def qn_apply(u, v, x, alpha, mask, impl: Impl | None = None) -> jax.Array:
 
 def qn_apply_multi(u, v, xs, alpha, mask,
                    transpose: Sequence[bool] | None = None,
-                   impl: Impl | None = None) -> jax.Array:
+                   impl: Impl | None = None,
+                   block_d: int = 512) -> jax.Array:
     """Apply H (and/or H^T, per the ``transpose`` flags) to the K stacked
     right-hand sides ``xs: (K, B, *F)`` in ONE streaming pass over U/V.
 
     Returns ``(K, B, *F)``; ``out[k] = (H^T if transpose[k] else H) @
     xs[k]``.  This is THE fused Broyden-step primitive: the per-step
     direction/matvec/rmatvec all batch through one invocation.
+    ``block_d`` pins the kernel's feature tile (Pallas paths only).
     """
     kk = xs.shape[0]
     transpose = tuple(bool(t) for t in
@@ -198,10 +200,60 @@ def qn_apply_multi(u, v, xs, alpha, mask,
     xs2 = xs.reshape(kk, bsz, -1)
     u2, v2, mask = _pad_memory_axis(u2, v2, mask)
     out = qn_apply_multi_pallas(
-        u2, v2, xs2, alpha, mask, transpose=transpose,
+        u2, v2, xs2, alpha, mask, transpose=transpose, block_d=block_d,
         interpret=(impl == "pallas_interpret"),
     )
     return out.reshape((kk, bsz) + feat_shape)
+
+
+def qn_apply_multi_sharded(u, v, xs, alpha, mask,
+                           transpose: Sequence[bool] | None = None,
+                           *,
+                           mesh,
+                           batch_axes: str | tuple[str, ...] = "data",
+                           impl: Impl | None = None,
+                           block_d: int = 512) -> jax.Array:
+    """Explicit ``shard_map`` route for the batch-sharded fused application.
+
+    The GSPMD route (plain :func:`qn_apply_multi` under a sharding
+    constraint) already runs the kernel on the per-shard local view, but the
+    tile geometry it lowers with is whatever the partitioner picks.  This
+    wrapper maps the kernel over the DP mesh axes EXPLICITLY: every shard
+    executes one ``pallas_call`` whose ``block_d`` feature tile (and padded
+    local batch) is pinned at trace time — deterministic per-shard tiling
+    for the TPU path, per the ROADMAP's shard_map open item.
+
+    ``u, v: (m, B, *F)`` and ``xs: (K, B, *F)`` must be batch-shardable over
+    ``batch_axes`` (B divisible by the product of those mesh axis sizes);
+    feature axes stay local (the fused op is device-local over batch — no
+    collectives are issued in the mapped body).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.sharding import shard_map_compat
+
+    axes = (batch_axes,) if isinstance(batch_axes, str) else tuple(batch_axes)
+    dp = 1
+    for a in axes:
+        dp *= int(mesh.shape[a])
+    bsz = u.shape[1]
+    if bsz % dp != 0:
+        raise ValueError(
+            f"batch {bsz} not divisible by mesh extent {dp} of {axes}")
+    feat_rest = (None,) * (u.ndim - 2)
+    uv_spec = P(None, axes, *feat_rest)
+    xs_spec = P(None, axes, *feat_rest)
+    mask_spec = P(None, axes)
+
+    def local(u_, v_, xs_, alpha_, mask_):
+        return qn_apply_multi(u_, v_, xs_, alpha_, mask_, transpose,
+                              impl=impl, block_d=block_d)
+
+    return shard_map_compat(
+        local, mesh,
+        in_specs=(uv_spec, uv_spec, xs_spec, P(), mask_spec),
+        out_specs=xs_spec,
+    )(u, v, xs, jnp.asarray(alpha, jnp.float32), mask)
 
 
 def lowrank_append(u, v, s, hy, b, inv_den, slot, upd,

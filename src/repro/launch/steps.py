@@ -1,8 +1,17 @@
 """Jit-able step builders shared by the trainer, server and dry-run.
 
-Everything the dry-run lowers at production shapes is built here, so the
+Everything the dry-run lowers at production shapes is built here — the
+SINGLE source of the ``TrainState`` shape, its shardings, and the train
+step; ``runtime.trainer.Trainer`` jits exactly these builders, so the
 launched training/serving steps and the dry-run/roofline artifacts are the
 same functions by construction.
+
+Persistent solve state: for DEQ models the :class:`TrainState` carries a
+:class:`repro.implicit.SolveCarry` — the previous step's equilibrium and
+quasi-Newton chain warm-start the next step's forward solve.  The carry is
+donated with the rest of the state, sharded via the same layout as the live
+solve (state batch-sharded, (U, V) memory pinned alongside), and rides
+through checkpoint save/restore untouched.
 """
 
 from __future__ import annotations
@@ -15,6 +24,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.lowrank import LowRank
+from repro.core.solvers import SolveCarry, carry_state_only
 from repro.models import lm
 from repro.optim.optimizers import (
     OptState,
@@ -33,11 +44,36 @@ from repro.parallel.sharding import (
 
 Pytree = Any
 
+# logical axes of the DEQ-LM solver state; the qN memory prepends "qn_mem"
+# (mirrors models/lm._apply_deq and implicit.solve_sharding)
+_CARRY_STATE_AXES = ("batch", "seq_res", "embed_act")
+
 
 class TrainState(NamedTuple):
     step: jax.Array
     params: Pytree
     opt: OptState
+    # persistent solve state (DEQ models; None otherwise) — the warm-start
+    # carry threaded across train steps
+    carry: SolveCarry | None = None
+
+
+def train_carry_enabled(cfg: ModelConfig, tcfg: TrainConfig) -> bool:
+    """Whether the train step threads a persistent solve carry.
+
+    Requires a DEQ model, ``tcfg.deq_carry != "off"``, no gradient
+    accumulation (microbatches slice the batch axis, so one carry cannot
+    follow all slices), and a family whose solver-state sequence length
+    equals ``tcfg.seq_len`` (vlm prepends image tokens of data-dependent
+    length).  ``tcfg.deq_carry`` further selects "state" (iterate-only
+    reuse, the fresh-batch default) vs "full" (iterate + chain, for
+    repeated-batch regimes).
+    """
+    if tcfg.deq_carry not in ("state", "full", "off"):
+        raise ValueError(
+            f"deq_carry={tcfg.deq_carry!r}; expected state | full | off")
+    return bool(cfg.deq.enabled) and tcfg.deq_carry != "off" \
+        and tcfg.grad_accum == 1 and cfg.family != "vlm"
 
 
 # ---------------------------------------------------------------------------
@@ -63,9 +99,28 @@ def param_structs(cfg: ModelConfig, ctx: ShardCtx) -> Pytree:
         decl, shard, is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "init"))
 
 
+def carry_shardings(cfg: ModelConfig, ctx: ShardCtx) -> SolveCarry | None:
+    """Sharding tree for the train-state solve carry: the iterate rides the
+    activation layout, the (U, V) ring memory is pinned batch-sharded next
+    to it (same rules the live solve uses via ``SolveSharding``)."""
+    if ctx.mesh is None:
+        return None
+    ns = lambda axes: NamedSharding(ctx.mesh, ctx.rules.spec(axes))
+    vec = ns(("batch",))
+    mem = ns(("qn_mem",) + _CARRY_STATE_AXES)
+    return SolveCarry(
+        z=ns(_CARRY_STATE_AXES),
+        lowrank=LowRank(alpha=NamedSharding(ctx.mesh, P()), u=mem, v=mem,
+                        count=vec),
+        warm=vec,
+        age=vec,
+    )
+
+
 def state_shardings(cfg: ModelConfig, tcfg: TrainConfig, ctx: ShardCtx):
     """TrainState sharding tree: params TP-sharded/DP-replicated; moments
-    additionally sharded over "data" when ZeRO-1 is on."""
+    additionally sharded over "data" when ZeRO-1 is on; the solve carry (if
+    enabled) batch-sharded like the live solve."""
     if ctx.mesh is None:
         return None
     decl = lm.model_decl(cfg)
@@ -80,6 +135,8 @@ def state_shardings(cfg: ModelConfig, tcfg: TrainConfig, ctx: ShardCtx):
         params=pshard,
         opt=OptState(step=scalar, mu=oshard,
                      nu=jax.tree_util.tree_map(lambda s: s, oshard)),
+        carry=(carry_shardings(cfg, ctx)
+               if train_carry_enabled(cfg, tcfg) else None),
     )
 
 
@@ -105,8 +162,30 @@ def train_state_structs(cfg: ModelConfig, tcfg: TrainConfig, ctx: ShardCtx) -> T
                                 is_leaf=is_decl)
     scalar = lambda dtype: jax.ShapeDtypeStruct(
         (), dtype, sharding=(shard.step if shard.step is not None else None))
+    carry = None
+    if train_carry_enabled(cfg, tcfg):
+        csh = shard.carry  # SolveCarry of NamedSharding, or None off-mesh
+        b, s, d, m = (tcfg.global_batch, tcfg.seq_len, cfg.d_model,
+                      cfg.deq.memory)
+        mem_sh = csh.lowrank.u if csh is not None else None
+        vec = lambda dtype: jax.ShapeDtypeStruct(
+            (b,), dtype, sharding=(csh.warm if csh is not None else None))
+        carry = SolveCarry(
+            z=jax.ShapeDtypeStruct((b, s, d), dt,
+                                   sharding=(csh.z if csh is not None else None)),
+            lowrank=LowRank(
+                alpha=jax.ShapeDtypeStruct(
+                    (), jnp.float32,
+                    sharding=(csh.lowrank.alpha if csh is not None else None)),
+                u=jax.ShapeDtypeStruct((m, b, s, d), dt, sharding=mem_sh),
+                v=jax.ShapeDtypeStruct((m, b, s, d), dt, sharding=mem_sh),
+                count=vec(jnp.int32),
+            ),
+            warm=vec(jnp.bool_),
+            age=vec(jnp.int32),
+        )
     return TrainState(scalar(jnp.int32), params,
-                      OptState(scalar(jnp.int32), mu, nu))
+                      OptState(scalar(jnp.int32), mu, nu), carry)
 
 
 # ---------------------------------------------------------------------------
@@ -122,15 +201,30 @@ def build_train_step(
     loss_fn: Callable | None = None,
 ) -> Callable:
     """(state, batch) -> (state, metrics): grads (+accumulation) -> clip ->
-    AdamW/SGDM with the tcfg schedule. The canonical production train step."""
-    loss_fn = loss_fn or (lambda p, b: lm.loss_fn(p, b, cfg, ctx, z_loss=tcfg.z_loss))
+    AdamW/SGDM with the tcfg schedule. The canonical production train step.
+
+    When the state carries a :class:`SolveCarry` (DEQ models, see
+    ``train_carry_enabled``) the default loss threads it into the forward
+    solve and the updated carry rides back into the new state — consecutive
+    steps warm-start from the previous equilibrium.  A custom ``loss_fn``
+    keeps the legacy ``(params, batch)`` signature and leaves the carry
+    untouched.
+    """
+    if loss_fn is None:
+        def loss_with_carry(p, b, c):
+            return lm.loss_fn(p, b, cfg, ctx, z_loss=tcfg.z_loss, carry=c)
+    else:
+        def loss_with_carry(p, b, c):  # legacy signature: carry not threaded
+            return loss_fn(p, b)
     sched = make_schedule(tcfg)
 
-    def grads_of(params, batch):
-        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+    def grads_of(params, batch, carry):
+        return jax.value_and_grad(loss_with_carry, has_aux=True)(
+            params, batch, carry)
 
     def train_step(state: TrainState, batch: dict):
         params = state.params
+        new_carry = state.carry
         if tcfg.grad_accum > 1:
             k = tcfg.grad_accum
 
@@ -141,7 +235,7 @@ def build_train_step(
 
             def acc_fn(carry, i):
                 gacc, laux = carry
-                (l, _aux), g = grads_of(params, micro(batch, i))
+                (l, _aux), g = grads_of(params, micro(batch, i), None)
                 gacc = jax.tree_util.tree_map(jnp.add, gacc, g)
                 return (gacc, laux + l), None
 
@@ -154,7 +248,13 @@ def build_train_step(
             grads = jax.tree_util.tree_map(lambda g: g / k, gsum)
             loss, aux = lsum / k, {}
         else:
-            (loss, aux), grads = grads_of(params, batch)
+            carry_in = state.carry
+            if carry_in is not None and tcfg.deq_carry == "state":
+                # fresh-batch regime: reuse the iterate, rebuild the chain
+                carry_in = carry_state_only(carry_in)
+            (loss, aux), grads = grads_of(params, batch, carry_in)
+            if isinstance(aux, dict):
+                new_carry = aux.pop("solve_carry", new_carry)
 
         grads, gnorm = clip_by_global_norm(grads, tcfg.clip_norm)
         lr = sched(state.step)
@@ -167,7 +267,7 @@ def build_train_step(
         metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
         if isinstance(aux, dict):
             metrics.update({k: v for k, v in aux.items() if jnp.ndim(v) == 0})
-        return TrainState(state.step + 1, new_params, opt), metrics
+        return TrainState(state.step + 1, new_params, opt, new_carry), metrics
 
     return train_step
 
@@ -175,10 +275,14 @@ def build_train_step(
 def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, ctx: ShardCtx,
                      seed: int | None = None) -> TrainState:
     seed = tcfg.seed if seed is None else seed
+    with_carry = train_carry_enabled(cfg, tcfg)
 
     def init(key):
         params = lm.init_params(cfg, key)
-        return TrainState(jnp.zeros((), jnp.int32), params, adamw_init(params))
+        carry = (lm.deq_solve_carry(cfg, tcfg.global_batch, tcfg.seq_len)
+                 if with_carry else None)
+        return TrainState(jnp.zeros((), jnp.int32), params,
+                          adamw_init(params), carry)
 
     key = jax.random.PRNGKey(seed)
     shard = state_shardings(cfg, tcfg, ctx)

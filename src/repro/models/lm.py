@@ -29,7 +29,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.implicit import ImplicitConfig, batched_solve, implicit_fixed_point
+from repro.implicit import (
+    ImplicitConfig,
+    SolveCarry,
+    batched_solve,
+    implicit_fixed_point,
+    init_solve_carry,
+    seed_carry,
+)
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
@@ -286,6 +293,15 @@ def _remat_wrap(fn, cfg: ModelConfig, train: bool):
     return jax.checkpoint(fn)
 
 
+def deq_solve_carry(cfg: ModelConfig, batch: int, seq: int) -> SolveCarry:
+    """An all-cold persistent solve state for the DEQ group's ``(B, S, d)``
+    activations — thread it through ``loss_fn``/``decode_step`` to warm-start
+    consecutive solves (train steps, decode tokens)."""
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return init_solve_carry(batch, (seq, cfg.d_model), cfg.deq.memory,
+                            dtype=dtype)
+
+
 def apply_stack(
     params: dict,
     x: Array,
@@ -296,16 +312,20 @@ def apply_stack(
     cache_index: Array | None = None,
     train: bool = True,
     active: Array | None = None,
+    carry: SolveCarry | None = None,
 ):
     """Runs all stack groups. Returns (x, new_caches, aux).
 
     ``active: (B,) bool`` (serving only) freezes inactive batch slots in the
-    DEQ fixed-point solve — they pay no solver iterations."""
+    DEQ fixed-point solve — they pay no solver iterations.  ``carry``
+    warm-starts the DEQ solve from the previous outer call (train step /
+    decode token); the updated carry comes back under ``aux["solve_carry"]``.
+    """
     aux = {"moe_aux": jnp.float32(0.0), "moe_z": jnp.float32(0.0)}
 
     if cfg.deq.enabled:
         return _apply_deq(params, x, cfg, ctx, positions, caches, cache_index,
-                          train, active)
+                          train, active, carry)
 
     shared = params.get("shared_attn")
     new_caches: dict = {}
@@ -361,9 +381,29 @@ def apply_stack(
 
 
 def _apply_deq(params, x_emb, cfg, ctx, positions, caches, cache_index, train,
-               active=None):
+               active=None, carry=None):
     """The paper's technique at LM scale: weight-tied block group solved to a
-    fixed point, with SHINE-family backward (cfg.deq.backward)."""
+    fixed point, with SHINE-family backward (cfg.deq.backward).
+
+    ``carry`` threads the persistent solve state through the call: the
+    previous train step's (or previous decode token's) equilibrium and qN
+    chain seed this solve, and the updated carry returns in
+    ``aux["solve_carry"]`` (stop-gradient'ed — warm starts never perturb
+    the implicit gradient).
+
+    State formulation (input injection): the equilibrium stream solves
+
+        z* = x + C(z*),   C(z) = blocks(z) - z
+
+    i.e. the injection rides OUTSIDE the weight-tied block contributions C.
+    The previous form ``z = blocks(z + x)`` has Jacobian ``I + J_C`` — its
+    root system ``g = -x - C(z+x)`` is singular whenever ``J_C`` is small
+    (any near-init model), the fixed points degenerate into a scale ray
+    (rmsnorm makes C scale-invariant) and every solve escapes to infinity.
+    With injection outside, ``J_f = J_C`` — contractive exactly when the
+    blocks are weakly coupled, so equilibria exist, solves genuinely
+    converge, and a carried equilibrium is meaningful across steps/tokens.
+    """
     d = cfg.deq
     kind = _deq_kind(cfg)
     shared = params.get("shared_attn")
@@ -388,49 +428,60 @@ def _apply_deq(params, x_emb, cfg, ctx, positions, caches, cache_index, train,
     if caches is None:
         def f(p, xin, z):
             x_in, pos = xin
-            h = z + x_in
+            h = z
             for j in range(d.num_blocks):
                 pj = jax.tree_util.tree_map(lambda a: a[j], p["blocks"])
                 h, _, _ = apply_unit(kind, pj, h, cfg, ctx, pos,
                                      None, None, p.get("shared"))
-            return ctx.constrain(h, ("batch", "seq_res", "embed_act"))
+            return ctx.constrain(x_in + (h - z),
+                                 ("batch", "seq_res", "embed_act"))
 
-        z0 = jnp.zeros_like(x_emb)
-        z_star, stats = implicit_fixed_point(f, p_all, (x_emb, positions), z0,
-                                             deq_cfg, ctx=ctx,
-                                             state_axes=state_axes)
+        # cold start AT the injection: f(x) = x + C(x) is one free Picard
+        # step, and the solve stays input-anchored even when a random-init
+        # C is not yet contractive (best-iterate tracking then returns a
+        # stream-shaped state rather than collapsing to zero)
+        z0 = x_emb
+        out = implicit_fixed_point(f, p_all, (x_emb, positions), z0,
+                                   deq_cfg, ctx=ctx, state_axes=state_axes,
+                                   carry=carry)
+        z_star, stats = out[0], out[1]
         aux = {"moe_aux": jnp.float32(0.0), "moe_z": jnp.float32(0.0),
                "deq_residual": jnp.mean(stats.residual),
                "deq_steps": stats.n_steps.astype(jnp.float32)}
+        if carry is not None:
+            aux["solve_carry"] = out[2]
         return z_star, None, aux
 
     # decode/prefill with cache: solve the fixed point of the new token(s)
     # against the frozen cache, then refresh the cache once at z*.
     def f_dec(p, xin, z):
         x_in, pos, cch, cidx = xin
-        h = z + x_in
+        h = z
         for j in range(d.num_blocks):
             pj = jax.tree_util.tree_map(lambda a: a[j], p["blocks"])
             cj = jax.tree_util.tree_map(lambda a: a[j], cch["deq"])
             h, _, _ = apply_unit(kind, pj, h, cfg, ctx, pos, cj,
                                  cidx, p.get("shared"))
-        return h
+        return x_in + (h - z)
 
-    z0 = jnp.zeros_like(x_emb)
+    z0 = x_emb
     if active is not None:
         # serving: freeze inactive slots in the batched solve (no backward
         # pass exists at decode time, so the inference engine applies)
-        z_star, stats = batched_solve(
+        out = batched_solve(
             f_dec, p_all, (x_emb, positions, caches, cache_index), z0,
             deq_cfg, valid=active, ctx=ctx, state_axes=state_axes,
+            carry=carry,
         )
     else:
-        z_star, stats = implicit_fixed_point(
+        out = implicit_fixed_point(
             f_dec, p_all, (x_emb, positions, caches, cache_index), z0, deq_cfg,
-            ctx=ctx, state_axes=state_axes,
+            ctx=ctx, state_axes=state_axes, carry=carry,
         )
+    z_star, stats = out[0], out[1]
     # one more pass to materialize the updated caches at the fixed point
-    h = z_star + x_emb
+    # (the state IS the block-input stream under input injection)
+    h = z_star
     new_list = []
     for j in range(d.num_blocks):
         pj = jax.tree_util.tree_map(lambda a: a[j], params["deq_blocks"])
@@ -442,6 +493,8 @@ def _apply_deq(params, x_emb, cfg, ctx, positions, caches, cache_index, train,
     aux = {"moe_aux": jnp.float32(0.0), "moe_z": jnp.float32(0.0),
            "deq_residual": jnp.mean(stats.residual),
            "deq_steps": stats.n_steps.astype(jnp.float32)}
+    if carry is not None:
+        aux["solve_carry"] = out[2]
     return z_star, new_caches, aux
 
 
@@ -472,18 +525,22 @@ def _input_embedding(params, batch: dict, cfg: ModelConfig, ctx: ShardCtx):
 
 
 def forward(params, batch: dict, cfg: ModelConfig, ctx: ShardCtx,
-            train: bool = True):
-    """Full-sequence forward. Returns (logits, aux)."""
+            train: bool = True, carry: SolveCarry | None = None):
+    """Full-sequence forward. Returns (logits, aux).
+
+    ``carry`` warm-starts the DEQ solve; the updated state comes back under
+    ``aux["solve_carry"]`` (see :func:`deq_solve_carry`)."""
     x, pos = _input_embedding(params, batch, cfg, ctx)
-    x, _, aux = apply_stack(params, x, cfg, ctx, pos, train=train)
+    x, _, aux = apply_stack(params, x, cfg, ctx, pos, train=train,
+                            carry=carry)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = lm_logits(params["embed"], x, cfg, ctx)
     return logits, aux
 
 
 def loss_fn(params, batch: dict, cfg: ModelConfig, ctx: ShardCtx,
-            z_loss: float = 1e-4):
-    logits, aux = forward(params, batch, cfg, ctx, train=True)
+            z_loss: float = 1e-4, carry: SolveCarry | None = None):
+    logits, aux = forward(params, batch, cfg, ctx, train=True, carry=carry)
     targets = batch["targets"]
     if cfg.family == "vlm" and "image_embeds" in batch:
         n_img = batch["image_embeds"].shape[1]
@@ -531,8 +588,16 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
     return caches
 
 
-def prefill(params, batch: dict, cfg: ModelConfig, ctx: ShardCtx, max_len: int):
-    """Encode a prompt; returns (logits, caches, lengths)."""
+def prefill(params, batch: dict, cfg: ModelConfig, ctx: ShardCtx,
+            max_len: int, carry: SolveCarry | None = None):
+    """Encode a prompt; returns (logits, caches, lengths).
+
+    ``carry`` must be a DECODE-shaped carry (``deq_solve_carry(cfg, B, 1)``):
+    the prefill solve itself runs cold (its (B, S, d) state is a different
+    problem), but the last token's equilibrium SEEDS the carry so the first
+    decode step warm-starts — token-to-token reuse begins at token 0.  With
+    a carry the return is ``(logits, caches, lengths, carry)``.
+    """
     x, pos = _input_embedding(params, batch, cfg, ctx)
     b = x.shape[0]
     caches = init_cache(cfg, b, max_len)
@@ -540,23 +605,37 @@ def prefill(params, batch: dict, cfg: ModelConfig, ctx: ShardCtx, max_len: int):
     x, caches, _aux = apply_stack(
         params, x, cfg, ctx, pos, caches, idx0, train=False
     )
+    # for the DEQ path, the stack output IS the equilibrium z*
+    z_last = x[:, -1:, :]
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = lm_logits(params["embed"], x, cfg, ctx)
-    return logits, caches, jnp.full((b,), x.shape[1], jnp.int32)
+    lengths = jnp.full((b,), x.shape[1], jnp.int32)
+    if carry is None:
+        return logits, caches, lengths
+    return logits, caches, lengths, seed_carry(carry, z_last)
 
 
 def decode_step(params, caches, tokens: Array, cache_index: Array,
-                cfg: ModelConfig, ctx: ShardCtx, active: Array | None = None):
+                cfg: ModelConfig, ctx: ShardCtx, active: Array | None = None,
+                carry: SolveCarry | None = None):
     """One decode step. tokens: (B,), cache_index: (B,). Returns
     (logits (B, V), new caches).  ``active: (B,) bool`` lets the serving
-    loop freeze finished/empty slots inside the DEQ fixed-point solve."""
+    loop freeze finished/empty slots inside the DEQ fixed-point solve.
+
+    ``carry`` threads the token-to-token solve state: the equilibrium (and
+    quasi-Newton chain) at token *t* seeds token *t+1* — steady-state decode
+    then converges in a fraction of the cold iteration count.  With a carry
+    the return is ``(logits, caches, carry)``.
+    """
     batch = {"tokens": tokens[:, None]}
     x = embed_tokens(params["embed"], batch["tokens"], cfg, ctx)
     pos = cache_index[:, None]
-    x, caches, _aux = apply_stack(
+    x, caches, aux = apply_stack(
         params, x, cfg, ctx, pos, caches, cache_index, train=False,
-        active=active,
+        active=active, carry=carry,
     )
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = lm_logits(params["embed"], x, cfg, ctx)
-    return logits[:, 0], caches
+    if carry is None:
+        return logits[:, 0], caches
+    return logits[:, 0], caches, aux.get("solve_carry", carry)

@@ -24,7 +24,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models.layers import mlp, mlp_decl
-from repro.parallel.sharding import ParamDecl, ShardCtx
+from repro.parallel.sharding import ParamDecl, ShardCtx, shard_map_compat
 
 Array = jax.Array
 
@@ -138,7 +138,7 @@ def moe_block(params: dict, x: Array, cfg: ModelConfig, ctx: ShardCtx
             "wo": ctx.rules.spec(("expert_act", None, None)),
         }
         routed = {k: params[k] for k in ("router", "wi_g", "wi_u", "wo")}
-        out, aux, zloss = _shard_map(
+        out, aux, zloss = shard_map_compat(
             shard_fn, mesh,
             in_specs=(batch_spec, pspecs),
             out_specs=(batch_spec, P(), P()),
@@ -149,21 +149,6 @@ def moe_block(params: dict, x: Array, cfg: ModelConfig, ctx: ShardCtx
         out = out + mlp(params["shared"], x, cfg, ctx)
     out = ctx.constrain(out, ("batch", "seq_res", "embed_act"))
     return out, {"moe_aux": aux, "moe_z": zloss}
-
-
-def _shard_map(f, mesh, *, in_specs, out_specs):
-    """Per-device mapping across jax versions: `jax.shard_map` (with its
-    `check_vma` flag) only exists from 0.6; older versions expose the same
-    semantics as `jax.experimental.shard_map.shard_map` with `check_rep`.
-    Replication checking is off in both spellings — `shard_fn` issues its
-    own psum/pmean collectives."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
-    from jax.experimental.shard_map import shard_map as _sm
-
-    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-               check_rep=False)
 
 
 def _capacity(tokens: int, m) -> int:

@@ -17,6 +17,12 @@ Batched-engine behaviour (the sharded batched fixed-point engine):
     into ``decode_step``; for DEQ models the fixed-point solver freezes
     inactive slots (they consume no iterations and no quasi-Newton
     memory), and the solve early-exits once every live slot converges.
+  * **Persistent solve state** — for DEQ models each slot owns a
+    :class:`repro.implicit.CarryCache` row: the equilibrium (and qN chain)
+    at token *t* warm-starts token *t+1*, the prefill equilibrium's last
+    token seeds token 0, and admitting a new request into a recycled slot
+    EVICTS the previous occupant's carry (cold reset) so no request ever
+    warm-starts from a stranger's state.
   * Under a mesh (``ctx.mesh``), the decode step and the solver's (U, V)
     memory run batch-sharded — see ``repro.implicit.engine``.
 """
@@ -32,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.implicit import CarryCache, write_carry_rows
 from repro.models import lm
 from repro.parallel.sharding import ShardCtx
 
@@ -61,11 +68,22 @@ class ServeLoop:
         # means calls <= requests)
         self.prefill_calls = 0
         self.prefill_requests = 0
+        # persistent per-slot solve state (DEQ models only): token-to-token
+        # warm starts, evicted when a slot is recycled
+        self.carries = CarryCache(
+            lambda: lm.deq_solve_carry(cfg, slots, 1), slots
+        ) if cfg.deq.enabled else None
 
-        self._decode = jax.jit(
-            lambda p, c, t, i, a: lm.decode_step(p, c, t, i, cfg, ctx,
-                                                 active=a)
-        )
+        if self.carries is None:
+            self._decode = jax.jit(
+                lambda p, c, t, i, a: lm.decode_step(p, c, t, i, cfg, ctx,
+                                                     active=a)
+            )
+        else:
+            self._decode = jax.jit(
+                lambda p, c, t, i, a, cy: lm.decode_step(
+                    p, c, t, i, cfg, ctx, active=a, carry=cy)
+            )
         self._prefill_cache = {}
         # The batch axis of each cache leaf, probed once from shapes (batch
         # sits at axis 1 under the stacked-layer leading axis, or axis 2 for
@@ -101,15 +119,38 @@ class ServeLoop:
         for plen, group in by_len.items():
             key = (plen, len(group))
             if key not in self._prefill_cache:
-                self._prefill_cache[key] = jax.jit(
-                    lambda p, toks: lm.prefill(
-                        p, {"tokens": toks}, self.cfg, self.ctx, self.max_len
+                if self.carries is None:
+                    self._prefill_cache[key] = jax.jit(
+                        lambda p, toks: lm.prefill(
+                            p, {"tokens": toks}, self.cfg, self.ctx,
+                            self.max_len
+                        )
                     )
-                )
+                else:
+                    # wave-shaped cold carry: prefill seeds it with the last
+                    # token's equilibrium (token-to-token reuse from token 0)
+                    wave_carry = lm.deq_solve_carry(self.cfg, len(group), 1)
+                    self._prefill_cache[key] = jax.jit(
+                        lambda p, toks, _c=wave_carry: lm.prefill(
+                            p, {"tokens": toks}, self.cfg, self.ctx,
+                            self.max_len, carry=_c
+                        )
+                    )
             toks = jnp.asarray([req.prompt for _, req in group], jnp.int32)
-            logits, cache_new, _lens = self._prefill_cache[key](self.params, toks)
+            out = self._prefill_cache[key](self.params, toks)
+            logits, cache_new = out[0], out[1]
+            seeded = out[3] if self.carries is not None else None
             self.prefill_calls += 1
             self.prefill_requests += len(group)
+            if self.carries is not None:
+                # one batched scatter per wave: the scatter overwrites every
+                # field of the leased rows, so the lease skips its own
+                # device-side reset (ownership bookkeeping only)
+                for slot, req in group:
+                    self.carries.lease(slot, req.uid, reset=False)
+                self.carries.update(write_carry_rows(
+                    self.carries.carry, seeded,
+                    [slot for slot, _ in group], list(range(len(group)))))
             for row, (slot, req) in enumerate(group):
                 self.caches = jax.tree_util.tree_map(
                     lambda live, new, ax: _slot_write(live, new, slot, row, ax),
@@ -129,10 +170,17 @@ class ServeLoop:
         mask = np.array([r is not None and not r.done for r in self.active])
         if not mask.any():
             return 0
-        logits, self.caches = self._decode(
-            self.params, self.caches, self.cur_tok, self.lengths,
-            jnp.asarray(mask),
-        )
+        if self.carries is None:
+            logits, self.caches = self._decode(
+                self.params, self.caches, self.cur_tok, self.lengths,
+                jnp.asarray(mask),
+            )
+        else:
+            logits, self.caches, new_carry = self._decode(
+                self.params, self.caches, self.cur_tok, self.lengths,
+                jnp.asarray(mask), self.carries.carry,
+            )
+            self.carries.update(new_carry)
         nxt = jnp.argmax(logits, -1).astype(jnp.int32)
         self.lengths = self.lengths + jnp.asarray(mask, jnp.int32)
         self.cur_tok = jnp.where(jnp.asarray(mask), nxt, self.cur_tok)
@@ -144,6 +192,8 @@ class ServeLoop:
             if tok == self.eos or len(req.out) >= req.max_new_tokens:
                 req.done = True
                 self.active[s] = None
+                if self.carries is not None:
+                    self.carries.release(s)
         return int(mask.sum())
 
     def drain(self, reqs: list[Request], max_ticks: int = 10_000) -> list[Request]:

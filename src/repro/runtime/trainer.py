@@ -2,49 +2,31 @@
 state, microbatched gradient accumulation, checkpoint/restart, preemption
 handling and straggler reporting.
 
-One jitted step does: schedule -> (accumulated) grads -> global-norm clip ->
-AdamW/SGDM -> new state. Parameter and optimizer shardings are derived from
-the single declaration tree (parallel/sharding): params TP-sharded +
-DP-replicated, moments additionally sharded over "data" (ZeRO-1).
+The step function, the ``TrainState`` shape (including the persistent
+solve carry for DEQ models), and all shardings come from
+``repro.launch.steps`` — the single source both this trainer and the
+dry-run lower, so "the same functions by construction" is literally true.
+This module owns only the RUNTIME concerns: jit/donation, the step loop,
+checkpointing, preemption, and straggler watching.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Iterator, NamedTuple
+from typing import Callable, Iterator
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.implicit import ESTIMATORS, SOLVERS
-from repro.models import lm
-from repro.optim.optimizers import (
-    OptState,
-    adamw_init,
-    adamw_update,
-    clip_by_global_norm,
-    make_schedule,
-    sgdm_update,
-)
-from repro.parallel.sharding import (
-    ShardCtx,
-    named_sharding_tree,
-    spec_tree,
-    zero1_spec_tree,
-)
+from repro.launch import steps
+from repro.launch.steps import TrainState  # re-export (legacy import path)
+from repro.parallel.sharding import ShardCtx
 from repro.runtime.ft import PreemptionGuard, StragglerWatchdog
 
-Pytree = Any
-
-
-class TrainState(NamedTuple):
-    step: jax.Array
-    params: Pytree
-    opt: OptState
+__all__ = ["Trainer", "TrainState"]
 
 
 class Trainer:
@@ -71,13 +53,24 @@ class Trainer:
                     f"global_batch={tcfg.global_batch} not divisible by the "
                     f"data-parallel mesh extent {dp} (axes behind 'batch')"
                 )
-        self.loss_fn = loss_fn or (
-            lambda p, b: lm.loss_fn(p, b, cfg, ctx, z_loss=tcfg.z_loss)
-        )
-        self.sched = make_schedule(tcfg)
-        self.decl = lm.model_decl(cfg)
-        self._build_shardings()
-        self._train_step = self._make_train_step()
+        self.loss_fn = loss_fn
+        if loss_fn is not None:
+            # a custom loss keeps the legacy (params, batch) signature and
+            # cannot thread the solve carry — don't allocate/checkpoint one
+            # that could never be updated
+            tcfg = dataclasses.replace(tcfg, deq_carry="off")
+        self._tcfg_eff = tcfg
+        self.state_sharding = steps.state_shardings(cfg, tcfg, ctx)
+        step_fn = steps.build_train_step(cfg, tcfg, ctx, loss_fn=loss_fn)
+        if self.state_sharding is not None:
+            self._train_step = jax.jit(
+                step_fn,
+                in_shardings=(self.state_sharding, None),
+                out_shardings=(self.state_sharding, None),
+                donate_argnums=(0,),
+            )
+        else:
+            self._train_step = jax.jit(step_fn, donate_argnums=(0,))
         self.watchdog = StragglerWatchdog(n_hosts=max(jax.process_count(), 1))
         self.ckpt = (
             CheckpointManager(tcfg.checkpoint_dir, keep=tcfg.keep_checkpoints)
@@ -86,112 +79,18 @@ class Trainer:
 
     # ------------------------------------------------------------------
 
-    def _build_shardings(self):
-        ctx = self.ctx
-        if ctx.mesh is None:
-            self.param_sharding = None
-            self.state_sharding = None
-            return
-        pspec = spec_tree(self.decl, ctx.rules)
-        self.param_spec = pspec
-        self.param_sharding = named_sharding_tree(pspec, ctx.mesh)
-        if self.tcfg.zero1:
-            ospec = zero1_spec_tree(self.decl, ctx.rules,
-                                    zero_size=ctx.mesh.shape.get("data", 0))
-        else:
-            ospec = pspec
-        osharding = named_sharding_tree(ospec, ctx.mesh)
-        self.state_sharding = TrainState(
-            step=NamedSharding(ctx.mesh, jax.sharding.PartitionSpec()),
-            params=self.param_sharding,
-            opt=OptState(
-                step=NamedSharding(ctx.mesh, jax.sharding.PartitionSpec()),
-                mu=osharding,
-                nu=jax.tree_util.tree_map(lambda s: s, osharding),
-            ),
-        )
-
     def init_state(self, seed: int | None = None) -> TrainState:
-        seed = self.tcfg.seed if seed is None else seed
-
-        def init(key):
-            params = lm.init_params(self.cfg, key)
-            return TrainState(jnp.zeros((), jnp.int32), params, adamw_init(params))
-
-        key = jax.random.PRNGKey(seed)
-        if self.state_sharding is not None:
-            return jax.jit(init, out_shardings=self.state_sharding)(key)
-        return jax.jit(init)(key)
-
-    # ------------------------------------------------------------------
-
-    def _make_train_step(self):
-        tcfg, cfg = self.tcfg, self.cfg
-
-        def grads_of(params, batch):
-            return jax.value_and_grad(self.loss_fn, has_aux=True)(params, batch)
-
-        def train_step(state: TrainState, batch: dict):
-            params = state.params
-            if tcfg.grad_accum > 1:
-                k = tcfg.grad_accum
-
-                def micro(b, i):
-                    return jax.tree_util.tree_map(
-                        lambda a: a.reshape((k, a.shape[0] // k) + a.shape[1:])[i], b
-                    )
-
-                def acc_fn(carry, i):
-                    gacc, laux = carry
-                    (l, aux), g = grads_of(params, micro(batch, i))
-                    gacc = jax.tree_util.tree_map(jnp.add, gacc, g)
-                    return (gacc, laux + l), None
-
-                zeros = jax.tree_util.tree_map(
-                    lambda p: jnp.zeros(p.shape, jnp.float32), params
-                )
-                (gsum, lsum), _ = jax.lax.scan(
-                    acc_fn, (zeros, jnp.float32(0.0)), jnp.arange(k)
-                )
-                grads = jax.tree_util.tree_map(lambda g: g / k, gsum)
-                loss = lsum / k
-                aux = {}
-            else:
-                (loss, aux), grads = grads_of(params, batch)
-
-            grads, gnorm = clip_by_global_norm(grads, tcfg.clip_norm)
-            lr = self.sched(state.step)
-            if tcfg.optimizer == "sgdm":
-                new_params, opt = sgdm_update(
-                    grads, state.opt, params, lr, weight_decay=tcfg.weight_decay
-                )
-            else:
-                new_params, opt = adamw_update(
-                    grads, state.opt, params, lr,
-                    weight_decay=tcfg.weight_decay,
-                )
-            metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
-            if isinstance(aux, dict):
-                metrics.update({k: v for k, v in aux.items()
-                                if jnp.ndim(v) == 0})
-            return TrainState(state.step + 1, new_params, opt), metrics
-
-        if self.state_sharding is not None:
-            return jax.jit(
-                train_step,
-                in_shardings=(self.state_sharding, None),
-                out_shardings=(self.state_sharding, None),
-                donate_argnums=(0,),
-            )
-        return jax.jit(train_step, donate_argnums=(0,))
-
-    # ------------------------------------------------------------------
+        return steps.init_train_state(self.cfg, self._tcfg_eff, self.ctx,
+                                      seed=seed)
 
     def restore_or_init(self) -> TrainState:
         if self.ckpt is not None and self.ckpt.latest_step() is not None:
             template = jax.eval_shape(lambda: self.init_state())
+            # pre-carry checkpoints lack .carry leaves; zero-fill == the
+            # cold carry, so old runs resume with a cold warm-start state
             _, state, _ = self.ckpt.restore(
-                template, shardings=self.state_sharding
+                template, shardings=self.state_sharding,
+                fill_missing_prefixes=(".carry",),
             )
             return state
         return self.init_state()

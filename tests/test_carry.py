@@ -1,0 +1,419 @@
+"""Persistent solve-state (SolveCarry) lifecycle tests.
+
+Covers the tentpole guarantees end to end:
+
+  * warm-vs-cold parity: a warm-started solve reaches the SAME fixed point
+    in strictly fewer iterations;
+  * stop-gradient: the carry contributes nothing to the implicit gradient
+    (warm and cold gradients agree; d(loss)/d(carry) is identically zero);
+  * engine semantics: frozen (invalid) slots keep their carry bit-for-bit,
+    slot eviction restores cold-start behaviour exactly;
+  * CarryCache request-id keying: recycled slots never inherit a stranger's
+    equilibrium;
+  * TrainState checkpoint roundtrip: the carry survives save/restore.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import TrainConfig
+from repro.configs.registry import smoke_config
+from repro.core.solvers import (
+    SolverConfig,
+    broyden_solve,
+    fixed_point_solve,
+    init_solve_carry,
+    reset_carry_rows,
+    seed_carry,
+)
+from repro.implicit import (
+    CarryCache,
+    ImplicitConfig,
+    batched_solve,
+    carry_for_state,
+    implicit_fixed_point,
+    write_carry_rows,
+    write_carry_slot,
+)
+from repro.launch import steps
+from repro.models import lm
+from repro.parallel.sharding import ShardCtx
+
+CTX = ShardCtx.for_mesh(None)
+
+
+def _linear(key, bsz=4, d=24, contraction=0.5):
+    A = contraction * jax.random.normal(key, (d, d)) / np.sqrt(d)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (bsz, d))
+    z_star = jnp.linalg.solve(jnp.eye(d) - A, b.T).T
+    return A, b, z_star
+
+
+# ---------------------------------------------------------------------------
+# solver layer
+# ---------------------------------------------------------------------------
+
+
+def test_warm_vs_cold_same_fixed_point_fewer_iters():
+    """After a cold solve, re-solving a PERTURBED problem from the carry must
+    converge to the perturbed fixed point in strictly fewer iterations."""
+    key = jax.random.PRNGKey(0)
+    A, b, _ = _linear(key)
+    cfg = SolverConfig(max_steps=60, tol=1e-6, memory=30)
+    carry = init_solve_carry(b.shape[0], A.shape[0], cfg.memory)
+    r0 = broyden_solve(lambda z: z - (z @ A.T + b), jnp.zeros_like(b), cfg,
+                       carry=carry)
+    assert bool(r0.converged.all())
+
+    b2 = b + 0.02 * jax.random.normal(jax.random.fold_in(key, 7), b.shape)
+    g2 = lambda z: z - (z @ A.T + b2)
+    z2 = jnp.linalg.solve(jnp.eye(A.shape[0]) - A, b2.T).T
+    warm = broyden_solve(g2, jnp.zeros_like(b), cfg, carry=r0.carry)
+    cold = broyden_solve(g2, jnp.zeros_like(b), cfg)
+    assert bool(warm.converged.all()) and bool(cold.converged.all())
+    np.testing.assert_allclose(np.asarray(warm.z), np.asarray(z2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(warm.z), np.asarray(cold.z),
+                               rtol=1e-3, atol=1e-4)
+    assert int(warm.n_steps) < int(cold.n_steps)
+    assert bool((warm.carry.age == 2).all())
+
+
+def test_eviction_restores_cold_start_exactly():
+    """reset_carry_rows must make the next solve bit-identical to carryless."""
+    key = jax.random.PRNGKey(1)
+    A, b, _ = _linear(key)
+    cfg = SolverConfig(max_steps=40, tol=1e-6, memory=20)
+    g = lambda z: z - (z @ A.T + b)
+    carry = init_solve_carry(b.shape[0], A.shape[0], cfg.memory)
+    warm = broyden_solve(g, jnp.zeros_like(b), cfg, carry=carry).carry
+    evicted = reset_carry_rows(warm, jnp.ones((b.shape[0],), bool))
+    r_ev = broyden_solve(g, jnp.zeros_like(b), cfg, carry=evicted)
+    r_cold = broyden_solve(g, jnp.zeros_like(b), cfg)
+    assert int(r_ev.n_steps) == int(r_cold.n_steps)
+    np.testing.assert_array_equal(np.asarray(r_ev.z), np.asarray(r_cold.z))
+    assert bool((r_ev.carry.age == 1).all())
+
+
+def test_partial_eviction_is_per_row():
+    key = jax.random.PRNGKey(2)
+    A, b, _ = _linear(key)
+    cfg = SolverConfig(max_steps=40, tol=1e-6, memory=20)
+    g = lambda z: z - (z @ A.T + b)
+    carry = init_solve_carry(b.shape[0], A.shape[0], cfg.memory)
+    warm = broyden_solve(g, jnp.zeros_like(b), cfg, carry=carry).carry
+    evict = jnp.array([True, False, False, False])
+    mixed = reset_carry_rows(warm, evict)
+    assert not bool(mixed.warm[0]) and bool(mixed.warm[1:].all())
+    assert int(mixed.lowrank.count[0]) == 0
+    assert int(mixed.age[0]) == 0 and int(mixed.age[1]) == 1
+
+
+def test_fixed_point_solver_carry_is_iterate_only():
+    """Picard reuses the iterate; the carried ring buffers pass through
+    untouched so the carry pytree stays structurally stable."""
+    key = jax.random.PRNGKey(3)
+    A, b, _ = _linear(key, contraction=0.4)
+    f = lambda z: z @ A.T + b
+    cfg = SolverConfig(max_steps=200, tol=1e-7, memory=8)
+    carry = init_solve_carry(b.shape[0], A.shape[0], cfg.memory)
+    r0 = fixed_point_solve(f, jnp.zeros_like(b), cfg, carry=carry)
+    r1 = fixed_point_solve(f, jnp.zeros_like(b), cfg, carry=r0.carry)
+    assert int(r1.n_steps) < int(r0.n_steps)
+    np.testing.assert_array_equal(np.asarray(r1.carry.lowrank.u),
+                                  np.asarray(carry.lowrank.u))
+
+
+def test_seed_carry_z_only_transfer():
+    carry = init_solve_carry(2, 6, 4)
+    warm = dataclasses.replace(
+        carry, age=jnp.array([3, 3], jnp.int32))
+    z = jnp.ones((2, 6))
+    seeded = seed_carry(warm, z)
+    np.testing.assert_array_equal(np.asarray(seeded.z), np.asarray(z))
+    assert bool(seeded.warm.all())
+    assert int(seeded.lowrank.count.max()) == 0  # chain never transfers
+    assert int(seeded.age.max()) == 0
+
+
+# ---------------------------------------------------------------------------
+# implicit layer: custom_vjp stop-gradient semantics
+# ---------------------------------------------------------------------------
+
+
+def test_warm_gradient_matches_cold_and_carry_gets_zero_cotangent():
+    key = jax.random.PRNGKey(4)
+    d, bsz = 16, 4
+    A = 0.5 * jax.random.normal(key, (d, d)) / np.sqrt(d)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (bsz, d))
+    f = lambda p, xx, z: z @ p.T + xx
+    cfg = ImplicitConfig.from_strings(solver="broyden", max_steps=50,
+                                      tol=1e-8, memory=20)
+    z0 = jnp.zeros((bsz, d))
+
+    def loss(p, c):
+        z, _stats, c_out = implicit_fixed_point(f, p, x, z0, cfg, carry=c)
+        return jnp.sum(z ** 2), c_out
+
+    carry0 = carry_for_state(z0, cfg)
+    (l_cold, c1), g_cold = jax.value_and_grad(loss, has_aux=True)(A, carry0)
+    (l_warm, _), g_warm = jax.value_and_grad(loss, has_aux=True)(A, c1)
+    np.testing.assert_allclose(float(l_cold), float(l_warm), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(g_cold), np.asarray(g_warm),
+                               rtol=1e-4, atol=1e-5)
+    # the stop-gradient guarantee, checked directly
+    g_carry = jax.grad(lambda c: loss(A, c)[0], allow_int=True)(c1)
+    assert float(jnp.abs(g_carry.z).max()) == 0.0
+    assert float(jnp.abs(g_carry.lowrank.u).max()) == 0.0
+    assert float(jnp.abs(g_carry.lowrank.v).max()) == 0.0
+
+
+def test_implicit_fixed_point_carry_none_keeps_two_tuple():
+    """Back-compat: no carry -> the legacy (z, stats) return shape."""
+    A = 0.3 * jnp.eye(4)
+    f = lambda p, xx, z: z @ p.T + xx
+    cfg = ImplicitConfig.from_strings(solver="broyden", max_steps=20,
+                                      tol=1e-6, memory=8)
+    out = implicit_fixed_point(f, A, jnp.ones((2, 4)), jnp.zeros((2, 4)), cfg)
+    assert len(out) == 2
+
+
+# ---------------------------------------------------------------------------
+# engine: batched solve + slot cache
+# ---------------------------------------------------------------------------
+
+
+def test_batched_solve_frozen_slots_keep_carry_bit_for_bit():
+    key = jax.random.PRNGKey(5)
+    d, bsz = 12, 6
+    A = 0.5 * jax.random.normal(key, (d, d)) / np.sqrt(d)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (bsz, d))
+    f = lambda p, xx, z: z @ p.T + xx
+    cfg = ImplicitConfig.from_strings(solver="broyden", max_steps=40,
+                                      tol=1e-6, memory=16)
+    z0 = jnp.zeros((bsz, d))
+    carry = carry_for_state(z0, cfg)
+    _, _, c1 = batched_solve(f, A, x, z0, cfg,
+                             valid=jnp.ones((bsz,), bool), carry=carry)
+    valid = jnp.arange(bsz) < 3
+    x2 = x + 0.1
+    _, stats, c2 = batched_solve(f, A, x2, z0, cfg, valid=valid, carry=c1)
+    # frozen slots: every carry field preserved exactly
+    for field in ("z", "warm", "age"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(c2, field)[3:]),
+            np.asarray(getattr(c1, field)[3:]), err_msg=field)
+    np.testing.assert_array_equal(np.asarray(c2.lowrank.u[:, 3:]),
+                                  np.asarray(c1.lowrank.u[:, 3:]))
+    np.testing.assert_array_equal(np.asarray(c2.lowrank.count[3:]),
+                                  np.asarray(c1.lowrank.count[3:]))
+    # live slots advanced
+    assert bool((c2.age[:3] == c1.age[:3] + 1).all())
+
+
+def test_carry_cache_eviction_on_slot_recycle():
+    d, slots = 8, 3
+    cache = CarryCache(lambda: init_solve_carry(slots, d, 4), slots)
+    cache.lease(0, "req-a")
+    # simulate a warm row
+    warm = dataclasses.replace(
+        cache.carry,
+        warm=jnp.ones((slots,), bool),
+        age=jnp.full((slots,), 5, jnp.int32))
+    cache.update(warm)
+    cache.lease(0, "req-a")          # same owner: no eviction
+    assert int(cache.carry.age[0]) == 5
+    cache.lease(0, "req-b")          # recycle: cold reset of slot 0 only
+    assert int(cache.carry.age[0]) == 0 and not bool(cache.carry.warm[0])
+    assert int(cache.carry.age[1]) == 5
+    cache.release(1)
+    assert not bool(cache.carry.warm[1]) and cache.owner(1) is None
+
+
+def test_write_carry_slot_scatters_one_row():
+    dst = init_solve_carry(4, 6, 3)
+    src = dataclasses.replace(
+        init_solve_carry(2, 6, 3),
+        z=jnp.ones((2, 6)),
+        warm=jnp.ones((2,), bool),
+        age=jnp.array([7, 9], jnp.int32))
+    out = write_carry_slot(dst, src, slot=2, row=1)
+    assert int(out.age[2]) == 9 and bool(out.warm[2])
+    np.testing.assert_array_equal(np.asarray(out.z[2]), np.ones(6))
+    assert int(out.age[0]) == 0  # other slots untouched
+
+
+# ---------------------------------------------------------------------------
+# trainer / checkpoint
+# ---------------------------------------------------------------------------
+
+
+def _tiny_deq_cfg():
+    cfg = smoke_config("minicpm-2b", deq=True)
+    return dataclasses.replace(
+        cfg, num_layers=2, d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+        vocab_size=128, head_dim=16)
+
+
+def test_train_state_carries_solve_state_across_steps(tmp_path):
+    cfg = _tiny_deq_cfg()
+    tcfg = TrainConfig(steps=2, global_batch=2, seq_len=8, lr=1e-3,
+                       zero1=False, seed=0)
+    state = steps.init_train_state(cfg, tcfg, CTX)
+    assert state.carry is not None and not bool(state.carry.warm.any())
+    fn = jax.jit(steps.build_train_step(cfg, tcfg, CTX))
+    toks = jax.random.randint(jax.random.PRNGKey(0), (2, 9), 0, 128)
+    batch = {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+    state, m = fn(state, batch)
+    assert bool(state.carry.warm.all())
+    assert bool((state.carry.age == 1).all())
+    state, m = fn(state, batch)
+    assert bool((state.carry.age == 2).all())
+
+    # checkpoint roundtrip: the carry is part of the durable state
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    mgr.save(2, state)
+    template = jax.eval_shape(lambda: steps.init_train_state(cfg, tcfg, CTX))
+    _, restored, _ = mgr.restore(template)
+    np.testing.assert_array_equal(np.asarray(restored.carry.age),
+                                  np.asarray(state.carry.age))
+    np.testing.assert_allclose(
+        np.asarray(restored.carry.z, np.float32),
+        np.asarray(state.carry.z, np.float32))
+    np.testing.assert_allclose(
+        np.asarray(restored.carry.lowrank.u, np.float32),
+        np.asarray(state.carry.lowrank.u, np.float32))
+
+
+def test_restore_pre_carry_checkpoint_zero_fills_cold_carry(tmp_path):
+    """A checkpoint written WITHOUT a carry (pre-lifecycle run, or a custom
+    loop) must restore into the carry-bearing TrainState with a cold carry —
+    zero-fill is gated to the .carry prefix; missing params still raise."""
+    cfg = _tiny_deq_cfg()
+    tcfg = TrainConfig(steps=1, global_batch=2, seq_len=8, lr=1e-3,
+                       zero1=False, seed=0)
+    state = steps.init_train_state(cfg, tcfg, CTX)
+    legacy = steps.TrainState(state.step, state.params, state.opt)  # no carry
+    mgr = CheckpointManager(str(tmp_path), keep=1, async_save=False)
+    mgr.save(5, legacy)
+
+    template = jax.eval_shape(lambda: steps.init_train_state(cfg, tcfg, CTX))
+    with pytest.raises(KeyError):
+        mgr.restore(template)  # not opted in -> loud failure
+    _, restored, _ = mgr.restore(template, fill_missing_prefixes=(".carry",))
+    assert not bool(np.asarray(restored.carry.warm).any())
+    assert int(np.asarray(restored.carry.lowrank.count).max()) == 0
+    a = jax.tree_util.tree_leaves(state.params)[0]
+    b = jax.tree_util.tree_leaves(restored.params)[0]
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32))
+
+
+def test_train_fresh_batch_default_resets_chain_not_iterate():
+    """deq_carry="state" (the default): the chain is rebuilt each step, the
+    iterate still warm-starts — so age advances while count restarts."""
+    cfg = _tiny_deq_cfg()
+    tcfg = TrainConfig(steps=2, global_batch=2, seq_len=8, lr=1e-3,
+                       zero1=False, seed=0)
+    assert tcfg.deq_carry == "state"
+    fn = jax.jit(steps.build_train_step(cfg, tcfg, CTX))
+    state = steps.init_train_state(cfg, tcfg, CTX)
+    toks = jax.random.randint(jax.random.PRNGKey(0), (2, 9), 0, 128)
+    batch = {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+    state, _ = fn(state, batch)
+    count_1 = np.asarray(state.carry.lowrank.count).copy()
+    state, _ = fn(state, batch)
+    # chain rebuilt per step: count does NOT accumulate across steps
+    assert (np.asarray(state.carry.lowrank.count) <= count_1.max()).all()
+    assert bool((np.asarray(state.carry.age) == 2).all())
+    # "off" disables the carry entirely
+    tcfg_off = dataclasses.replace(tcfg, deq_carry="off")
+    assert steps.init_train_state(cfg, tcfg_off, CTX).carry is None
+    with pytest.raises(ValueError):
+        steps.train_carry_enabled(cfg, dataclasses.replace(
+            tcfg, deq_carry="bogus"))
+
+
+def test_write_carry_rows_batched_scatter():
+    dst = init_solve_carry(4, 6, 3)
+    src = dataclasses.replace(
+        init_solve_carry(3, 6, 3),
+        z=jnp.arange(18, dtype=jnp.float32).reshape(3, 6),
+        warm=jnp.ones((3,), bool),
+        age=jnp.array([1, 2, 3], jnp.int32))
+    out = write_carry_rows(dst, src, slots=(3, 0), rows=(2, 1))
+    assert int(out.age[3]) == 3 and int(out.age[0]) == 2
+    np.testing.assert_array_equal(np.asarray(out.z[3]), np.asarray(src.z[2]))
+    assert int(out.age[1]) == 0 and int(out.age[2]) == 0
+
+
+def test_train_state_structs_include_carry():
+    cfg = _tiny_deq_cfg()
+    tcfg = TrainConfig(global_batch=2, seq_len=8, zero1=False)
+    struct = steps.train_state_structs(cfg, tcfg, CTX)
+    state = steps.init_train_state(cfg, tcfg, CTX)
+    s_leaves = jax.tree_util.tree_leaves(struct)
+    r_leaves = jax.tree_util.tree_leaves(state)
+    assert len(s_leaves) == len(r_leaves)
+    for s, r in zip(s_leaves, r_leaves):
+        assert tuple(s.shape) == tuple(r.shape), (s, r.shape)
+        assert s.dtype == r.dtype
+    # accumulation disables the carry (microbatches slice the batch axis)
+    tcfg2 = TrainConfig(global_batch=4, seq_len=8, zero1=False, grad_accum=2)
+    assert steps.train_state_structs(cfg, tcfg2, CTX).carry is None
+    assert steps.init_train_state(cfg, tcfg2, CTX).carry is None
+
+
+# ---------------------------------------------------------------------------
+# decode: token-to-token reuse at the model level
+# ---------------------------------------------------------------------------
+
+
+def test_decode_carry_threads_token_to_token():
+    cfg = _tiny_deq_cfg()
+    cfg = dataclasses.replace(
+        cfg, dtype="float32",
+        deq=dataclasses.replace(cfg.deq, max_steps=30, tol=1e-5, memory=16))
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    params = jax.tree_util.tree_map(
+        lambda a: a * 0.1 if jnp.issubdtype(a.dtype, jnp.floating) else a,
+        params)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, 128)
+    carry = lm.deq_solve_carry(cfg, 2, 1)
+    logits, caches, lens, carry = lm.prefill(
+        params, {"tokens": toks[:, :4]}, cfg, CTX, 16, carry=carry)
+    assert bool(carry.warm.all()) and int(carry.age.max()) == 0
+    for t in range(4, 6):
+        logits, caches, carry = lm.decode_step(
+            params, caches, toks[:, t], lens, cfg, CTX, carry=carry)
+        lens = lens + 1
+    assert bool((carry.age == 2).all())
+    assert int(carry.lowrank.count.min()) > 0
+
+
+@pytest.mark.parametrize("family", ["deq"])
+def test_serve_loop_uses_carry_and_evicts_on_recycle(family):
+    from repro.runtime.serving import Request, ServeLoop
+
+    cfg = _tiny_deq_cfg()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    loop = ServeLoop(params, cfg, CTX, slots=2, max_len=64, eos_id=-1)
+    assert loop.carries is not None
+    reqs = [Request(uid=i, prompt=[3, 5, 7 + i], max_new_tokens=4)
+            for i in range(4)]
+    loop.drain(reqs)
+    assert all(len(r.out) == 4 for r in reqs)
+    # 4 requests through 2 slots: initial leases + recycles + releases
+    assert loop.carries.evictions >= 4
+    # determinism with the carry path on
+    loop2 = ServeLoop(params, cfg, CTX, slots=2, max_len=64, eos_id=-1)
+    reqs2 = [Request(uid=i, prompt=[3, 5, 7 + i], max_new_tokens=4)
+             for i in range(4)]
+    loop2.drain(reqs2)
+    for a, b in zip(reqs, reqs2):
+        assert a.out == b.out

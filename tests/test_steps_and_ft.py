@@ -5,7 +5,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import TrainConfig
@@ -71,11 +70,6 @@ def test_flash_xla_property_random_shapes(b, sq, tk, hkv, causal):
                                rtol=1e-4, atol=1e-4)
 
 
-@pytest.mark.xfail(
-    strict=False,
-    reason="pre-existing seed failure (fails on the seed code too once "
-           "collection is fixed) — see the PR 1 baseline note in CHANGES.md",
-)
 def test_deq_prefill_decode_consistency():
     """The paper's technique in SERVING form: DEQ prefill + decode matches
     the DEQ full forward.
@@ -84,11 +78,17 @@ def test_deq_prefill_decode_consistency():
     token S against the frozen prefix cache has the SAME fixed point as the
     joint solve — but only where the solves actually converge. A random-init
     DEQ is not contractive (paper E.3), so we scale the weights into the
-    contractive regime first and assert the solver really converged."""
+    contractive regime first and assert the solver really converged.  f32:
+    the 1e-6 tolerance sits below the bf16 quantization floor.
+
+    The decode step reuses the solve state seeded by prefill (the last
+    prompt token's equilibrium warm-starts token S — the decode-carry
+    lifecycle), which both accelerates the solve and keeps it in the same
+    basin as the joint reference."""
     cfg = smoke_config("minicpm-2b", deq=True)
     cfg = dataclasses.replace(
-        cfg, deq=dataclasses.replace(cfg.deq, max_steps=40, tol=1e-6,
-                                     memory=40))
+        cfg, dtype="float32",
+        deq=dataclasses.replace(cfg.deq, max_steps=40, tol=1e-6, memory=40))
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     params = jax.tree_util.tree_map(
         lambda a: a * 0.1 if jnp.issubdtype(a.dtype, jnp.floating) else a,
@@ -99,9 +99,17 @@ def test_deq_prefill_decode_consistency():
     logits_full, aux = lm.forward(params, {"tokens": toks}, cfg, CTX,
                                   train=False)
     assert float(aux["deq_residual"]) < 1e-3, "joint solve must converge"
-    logits_pre, caches, lens = lm.prefill(
-        params, {"tokens": toks[:, :S]}, cfg, CTX, 16)
-    logits_dec, _ = lm.decode_step(params, caches, toks[:, S], lens, cfg, CTX)
+    assert float(aux["deq_steps"]) < cfg.deq.max_steps, \
+        "joint solve must converge before exhausting its budget"
+    carry = lm.deq_solve_carry(cfg, B, 1)
+    logits_pre, caches, lens, carry = lm.prefill(
+        params, {"tokens": toks[:, :S]}, cfg, CTX, 16, carry=carry)
+    assert bool(carry.warm.all()), "prefill must seed the decode carry"
+    logits_dec, _, carry = lm.decode_step(params, caches, toks[:, S], lens,
+                                          cfg, CTX, carry=carry)
     np.testing.assert_allclose(
         np.asarray(logits_dec, np.float32),
         np.asarray(logits_full[:, S], np.float32), rtol=2e-2, atol=2e-3)
+    # the carry advanced: one warm decode solve consumed and re-seeded it
+    assert int(carry.age[0]) == 1
+    assert int(carry.lowrank.count[0]) > 0
