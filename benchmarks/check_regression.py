@@ -29,6 +29,18 @@ fails (exit 1) when, for any (op, shape, impl) row present in the baseline:
 ``--fresh PATH`` compares a pre-measured record instead of re-running;
 ``--update-baseline`` rewrites the committed baseline from the fresh
 measurement (use after an intentional perf change, and commit the diff).
+
+The live-measurement mode (no ``--fresh``) additionally runs the
+**observability-overhead gate**: the same jitted implicit solve+grad is
+compiled with the obs bridge off and on (fresh jit closures each mode —
+the gates are trace-time), timed in interleaved off/on pairs, and the
+cleanest pairwise delta must keep the instrumented wall within
+``--obs-ratio`` (default 1.05) of the uninstrumented one plus a small
+absolute slack.  Real instrumentation cost is present in EVERY call so
+the min pair still sees it, while a host contention burst would have to
+contaminate every pair to fake a failure.  This keeps "telemetry is
+~free" an enforced invariant, not a hope.  ``--skip-obs-overhead``
+disables it; ``--obs-overhead`` runs ONLY it.
 """
 
 from __future__ import annotations
@@ -130,6 +142,97 @@ def compare(base: list[dict], fresh: list[dict], *, wall_ratio: float,
     return 1 if bad else 0
 
 
+def measure_obs_overhead(reps: int = 5) -> dict:
+    """Paired wall times of one jitted implicit solve+grad, obs off vs on.
+
+    The work is pinned (tol=0 -> the forward always runs max_steps, the
+    backward budget is fixed), so the only delta between the two modes is
+    the instrumentation itself: the debug-callback bridge planted by
+    ``record_solve``/``record_backward`` and the ``phase_done`` trace
+    marks.  Fresh jit closures per mode — the gates are trace-time."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.implicit import (BackwardConfig, ForwardConfig, ImplicitConfig,
+                                implicit_fixed_point)
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import tracing as obs_tracing
+
+    # The instrumentation cost is a FIXED per-solve-call amount (a handful
+    # of host callbacks: solve record, backward record, phase marks —
+    # ~3-4 ms of host Python on this class of machine), independent of the
+    # solve size.  Size the probe like a real train step (~100 ms+), where
+    # that fixed cost is the same <5% it is in production; a tiny probe
+    # would gate the callback dispatch constant, not the ratio.
+    B, D = 8, 2048
+    cfg = ImplicitConfig(
+        forward=ForwardConfig(max_steps=30, tol=0.0),
+        backward=BackwardConfig(estimator="shine"),
+        memory=8,
+    )
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(rng.normal(size=(D, D)) / (2 * np.sqrt(D)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(B, D)), jnp.float32)
+
+    def f(params, xx, z):
+        return jnp.tanh(xx + z @ params)
+
+    def compiled(enable: bool):
+        # the gates are trace-time: the enabled state at COMPILE decides
+        # whether the program carries callbacks, regardless of later flips
+        obs_metrics.set_enabled(enable)
+        obs_tracing.set_enabled(enable)
+
+        def loss(params, xx):
+            z, _ = implicit_fixed_point(f, params, xx, jnp.zeros_like(xx), cfg)
+            return jnp.sum(z * z)
+
+        g = jax.jit(jax.grad(loss))
+        jax.block_until_ready(g(W, x))  # compile outside the timing
+        return g
+
+    def once(g) -> float:
+        t0 = time.perf_counter()
+        jax.block_until_ready(g(W, x))
+        return (time.perf_counter() - t0) * 1e3
+
+    was_m, was_t = obs_metrics.enabled(), obs_tracing.enabled()
+    try:
+        g_off = compiled(False)
+        g_on = compiled(True)
+        for _ in range(2):  # warm both past first-call effects
+            once(g_off), once(g_on)
+        # interleaved PAIRS, gated on the cleanest pair: real overhead is
+        # present in every call, so the min pairwise delta still sees it,
+        # while a contention burst has to contaminate every single pair
+        # to fake a failure
+        offs, deltas = [], []
+        for _ in range(reps):
+            off = once(g_off)
+            on = once(g_on)
+            offs.append(off)
+            deltas.append(on - off)
+    finally:
+        obs_metrics.set_enabled(was_m)
+        obs_tracing.set_enabled(was_t)
+    base = min(offs)
+    return {"baseline_ms": base,
+            "instrumented_ms": base + max(min(deltas), 0.0)}
+
+
+def check_obs_overhead(*, ratio: float, slack_ms: float, reps: int) -> int:
+    m = measure_obs_overhead(reps=reps)
+    limit = ratio * m["baseline_ms"] + slack_ms
+    ok = m["instrumented_ms"] <= limit
+    print(f"obs-overhead: uninstrumented {m['baseline_ms']:.2f}ms, "
+          f"instrumented {m['instrumented_ms']:.2f}ms, limit {limit:.2f}ms "
+          f"({ratio}x + {slack_ms}ms) -> {'ok' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", type=Path, default=BASELINE)
@@ -139,7 +242,19 @@ def main() -> int:
     ap.add_argument("--wall-ratio", type=float, default=1.3)
     ap.add_argument("--wall-slack-ms", type=float, default=0.25)
     ap.add_argument("--update-baseline", action="store_true")
+    ap.add_argument("--obs-overhead", action="store_true",
+                    help="run ONLY the observability-overhead gate")
+    ap.add_argument("--skip-obs-overhead", action="store_true",
+                    help="skip the overhead gate in live-measurement mode")
+    ap.add_argument("--obs-ratio", type=float, default=1.05)
+    ap.add_argument("--obs-slack-ms", type=float, default=2.0)
+    ap.add_argument("--obs-reps", type=int, default=5)
     args = ap.parse_args()
+
+    if args.obs_overhead:
+        return check_obs_overhead(ratio=args.obs_ratio,
+                                  slack_ms=args.obs_slack_ms,
+                                  reps=args.obs_reps)
 
     if not args.baseline.exists():
         print(f"check_regression: baseline {args.baseline} missing -> FAIL "
@@ -148,7 +263,8 @@ def main() -> int:
         return 1
     base = json.loads(args.baseline.read_text())
 
-    if args.fresh is not None:
+    live = args.fresh is None
+    if not live:
         fresh = json.loads(args.fresh.read_text())
     else:
         fresh = measure()
@@ -161,8 +277,13 @@ def main() -> int:
         print(f"# baseline {args.baseline} updated — commit the diff")
         return 0
 
-    return compare(base, fresh, wall_ratio=args.wall_ratio,
-                   wall_slack_ms=args.wall_slack_ms)
+    bad = compare(base, fresh, wall_ratio=args.wall_ratio,
+                  wall_slack_ms=args.wall_slack_ms)
+    if live and not args.skip_obs_overhead:
+        bad |= check_obs_overhead(ratio=args.obs_ratio,
+                                  slack_ms=args.obs_slack_ms,
+                                  reps=args.obs_reps)
+    return bad
 
 
 if __name__ == "__main__":

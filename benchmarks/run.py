@@ -103,6 +103,21 @@ def _write_bench_kernels(rows: list[dict]) -> None:
     path.write_text(json.dumps(out, indent=2))
     print(f"# wrote {path} ({len(out)} rows)")
 
+    # mirror the record onto the metrics registry and snapshot it: one
+    # schema (repro.obs.metrics/v1) for bench rows, train telemetry and
+    # serving counters alike
+    from repro.obs import metrics as obs_metrics
+
+    reg = obs_metrics.default_registry()
+    for r in out:
+        labels = {"op": r["op"], "shape": r["shape"], "impl": r["impl"]}
+        for field in ("wall_ms", "bytes_moved", "n_iters"):
+            if r.get(field) is not None:
+                reg.gauge(f"bench_{field}", labels).set(float(r[field]))
+    mpath = Path("results/benchmarks/BENCH_metrics.json")
+    reg.write_json(str(mpath))
+    print(f"# wrote {mpath}")
+
 
 if __name__ == "__main__":
     main()

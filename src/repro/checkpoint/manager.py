@@ -27,6 +27,8 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+
 Pytree = Any
 
 
@@ -44,10 +46,18 @@ def _flatten(tree: Pytree) -> dict[str, np.ndarray]:
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, *, keep: int = 3, async_save: bool = True):
+    def __init__(self, directory: str, *, keep: int = 3, async_save: bool = True,
+                 omit_prefixes: tuple[str, ...] = ()):
+        """``omit_prefixes``: checkpoint-lean mode — leaves whose key path
+        starts with one of these prefixes are NOT written (e.g. the
+        ``.carry.lowrank.u``/``.carry.lowrank.v`` quasi-Newton ring, the
+        dominant bytes of a DEQ TrainState).  Restore with a matching
+        ``fill_missing_prefixes`` zero-fills them; bytes saved per save
+        land in the ``checkpoint_bytes_omitted`` metric."""
         self.dir = directory
         self.keep = keep
         self.async_save = async_save
+        self.omit_prefixes = tuple(omit_prefixes)
         self._thread: threading.Thread | None = None
         os.makedirs(directory, exist_ok=True)
 
@@ -56,12 +66,23 @@ class CheckpointManager:
     def save(self, step: int, state: Pytree, extra: dict | None = None) -> None:
         self.wait()
         arrays = _flatten(state)
+        omitted_bytes = 0
+        if self.omit_prefixes:
+            omit = {k for k in arrays
+                    if any(k.startswith(p) for p in self.omit_prefixes)}
+            omitted_bytes = sum(arrays[k].nbytes for k in omit)
+            arrays = {k: v for k, v in arrays.items() if k not in omit}
+            reg = obs_metrics.default_registry()
+            reg.counter("checkpoint_bytes_omitted").inc(omitted_bytes)
+            reg.counter("checkpoint_leaves_omitted").inc(len(omit))
         treedef = jax.tree_util.tree_structure(state)
         manifest = {
             "step": step,
             "time": time.time(),
             "treedef": str(treedef),
             "keys": sorted(arrays.keys()),
+            "omitted": {"prefixes": list(self.omit_prefixes),
+                        "bytes": omitted_bytes},
             "extra": extra or {},
         }
 

@@ -236,3 +236,10 @@ class TrainConfig:
     #             full-batch training, fine-tuning on a small set);
     #   "off"   — cold-start every step.
     deq_carry: str = "state"
+    # checkpoint-lean mode: omit the (m, B, S, d) u/v quasi-Newton carry
+    # ring from saves — the dominant checkpoint bytes for DEQ models.
+    # Restore zero-fills the missing leaves; a zeroed ring with a nonzero
+    # count is mathematically the identity inverse, so resumed runs
+    # warm-start from the iterate alone (== deq_carry="state" behaviour
+    # for the first post-restore step).
+    checkpoint_lean: bool = False

@@ -32,6 +32,8 @@ import numpy as np
 from repro.core.solvers import LBFGSMemory, SolverConfig, lbfgs_solve
 from repro.implicit import ESTIMATORS, estimate_hypergrad_cotangent
 from repro.implicit.config import BackwardConfig, ImplicitConfig
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracing as obs_tracing
 
 Array = jax.Array
 
@@ -215,17 +217,28 @@ def run_hoag(
     )
 
     cold_mem = mem
+    reg = obs_metrics.default_registry()
     for k in range(cfg.outer_steps):
-        res = solve_at(z, log_theta, mem if cfg.warm_start else cold_mem, tol)
-        z = res.z
-        mem = res.memory
-        theta = jnp.exp(log_theta)
-        hg, hvp_calls = hyper_jit(theta, z, mem)
-        # chain rule through theta = exp(log_theta)
-        g_log = hg * theta
-        log_theta = log_theta - lr * jnp.clip(g_log, -5.0, 5.0)
-        tol = max(tol * cfg.tol_decrease, 1e-12)
+        with obs_tracing.span("hoag_outer", step=k, mode=cfg.mode):
+            with obs_tracing.span("inner_solve", step=k, tol=float(tol)):
+                res = solve_at(
+                    z, log_theta, mem if cfg.warm_start else cold_mem, tol
+                )
+                z = jax.block_until_ready(res.z)
+            mem = res.memory
+            theta = jnp.exp(log_theta)
+            with obs_tracing.span("hypergradient", step=k):
+                hg, hvp_calls = hyper_jit(theta, z, mem)
+                hg = jax.block_until_ready(hg)
+            # chain rule through theta = exp(log_theta)
+            g_log = hg * theta
+            log_theta = log_theta - lr * jnp.clip(g_log, -5.0, 5.0)
+            tol = max(tol * cfg.tol_decrease, 1e-12)
 
+        lbl = {"mode": cfg.mode}
+        reg.counter("hoag_outer_total", lbl).inc()
+        reg.counter("hoag_inner_iters_total", lbl).inc(int(res.n_steps))
+        reg.counter("hoag_hvp_calls_total", lbl).inc(int(hvp_calls))
         rec = OuterRecord(
             step=k,
             wall_time=time.perf_counter() - t0,
@@ -235,6 +248,8 @@ def run_hoag(
             inner_steps=int(res.n_steps),
             backward_hvp_calls=int(hvp_calls),
         )
+        reg.gauge("hoag_val_loss", lbl).set(rec.val_loss)
+        reg.gauge("hoag_theta", lbl).set(rec.theta)
         history.append(rec)
         if verbose:
             print(

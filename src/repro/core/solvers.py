@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.lowrank import LowRank, _expand, bdot, bnorm
+from repro.obs.tape import SolveTape, empty_tape, tape_record
 
 Array = jax.Array
 
@@ -261,6 +262,10 @@ class SolveResult(NamedTuple):
     # updated persistent state for the next solve; None unless the caller
     # passed a carry in (structure in == structure out)
     carry: SolveCarry | None = None
+    # (max_steps, B) per-iteration convergence telemetry (repro.obs.tape):
+    # residual norm, step size, qN-ring occupancy. Rides the solver loop
+    # state; frozen samples' rows keep their init values bit-for-bit.
+    tape: SolveTape | None = None
 
 
 def _entry_frozen(freeze_mask: Array | None, bsz: int) -> Array:
@@ -337,13 +342,14 @@ def broyden_solve(
     Hg0 = sh.state(H0.matvec(g0.astype(jnp.float32)))
 
     trace0 = jnp.full((max(cfg.max_steps, 1), bsz), jnp.inf, jnp.float32)
+    tape0 = empty_tape(cfg.max_steps, bsz)
 
     def cond(state):
-        k, _, _, _, _, conv, _, _, _ = state
+        k, _, _, _, _, conv, _, _, _, _ = state
         return (k < cfg.max_steps) & ~jnp.all(conv)
 
     def body(state):
-        k, z, gz, H, Hg, conv, best_z, best_res, trace = state
+        k, z, gz, H, Hg, conv, best_z, best_res, trace, tape = state
         p = -Hg
         active = ~conv
         am = _expand(active, z)
@@ -380,26 +386,28 @@ def broyden_solve(
         best_res = jnp.minimum(res, best_res)
         conv = conv | (res < thresh)
         trace = trace.at[k].set(jnp.where(active, res, trace[k]))
-        return (k + 1, z_new, gz_new, H, Hg, conv, best_z, best_res, trace)
+        tape = tape_record(tape, k, active, res, bnorm(s), H.count)
+        return (k + 1, z_new, gz_new, H, Hg, conv, best_z, best_res, trace,
+                tape)
 
     conv0 = res0 < thresh
     if freeze_mask is not None:
         conv0 = conv0 | freeze_mask
     state0 = (
         jnp.int32(0), z0, g0, H0, Hg0,
-        conv0, z0, res0, trace0,
+        conv0, z0, res0, trace0, tape0,
     )
     if cfg.unroll:
         state = state0
         for _ in range(cfg.max_steps):
             state = body(state)
-        k, z, gz, H, _Hg, conv, best_z, best_res, trace = state
+        k, z, gz, H, _Hg, conv, best_z, best_res, trace, tape = state
     else:
-        k, z, gz, H, _Hg, conv, best_z, best_res, trace = jax.lax.while_loop(
-            cond, body, state0
-        )
+        (k, z, gz, H, _Hg, conv, best_z, best_res, trace,
+         tape) = jax.lax.while_loop(cond, body, state0)
     carry_out = _carry_out(carry, best_z, H, _entry_frozen(freeze_mask, bsz))
-    return SolveResult(best_z, H, best_res, k, conv, trace, {}, carry_out)
+    return SolveResult(best_z, H, best_res, k, conv, trace, {}, carry_out,
+                       tape)
 
 
 # ---------------------------------------------------------------------------
@@ -432,35 +440,39 @@ def fixed_point_solve(
     res0 = bnorm(f(z0) - z0)
     thresh = _stop_threshold(res0, bnorm(z0), cfg)
     trace0 = jnp.full((max(cfg.max_steps, 1), bsz), jnp.inf, jnp.float32)
+    tape0 = empty_tape(cfg.max_steps, bsz)
+    no_qn = jnp.zeros((bsz,), jnp.int32)  # Picard keeps no qN chain
 
     def cond(state):
-        k, _, conv, _, _ = state
+        k, _, conv, _, _, _ = state
         return (k < cfg.max_steps) & ~jnp.all(conv)
 
     def body(state):
-        k, z, conv, best_res, trace = state
+        k, z, conv, best_res, trace, tape = state
         fz = f(z)
         z_new = sh.state(
             jnp.where(_expand(conv, z), z, (1 - damping) * z + damping * fz))
         res = bnorm(fz - z)
         trace = trace.at[k].set(jnp.where(conv, trace[k], res))
+        tape = tape_record(tape, k, ~conv, res, bnorm(z_new - z), no_qn)
         best_res = jnp.minimum(best_res, res)
         conv = conv | (res < thresh)
-        return (k + 1, z_new, conv, best_res, trace)
+        return (k + 1, z_new, conv, best_res, trace, tape)
 
     conv0 = res0 < thresh
     if freeze_mask is not None:
         conv0 = conv0 | freeze_mask
-    state0 = (jnp.int32(0), z0, conv0, res0, trace0)
+    state0 = (jnp.int32(0), z0, conv0, res0, trace0, tape0)
     if cfg.unroll:
         state = state0
         for _ in range(cfg.max_steps):
             state = body(state)
-        k, z, conv, best_res, trace = state
+        k, z, conv, best_res, trace, tape = state
     else:
-        k, z, conv, best_res, trace = jax.lax.while_loop(cond, body, state0)
+        k, z, conv, best_res, trace, tape = jax.lax.while_loop(
+            cond, body, state0)
     carry_out = _carry_out(carry, z, None, _entry_frozen(freeze_mask, bsz))
-    return SolveResult(z, H, best_res, k, conv, trace, {}, carry_out)
+    return SolveResult(z, H, best_res, k, conv, trace, {}, carry_out, tape)
 
 
 def anderson_solve(
@@ -494,12 +506,14 @@ def anderson_solve(
     Z = sh.memory(jnp.zeros((m, bsz) + feat, z0.dtype))   # iterate history
     F = sh.memory(jnp.zeros((m, bsz) + feat, z0.dtype))   # residual history
 
+    tape0 = empty_tape(cfg.max_steps, bsz)
+
     def cond(state):
-        k, *_, conv, _ = state
+        k, *_, conv, _t, _tp = state
         return (k < cfg.max_steps) & ~jnp.all(conv)
 
     def body(state):
-        k, z, Z, F, conv, trace = state
+        k, z, Z, F, conv, trace, tape = state
         fz = f(z)
         r = fz - z
         slot = k % m
@@ -520,18 +534,22 @@ def anderson_solve(
             jnp.where(_expand(conv, z), z, (1 - mixing) * z + mixing * z_and))
         res = bnorm(r)
         trace = trace.at[k].set(jnp.where(conv, trace[k], res))
+        # qn_count reports the Anderson window fill (per-sample once live)
+        tape = tape_record(tape, k, ~conv, res, bnorm(z_new - z),
+                           jnp.broadcast_to(nk, (bsz,)))
         conv = conv | (res < thresh)
-        return (k + 1, z_new, Z, F, conv, trace)
+        return (k + 1, z_new, Z, F, conv, trace, tape)
 
     conv0 = res0 < thresh
     if freeze_mask is not None:
         conv0 = conv0 | freeze_mask
-    k, z, Z, F, conv, trace = jax.lax.while_loop(
-        cond, body, (jnp.int32(0), z0, Z, F, conv0, trace0)
+    k, z, Z, F, conv, trace, tape = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), z0, Z, F, conv0, trace0, tape0)
     )
     H = LowRank.identity(bsz, 1, 1, alpha=1.0)
     carry_out = _carry_out(carry, z, None, _entry_frozen(freeze_mask, bsz))
-    return SolveResult(z, H, bnorm(f(z) - z), k, conv, trace, {}, carry_out)
+    return SolveResult(z, H, bnorm(f(z) - z), k, conv, trace, {}, carry_out,
+                       tape)
 
 
 # ---------------------------------------------------------------------------
@@ -578,6 +596,7 @@ def adjoint_broyden_solve(
     res0 = bnorm(g0)
     thresh = _stop_threshold(res0, bnorm(z0), cfg)
     trace0 = jnp.full((max(cfg.max_steps, 1), bsz), jnp.inf, jnp.float32)
+    tape0 = empty_tape(cfg.max_steps, bsz)
 
     def update_chains(B, H, z_new, sigma, active):
         # sigma^T J at z_new via VJP; sigma^T B via the B-chain (rmatvec).
@@ -598,11 +617,11 @@ def adjoint_broyden_solve(
         return B, H
 
     def cond(state):
-        k, *_rest, conv, _t = state
+        k, *_rest, conv, _t, _tp = state
         return (k < cfg.max_steps) & ~jnp.all(conv)
 
     def body(state):
-        k, z, gz, B, H, conv, trace = state
+        k, z, gz, B, H, conv, trace, tape = state
         active = ~conv
         am = _expand(active, z)
         p = -H.matvec(gz.astype(jnp.float32))
@@ -628,16 +647,18 @@ def adjoint_broyden_solve(
 
         res = bnorm(gz_new)
         trace = trace.at[k].set(jnp.where(active, res, trace[k]))
+        tape = tape_record(tape, k, active, res, bnorm(z_new - z), H2.count)
         conv = conv | (res < thresh)
-        return (k + 1, z_new, gz_new, B2, H2, conv, trace)
+        return (k + 1, z_new, gz_new, B2, H2, conv, trace, tape)
 
     conv0 = res0 < thresh
     if freeze_mask is not None:
         conv0 = conv0 | freeze_mask
-    state0 = (jnp.int32(0), z0, g0, B, H, conv0, trace0)
-    k, z, gz, B, H, conv, trace = jax.lax.while_loop(cond, body, state0)
+    state0 = (jnp.int32(0), z0, g0, B, H, conv0, trace0, tape0)
+    k, z, gz, B, H, conv, trace, tape = jax.lax.while_loop(cond, body, state0)
     carry_out = _carry_out(carry, z, H, _entry_frozen(freeze_mask, bsz))
-    return SolveResult(z, H, bnorm(gz), k, conv, trace, {"B": B}, carry_out)
+    return SolveResult(z, H, bnorm(gz), k, conv, trace, {"B": B}, carry_out,
+                       tape)
 
 
 # ---------------------------------------------------------------------------
@@ -727,6 +748,8 @@ class LBFGSResult(NamedTuple):
     n_steps: Array
     converged: Array
     trace: Array
+    # (max_steps,) scalar-problem convergence tape (repro.obs.tape)
+    tape: SolveTape | None = None
 
 
 def lbfgs_solve(
@@ -771,9 +794,10 @@ def lbfgs_solve(
     g0 = grad_fn(z0)
     gn0 = jnp.linalg.norm(g0)
     trace0 = jnp.full((max(cfg.max_steps, 1),), jnp.inf, jnp.float32)
+    tape0 = empty_tape(cfg.max_steps, batch=None)
 
     def cond(state):
-        k, _, _, _, _, done, _ = state
+        k, _, _, _, _, done, _, _ = state
         return (k < cfg.max_steps) & ~done
 
     def line_search(z, p, gz, fz):
@@ -794,7 +818,7 @@ def lbfgs_solve(
         return alpha
 
     def body(state):
-        k, z, gz, mem, t_prev, done, trace = state
+        k, z, gz, mem, t_prev, done, trace, tape = state
         gamma = _lbfgs_gamma(mem)
         p = -lbfgs_two_loop(mem, gz, gamma)
         if value_fn is not None:
@@ -821,13 +845,17 @@ def lbfgs_solve(
 
         gn = jnp.linalg.norm(g_new)
         trace = trace.at[k].set(gn)
+        tape = tape_record(tape, k, jnp.bool_(True), gn, jnp.linalg.norm(s),
+                           jnp.minimum(mem.count, m))
         done = gn < cfg.tol
-        return (k + 1, z_new, g_new, mem, jnp.linalg.norm(s), done, trace)
+        return (k + 1, z_new, g_new, mem, jnp.linalg.norm(s), done, trace,
+                tape)
 
     state0 = (jnp.int32(0), z0.astype(jnp.float32), g0.astype(jnp.float32),
-              mem0, jnp.float32(cfg.opa_t0), gn0 < cfg.tol, trace0)
-    k, z, gz, mem, _, done, trace = jax.lax.while_loop(cond, body, state0)
-    return LBFGSResult(z, mem, jnp.linalg.norm(gz), k, done, trace)
+              mem0, jnp.float32(cfg.opa_t0), gn0 < cfg.tol, trace0, tape0)
+    k, z, gz, mem, _, done, trace, tape = jax.lax.while_loop(
+        cond, body, state0)
+    return LBFGSResult(z, mem, jnp.linalg.norm(gz), k, done, trace, tape)
 
 
 def _lbfgs_gamma(mem: LBFGSMemory) -> Array:

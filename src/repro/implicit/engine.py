@@ -38,6 +38,7 @@ from repro.core.solvers import SolveCarry, reset_carry_rows
 from repro.implicit.config import ImplicitConfig
 from repro.implicit.fixed_point import ImplicitStats, prepare_flat_problem
 from repro.implicit.registry import SOLVERS
+from repro.obs import metrics as obs_metrics
 
 # populate the registry on import (mirrors fixed_point.py)
 from repro.implicit import solvers as _builtin_solvers  # noqa: F401
@@ -116,7 +117,9 @@ def batched_solve(
         # padding/finished slots return their input state bit-for-bit
         mask = valid.reshape(valid.shape + (1,) * (z.ndim - 1))
         z = jnp.where(mask, z, z0_flat)
-    stats = ImplicitStats(res.residual, res.n_steps, res.converged, res.trace)
+    stats = ImplicitStats(res.residual, res.n_steps, res.converged, res.trace,
+                          res.tape)
+    obs_metrics.record_solve("serve", res, carry=carry)
     if carry is None:
         return unravel(z), stats
     return unravel(z), stats, res.carry
@@ -166,22 +169,43 @@ class CarryCache:
     ``release`` evicts explicitly when a request completes.  The batched
     carry itself is device data: pass ``.carry`` into the jitted solve and
     hand the updated pytree back via ``update``.
+
+    Staleness policy: ``max_age`` bounds how many solves a row may
+    accumulate before it is auto-reset to cold on the next ``update`` —
+    a long-lived request's carry drifts as its equilibrium moves token by
+    token, and past the bound a cold restart beats a stale chain.  ``None``
+    (the default) keeps the legacy purely ownership-driven eviction.
+
+    Every eviction increments ``evictions`` and a per-reason counter
+    (``evictions_by_reason`` plus the registry counter
+    ``carry_evictions_total{reason=ownership|release|stale}``).
     """
 
-    def __init__(self, make_cold: Callable[[], SolveCarry], slots: int):
+    def __init__(self, make_cold: Callable[[], SolveCarry], slots: int, *,
+                 max_age: int | None = None):
         self.slots = slots
+        self.max_age = max_age
         self._owner: list[Any] = [None] * slots
         self.carry: SolveCarry = make_cold()
         self.evictions = 0
+        self.evictions_by_reason = {"ownership": 0, "release": 0, "stale": 0}
         if self.carry.z.shape[0] != slots:
             raise ValueError(
                 f"cold carry has batch {self.carry.z.shape[0]} for "
                 f"{slots} slots")
+        if max_age is not None and max_age < 1:
+            raise ValueError(f"max_age must be >= 1, got {max_age}")
 
-    def _reset(self, slot: int) -> None:
+    def _count(self, reason: str, n: int = 1) -> None:
+        self.evictions += n
+        self.evictions_by_reason[reason] += n
+        obs_metrics.default_registry().counter(
+            "carry_evictions_total", {"reason": reason}).inc(n)
+
+    def _reset(self, slot: int, reason: str = "ownership") -> None:
         mask = jnp.arange(self.slots) == slot
         self.carry = reset_carry_rows(self.carry, mask)
-        self.evictions += 1
+        self._count(reason)
 
     def lease(self, slot: int, request_id: Any, *,
               reset: bool = True) -> None:
@@ -198,16 +222,30 @@ class CarryCache:
         if reset:
             self._reset(slot)
         else:
-            self.evictions += 1
+            self._count("ownership")
 
     def release(self, slot: int) -> None:
         """Request finished: free the slot and evict its carry."""
         self._owner[slot] = None
-        self._reset(slot)
+        self._reset(slot, reason="release")
 
     def owner(self, slot: int) -> Any:
         return self._owner[slot]
 
     def update(self, carry: SolveCarry) -> None:
-        """Adopt the post-solve carry returned by the jitted step."""
+        """Adopt the post-solve carry returned by the jitted step, then
+        apply the staleness policy: rows whose ``age`` exceeds ``max_age``
+        are reset to cold (warm flag cleared, ring count zeroed) so the
+        next solve for that slot cold-starts from its caller's ``z0``."""
         self.carry = carry
+        if self.max_age is None:
+            return
+        import numpy as np
+
+        # age is a small (slots,) vector; the host round-trip is trivial
+        # next to the solve that produced the carry
+        stale = np.asarray(carry.age) > self.max_age
+        n = int(stale.sum())
+        if n:
+            self.carry = reset_carry_rows(self.carry, jnp.asarray(stale))
+            self._count("stale", n)

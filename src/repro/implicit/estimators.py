@@ -53,6 +53,7 @@ from repro.core.solvers import (
     lbfgs_two_loop,
 )
 from repro.implicit.registry import ESTIMATORS, register_estimator
+from repro.obs import metrics as obs_metrics
 
 if TYPE_CHECKING:
     from repro.implicit.config import ImplicitConfig
@@ -232,6 +233,9 @@ def deq_context(
             u0=u0, init_lowrank=(H.transpose() if warm else None),
             sharding=sharding,
         )
+        # the refine/full adjoint solve gets the same per-iteration
+        # telemetry as the forward pass (phase-labelled "backward")
+        obs_metrics.record_solve("backward", res)
         return res.z, res.residual, res.n_steps
 
     return EstimatorContext(

@@ -30,6 +30,9 @@ from repro.implicit.config import ImplicitConfig
 from repro.implicit.estimators import estimate_cotangent
 from repro.implicit.pytree import ravel_state
 from repro.implicit.registry import SOLVERS
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracing as obs_tracing
+from repro.obs.tape import SolveTape
 
 # populate the registry with the built-in solvers on import
 from repro.implicit import solvers as _builtin_solvers  # noqa: F401
@@ -43,6 +46,9 @@ class ImplicitStats(NamedTuple):
     n_steps: Array     # () forward iterations
     converged: Array   # (B,)
     trace: Array       # (max_steps, B)
+    # full per-iteration convergence tape of the forward solve (residual,
+    # step size, qN occupancy); see repro.obs.tape
+    tape: SolveTape | None = None
 
 
 def solve_sharding(ctx, state_axes) -> SolveSharding | None:
@@ -128,7 +134,10 @@ def _implicit(f, cfg: ImplicitConfig, outer_grad, sharding, params, x, z0,
     res = _solve_forward(lambda z: f(params, x, z), z0, cfg,
                          _bind_outer(outer_grad, params, x), sharding,
                          carry=carry)
-    stats = ImplicitStats(res.residual, res.n_steps, res.converged, res.trace)
+    stats = ImplicitStats(res.residual, res.n_steps, res.converged, res.trace,
+                          res.tape)
+    obs_metrics.record_solve("forward", res, carry=carry)
+    obs_tracing.phase_done("forward_solve", res.n_steps)
     return res.z, stats, res.carry
 
 
@@ -141,7 +150,10 @@ def _implicit_fwd(f, cfg: ImplicitConfig, outer_grad, sharding, params, x, z0,
     res = _solve_forward(lambda z: f(params, x, z), z0, cfg,
                          _bind_outer(outer_grad, params, x), sharding,
                          carry=carry)
-    stats = ImplicitStats(res.residual, res.n_steps, res.converged, res.trace)
+    stats = ImplicitStats(res.residual, res.n_steps, res.converged, res.trace,
+                          res.tape)
+    obs_metrics.record_solve("forward", res, carry=carry)
+    obs_tracing.phase_done("forward_solve", res.n_steps)
     return (res.z, stats, res.carry), (params, x, res.z, res.lowrank,
                                        _shape_structs(carry))
 
@@ -156,6 +168,8 @@ def _implicit_bwd(f, cfg: ImplicitConfig, outer_grad, sharding, saved,
     vjp_z = lambda u: vjp(u.astype(z_star.dtype))[2]
 
     adj = estimate_cotangent(cfg, vjp_z, w, H, sharding=sharding)
+    obs_metrics.record_backward(cfg.backward.estimator, adj)
+    obs_tracing.phase_done("implicit_backward", adj.n_steps)
     p_bar, x_bar, _ = vjp(adj.u.astype(z_star.dtype))
     z0_bar = jnp.zeros_like(z_star)  # init point does not influence z*
     return p_bar, x_bar, z0_bar, _zeros_cotangent(carry)

@@ -55,6 +55,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.obs import metrics as obs_metrics
 from repro.kernels.flash_attention import (
     decode_attention_pallas,
     flash_attention_pallas,
@@ -105,6 +106,12 @@ class QNStreamStats:
     streaming model reads from U/V.  Counters increment when the op is
     TRACED: under ``lax.while_loop`` the body traces once, so after tracing
     a solver these are exact per-iteration costs.
+
+    Storage lives in the observability registry (``repro.obs.metrics``,
+    counters ``qn_stream_{calls,rhs,uv_bytes}``) so bench rows and metrics
+    snapshots share one source of truth; this dataclass is the legacy view
+    the bench harness reads.  Recording is unconditional (host-side,
+    trace-time — it costs nothing per executed iteration).
     """
 
     calls: int = 0
@@ -112,16 +119,19 @@ class QNStreamStats:
     uv_bytes: int = 0
 
 
-_QN_STATS = QNStreamStats()
+_QN_COUNTERS = ("qn_stream_calls", "qn_stream_rhs", "qn_stream_uv_bytes")
 
 
 def reset_qn_stream_stats() -> None:
-    global _QN_STATS
-    _QN_STATS = QNStreamStats()
+    reg = obs_metrics.default_registry()
+    for name in _QN_COUNTERS:
+        reg.counter(name).value = 0.0
 
 
 def qn_stream_stats() -> QNStreamStats:
-    return dataclasses.replace(_QN_STATS)
+    reg = obs_metrics.default_registry()
+    calls, rhs, uv_bytes = (int(reg.counter(n).value) for n in _QN_COUNTERS)
+    return QNStreamStats(calls=calls, rhs=rhs, uv_bytes=uv_bytes)
 
 
 def qn_stream_bytes(m: int, bsz: int, dim: int, itemsize: int,
@@ -141,10 +151,11 @@ def _record_stream(u: jax.Array, transpose: Sequence[bool]) -> None:
     dim = 1
     for f in u.shape[2:]:
         dim *= f
-    _QN_STATS.calls += 1
-    _QN_STATS.rhs += len(transpose)
-    _QN_STATS.uv_bytes += qn_stream_bytes(m, bsz, dim, u.dtype.itemsize,
-                                          transpose)
+    reg = obs_metrics.default_registry()
+    reg.counter("qn_stream_calls").inc()
+    reg.counter("qn_stream_rhs").inc(len(transpose))
+    reg.counter("qn_stream_uv_bytes").inc(
+        qn_stream_bytes(m, bsz, dim, u.dtype.itemsize, transpose))
 
 
 def _pad_memory_axis(u2, v2, mask):

@@ -32,6 +32,15 @@ def main() -> None:
     ap.add_argument("--force-devices", type=int, default=0,
                     help="forced host CPU device count (CPU multi-device "
                          "rehearsal; must be >= D*M)")
+    ap.add_argument("--carry-max-age", type=int, default=None,
+                    help="DEQ carry staleness bound: evict per-slot solve "
+                         "state older than this many solves")
+    ap.add_argument("--metrics-out", default="",
+                    help="write a metrics-registry JSON snapshot here after "
+                         "the drain (enables the jit metrics bridge)")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome-trace JSON of the drain here "
+                         "(enables span tracing)")
     args = ap.parse_args()
 
     if args.force_devices:
@@ -46,8 +55,16 @@ def main() -> None:
     from repro.configs.registry import ARCHS, smoke_config
     from repro.launch.mesh import make_test_mesh
     from repro.models import lm
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import tracing as obs_tracing
     from repro.parallel.sharding import DECODE_RULES, ShardCtx
     from repro.runtime.serving import Request, ServeLoop
+
+    # trace-time gates: enable before the loop's first jit trace
+    if args.metrics_out:
+        obs_metrics.set_enabled(True)
+    if args.trace_out:
+        obs_tracing.set_enabled(True)
 
     if args.arch not in ARCHS:
         raise SystemExit(f"unknown arch {args.arch!r}; have {sorted(ARCHS)}")
@@ -66,7 +83,8 @@ def main() -> None:
         ctx = ShardCtx.for_mesh(None)
     params = lm.init_params(cfg, jax.random.PRNGKey(args.seed))
 
-    loop = ServeLoop(params, cfg, ctx, slots=args.slots, max_len=args.max_len)
+    loop = ServeLoop(params, cfg, ctx, slots=args.slots, max_len=args.max_len,
+                     carry_max_age=args.carry_max_age)
     rng = np.random.default_rng(args.seed)
     reqs = [
         Request(uid=i,
@@ -82,6 +100,13 @@ def main() -> None:
           f"in {dt:.2f}s ({tokens/dt:.1f} tok/s)")
     for r in reqs[:4]:
         print(f"  req {r.uid}: prompt[{len(r.prompt)}] -> {r.out}")
+
+    if args.metrics_out:
+        obs_metrics.default_registry().write_json(args.metrics_out)
+        print(f"metrics snapshot -> {args.metrics_out}")
+    if args.trace_out:
+        obs_tracing.write(args.trace_out)
+        print(f"chrome trace -> {args.trace_out}")
 
 
 if __name__ == "__main__":

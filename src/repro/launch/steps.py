@@ -27,6 +27,7 @@ from repro.configs.base import ModelConfig, TrainConfig
 from repro.core.lowrank import LowRank
 from repro.core.solvers import SolveCarry, carry_state_only
 from repro.models import lm
+from repro.obs import tracing as obs_tracing
 from repro.optim.optimizers import (
     OptState,
     adamw_init,
@@ -267,6 +268,10 @@ def build_train_step(
         metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
         if isinstance(aux, dict):
             metrics.update({k: v for k, v in aux.items() if jnp.ndim(v) == 0})
+        # span-tracing phase mark: the optimizer phase closes when the new
+        # opt state is materialized (forward_solve / implicit_backward marks
+        # fire from inside the implicit fixed point)
+        obs_tracing.phase_done("optimizer", opt.step)
         return TrainState(state.step + 1, new_params, opt, new_carry), metrics
 
     return train_step

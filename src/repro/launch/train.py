@@ -19,6 +19,8 @@ from repro.configs.shapes import SHAPES, make_ctx
 from repro.data.pipeline import make_lm_batch_iterator
 from repro.implicit import ESTIMATORS, SOLVERS
 from repro.launch.mesh import make_production_mesh
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracing as obs_tracing
 from repro.parallel.sharding import ShardCtx
 from repro.runtime.trainer import Trainer
 
@@ -43,7 +45,23 @@ def main() -> None:
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--mesh", choices=("none", "single", "multi"), default="none")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-out", default="",
+                    help="write a metrics-registry JSON snapshot here after "
+                         "the run (enables the jit metrics bridge)")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome-trace JSON of the run here "
+                         "(enables span tracing)")
+    ap.add_argument("--checkpoint-lean", action="store_true",
+                    help="omit the u/v quasi-Newton carry ring from "
+                         "checkpoints (restore zero-fills it)")
     args = ap.parse_args()
+
+    # observability switches are trace-time gates: enable BEFORE the first
+    # jit trace so the compiled programs carry the instrumentation
+    if args.metrics_out:
+        obs_metrics.set_enabled(True)
+    if args.trace_out:
+        obs_tracing.set_enabled(True)
 
     cfg = smoke_config(args.arch, deq=args.deq) if args.smoke \
         else get_config(args.arch, deq=args.deq)
@@ -67,6 +85,7 @@ def main() -> None:
         schedule=cfg.schedule,
         checkpoint_dir=args.checkpoint_dir,
         checkpoint_every=args.checkpoint_every,
+        checkpoint_lean=args.checkpoint_lean,
         zero1=(ctx.mesh is not None),
     )
 
@@ -78,6 +97,13 @@ def main() -> None:
     state = trainer.run(batches, steps=args.steps)
     batches.close()
     print(f"finished at step {int(state.step)}")
+
+    if args.metrics_out:
+        obs_metrics.default_registry().write_json(args.metrics_out)
+        print(f"metrics snapshot -> {args.metrics_out}")
+    if args.trace_out:
+        obs_tracing.write(args.trace_out)
+        print(f"chrome trace -> {args.trace_out}")
 
 
 if __name__ == "__main__":

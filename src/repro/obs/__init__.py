@@ -1,0 +1,53 @@
+"""Unified observability: metrics registry, solver convergence tapes, and
+span tracing.
+
+Three pillars, each usable alone:
+
+  * :mod:`repro.obs.metrics` — process-local counters / gauges /
+    histograms / series with labels, JSON snapshots, and a jit-safe
+    bridge (``jax.debug.callback``) so values computed inside compiled
+    solves land in host metrics.
+  * :mod:`repro.obs.tape` — the fixed-size per-iteration
+    :class:`~repro.obs.tape.SolveTape` (residual norm, step size,
+    qN-ring occupancy) every solver threads through its loop state.
+  * :mod:`repro.obs.tracing` — timed spans emitting Chrome-trace /
+    Perfetto JSON, with ``phase_done`` marks for phases inside jit.
+
+The bridge and the tracer are gated at TRACE time: :func:`enable` before
+the first jitted call you want instrumented.  With both switches off
+(the default) compiled programs carry zero observability residue.
+"""
+
+from __future__ import annotations
+
+from repro.obs import metrics, tape, tracing
+from repro.obs.metrics import (MetricsRegistry, default_registry,
+                               emit_scalar, record_backward, record_solve)
+from repro.obs.tape import SolveTape, empty_tape, tape_record, tape_summary
+from repro.obs.tracing import TraceRecorder, default_recorder, phase_done, span
+
+__all__ = [
+    "metrics", "tape", "tracing",
+    "MetricsRegistry", "default_registry", "emit_scalar",
+    "record_solve", "record_backward",
+    "SolveTape", "empty_tape", "tape_record", "tape_summary",
+    "TraceRecorder", "default_recorder", "span", "phase_done",
+    "enable", "disable", "status",
+]
+
+
+def enable(*, metrics_on: bool = True, tracing_on: bool = True) -> None:
+    """Switch the jit bridge and/or the span tracer on (trace-time gates)."""
+    if metrics_on:
+        metrics.set_enabled(True)
+    if tracing_on:
+        tracing.set_enabled(True)
+
+
+def disable() -> None:
+    metrics.set_enabled(False)
+    tracing.set_enabled(False)
+
+
+def status() -> dict:
+    return {"metrics": metrics.enabled(), "tracing": tracing.enabled()}

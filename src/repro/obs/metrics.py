@@ -1,0 +1,339 @@
+"""Process-local metrics registry with a jit-safe bridge.
+
+Three ideas, kept deliberately small:
+
+  * A :class:`MetricsRegistry` of counters / gauges / histograms / series,
+    keyed by ``(name, labels)``, thread-safe (the jit bridge may fire
+    callbacks off the main thread), exportable with :meth:`snapshot` /
+    :meth:`write_json`.
+
+  * A module-default registry plus an *enabled* switch.  Host-side
+    recording (serving counters, qN stream stats, checkpoint bytes) is
+    unconditional — it is plain Python arithmetic and keeps legacy APIs
+    like ``qn_stream_stats()`` working with observability off.  The
+    **jit bridge** (``jax.debug.callback`` emission from inside compiled
+    solves) is gated on :func:`enabled` *at trace time*: with the switch
+    off, compiled functions contain no callbacks at all, so the
+    observability-off path is bit-identical to the pre-obs code.
+
+  * Solver-aware helpers — :func:`record_solve` and
+    :func:`record_backward` — that ship a solve's step count, residual,
+    convergence tape and warm-start carry state through one callback and
+    fan them out into the registry (phase-labelled iteration counters
+    split warm vs cold, residual-tape series, carry-age histograms).
+
+Because the gate is checked when a function is *traced*, enable metrics
+before the first call of any jitted function you want instrumented (jit
+caches otherwise reuse the un-instrumented trace for identical shapes).
+"""
+
+from __future__ import annotations
+
+import bisect
+import json
+import os
+import threading
+import time
+from typing import Mapping
+
+import numpy as np
+
+__all__ = [
+    "MetricsRegistry", "default_registry", "set_enabled", "enabled",
+    "emit_scalar", "record_solve", "record_backward",
+]
+
+_LabelsKey = tuple[tuple[str, str], ...]
+
+# ms-oriented default latency buckets; counters/gauges ignore them.
+_DEFAULT_BUCKETS = (0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0,
+                    250.0, 500.0, 1000.0, 2500.0, 5000.0, float("inf"))
+
+
+def _labels_key(labels: Mapping[str, str] | None) -> _LabelsKey:
+    if not labels:
+        return ()
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+class Counter:
+    kind = "counter"
+
+    def __init__(self):
+        self.value = 0.0
+
+    def inc(self, v: float = 1.0) -> None:
+        self.value += float(v)
+
+    def payload(self) -> dict:
+        return {"value": self.value}
+
+
+class Gauge:
+    kind = "gauge"
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def payload(self) -> dict:
+        return {"value": self.value}
+
+
+class Histogram:
+    """Fixed-bucket histogram: per-bucket counts plus sum/count/min/max."""
+
+    kind = "histogram"
+
+    def __init__(self, buckets=_DEFAULT_BUCKETS):
+        self.buckets = tuple(float(b) for b in buckets)
+        self.counts = [0] * len(self.buckets)
+        self.sum = 0.0
+        self.count = 0
+        self.min = float("inf")
+        self.max = float("-inf")
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.counts[bisect.bisect_left(self.buckets, v)] += 1
+        self.sum += v
+        self.count += 1
+        self.min = min(self.min, v)
+        self.max = max(self.max, v)
+
+    def payload(self) -> dict:
+        return {
+            "buckets": list(self.buckets), "counts": list(self.counts),
+            "sum": self.sum, "count": self.count,
+            "min": self.min if self.count else None,
+            "max": self.max if self.count else None,
+            "mean": self.sum / self.count if self.count else None,
+        }
+
+
+class Series:
+    """Keeps the most recent recorded sequence (e.g. one solve's residual
+    tape) plus how many sequences were recorded in total."""
+
+    kind = "series"
+
+    def __init__(self):
+        self.last: list[float] = []
+        self.count = 0
+
+    def record(self, values) -> None:
+        self.last = [float(v) for v in values]
+        self.count += 1
+
+    def payload(self) -> dict:
+        return {"last": self.last, "count": self.count}
+
+
+_KINDS = {"counter": Counter, "gauge": Gauge, "histogram": Histogram,
+          "series": Series}
+
+
+class MetricsRegistry:
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._metrics: dict[tuple[str, _LabelsKey], object] = {}
+
+    def _get(self, cls, name: str, labels, **kw):
+        key = (name, _labels_key(labels))
+        with self._lock:
+            m = self._metrics.get(key)
+            if m is None:
+                m = self._metrics[key] = cls(**kw)
+            elif not isinstance(m, cls):
+                raise TypeError(
+                    f"metric {name!r}{dict(key[1])} already registered as "
+                    f"{type(m).__name__}, requested {cls.__name__}")
+            return m
+
+    def counter(self, name: str, labels=None) -> Counter:
+        return self._get(Counter, name, labels)
+
+    def gauge(self, name: str, labels=None) -> Gauge:
+        return self._get(Gauge, name, labels)
+
+    def histogram(self, name: str, labels=None, buckets=None) -> Histogram:
+        kw = {"buckets": buckets} if buckets is not None else {}
+        return self._get(Histogram, name, labels, **kw)
+
+    def series(self, name: str, labels=None) -> Series:
+        return self._get(Series, name, labels)
+
+    # -- export / introspection -------------------------------------------
+
+    def value(self, name: str, labels=None, default=None):
+        """Counter/gauge value, or None-ish default if never recorded."""
+        m = self._metrics.get((name, _labels_key(labels)))
+        return default if m is None else getattr(m, "value", default)
+
+    def get(self, name: str, labels=None):
+        return self._metrics.get((name, _labels_key(labels)))
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            metrics = [
+                {"name": name, "labels": dict(lk), "kind": m.kind,
+                 **m.payload()}
+                for (name, lk), m in sorted(self._metrics.items())
+            ]
+        return {"schema": "repro.obs.metrics/v1", "unix_time": time.time(),
+                "pid": os.getpid(), "metrics": metrics}
+
+    def write_json(self, path: str) -> dict:
+        snap = self.snapshot()
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as fh:
+            json.dump(snap, fh, indent=1, sort_keys=True)
+        return snap
+
+    def reset(self) -> None:
+        with self._lock:
+            self._metrics.clear()
+
+
+_REGISTRY = MetricsRegistry()
+_ENABLED = False
+
+
+def default_registry() -> MetricsRegistry:
+    return _REGISTRY
+
+
+def set_enabled(on: bool) -> None:
+    """Toggle the jit bridge. Trace-time: enable before first jit trace."""
+    global _ENABLED
+    _ENABLED = bool(on)
+
+
+def enabled() -> bool:
+    return _ENABLED
+
+
+# ---------------------------------------------------------------------------
+# jit-safe bridge: these run at TRACE time; when enabled they plant a
+# jax.debug.callback whose host side lands values in the default registry.
+# ---------------------------------------------------------------------------
+
+
+def emit_scalar(name: str, value, *, labels=None, kind: str = "gauge") -> None:
+    """Land a traced scalar in the registry when the value is computed.
+
+    ``kind``: "gauge" (set), "counter" (inc by value), "histogram" (observe).
+    No-op (zero trace residue) when the bridge is disabled.
+    """
+    if not _ENABLED:
+        return
+    import jax
+
+    frozen = dict(labels) if labels else None
+
+    def cb(v):
+        v = float(np.asarray(v).reshape(-1)[0])
+        if kind == "counter":
+            _REGISTRY.counter(name, frozen).inc(v)
+        elif kind == "histogram":
+            _REGISTRY.histogram(name, frozen).observe(v)
+        else:
+            _REGISTRY.gauge(name, frozen).set(v)
+
+    jax.debug.callback(cb, value)
+
+
+def _solve_cb(phase: str, has_warm: bool, has_tape: bool):
+    """Host side of record_solve; argument layout fixed at trace time."""
+
+    def cb(n_steps, residual, *rest):
+        rest = list(rest)
+        warm = age = tape_res = None
+        if has_warm:
+            warm, age = rest[0], rest[1]
+            rest = rest[2:]
+        if has_tape:
+            tape_res = rest[0]
+        reg = _REGISTRY
+        pl = {"phase": phase}
+        reg.counter("solves_total", pl).inc()
+        n = float(np.asarray(n_steps).reshape(-1)[0])
+        wl = "cold"
+        if warm is not None:
+            w = np.asarray(warm)
+            if w.size and float(w.mean()) >= 0.5:
+                wl = "warm"
+        wpl = {"phase": phase, "warm": wl}
+        reg.counter("solves_by_warm_total", wpl).inc()
+        reg.counter("solve_iters_total", wpl).inc(n)
+        reg.gauge("solve_iters_last", wpl).set(n)
+        res = np.asarray(residual, np.float64).reshape(-1)
+        finite = res[np.isfinite(res)]
+        if finite.size:
+            reg.histogram("solve_residual", pl).observe(float(finite.mean()))
+        if age is not None and warm is not None:
+            w = np.asarray(warm).reshape(-1).astype(bool)
+            a = np.asarray(age, np.float64).reshape(-1)
+            if w.any():
+                reg.histogram("carry_age_at_use", pl).observe(
+                    float(a[w].mean()))
+        if tape_res is not None:
+            from repro.obs.tape import tape_residual_series
+            series = tape_residual_series(tape_res)
+            if series:
+                reg.series("solve_residual_tape", pl).record(series)
+
+    return cb
+
+
+def record_solve(phase: str, result, *, carry=None) -> None:
+    """Bridge one solve's telemetry out of a compiled function.
+
+    ``result`` is a ``SolveResult``/``ImplicitStats``-like object exposing
+    ``n_steps``, ``residual`` and (optionally) ``tape``; ``carry`` is the
+    *entry* ``SolveCarry`` (its ``warm``/``age`` classify this solve as a
+    warm or cold start).  Safe inside jit, custom_vjp fwd/bwd rules, and
+    vmapped/sharded solves; a pure no-op when the bridge is disabled.
+    """
+    if not _ENABLED:
+        return
+    import jax
+
+    args = [result.n_steps, result.residual]
+    has_warm = carry is not None and getattr(carry, "warm", None) is not None
+    if has_warm:
+        args += [carry.warm, carry.age]
+    tape = getattr(result, "tape", None)
+    has_tape = tape is not None
+    if has_tape:
+        args.append(tape.residual)
+    jax.debug.callback(_solve_cb(phase, has_warm, has_tape), *args)
+
+
+def record_backward(estimator: str, adj) -> None:
+    """Bridge the backward cotangent estimate (AdjointResult) stats."""
+    if not _ENABLED:
+        return
+    import jax
+
+    def cb(n_steps, residual, fallback):
+        reg = _REGISTRY
+        pl = {"estimator": estimator}
+        reg.counter("backward_estimates_total", pl).inc()
+        reg.counter("backward_iters_total", pl).inc(
+            float(np.asarray(n_steps).reshape(-1)[0]))
+        res = np.asarray(residual, np.float64).reshape(-1)
+        finite = res[np.isfinite(res)]
+        if finite.size:
+            reg.histogram("backward_residual", pl).observe(
+                float(finite.mean()))
+        fb = np.asarray(fallback)
+        if fb.size:
+            reg.counter("backward_fallbacks_total", pl).inc(
+                float(fb.sum()))
+
+    jax.debug.callback(cb, adj.n_steps, adj.residual, adj.fallback_mask)

@@ -1,0 +1,105 @@
+"""Solver convergence tape: fixed-size per-iteration telemetry buffers.
+
+A :class:`SolveTape` rides the solver loop state of every fixed-point /
+root solver (core/solvers.py) and records, per iteration and per sample:
+
+  * ``residual``   the post-step residual norm (shares the semantics of the
+                   legacy ``SolveResult.trace`` — inf where no iteration was
+                   recorded, so ``isfinite(...).sum(0)`` is the per-sample
+                   step count),
+  * ``step_norm``  ``||z_{k+1} - z_k||`` — the actual step length taken
+                   (0 where not recorded),
+  * ``qn_count``   quasi-Newton ring occupancy after the iteration (0 for
+                   solvers that keep no chain: Picard; the Anderson window
+                   fill for Anderson).
+
+The tape is a plain pytree of fixed-shape arrays: it is jit/vmap/shard
+inert (its buffers ride the ``lax.while_loop`` carry exactly like the
+iterate), frozen samples' rows keep their init values bit-for-bit, and it
+never influences the solve.  Host-side consumers summarize it with
+:func:`tape_summary` or push it through the metrics bridge
+(``repro.obs.metrics.record_solve``).
+
+This module depends on jax only — core/solvers imports it without cycles.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+class SolveTape(NamedTuple):
+    """Fixed-size per-iteration solve telemetry (leading axis = iteration).
+
+    Batched solvers record ``(max_steps, B)`` buffers; the scalar L-BFGS
+    path records ``(max_steps,)``.  Unrecorded cells hold the init values
+    (residual ``inf``, step_norm ``0``, qn_count ``0``).
+    """
+
+    residual: Array   # f32, inf-padded
+    step_norm: Array  # f32, 0-padded
+    qn_count: Array   # int32, 0-padded
+
+
+def empty_tape(max_steps: int, batch: int | None = None) -> SolveTape:
+    """An all-unrecorded tape (``batch=None`` for the scalar L-BFGS form)."""
+    shape = (max(max_steps, 1),) if batch is None \
+        else (max(max_steps, 1), batch)
+    return SolveTape(
+        residual=jnp.full(shape, jnp.inf, jnp.float32),
+        step_norm=jnp.zeros(shape, jnp.float32),
+        qn_count=jnp.zeros(shape, jnp.int32),
+    )
+
+
+def tape_record(tape: SolveTape, k: Array, active: Array, residual: Array,
+                step_norm: Array, qn_count: Array) -> SolveTape:
+    """Record iteration ``k`` for samples where ``active``; frozen samples
+    keep their cells bit-for-bit (the freeze-mask guarantee)."""
+    return SolveTape(
+        residual=tape.residual.at[k].set(
+            jnp.where(active, residual, tape.residual[k])),
+        step_norm=tape.step_norm.at[k].set(
+            jnp.where(active, step_norm.astype(jnp.float32),
+                      tape.step_norm[k])),
+        qn_count=tape.qn_count.at[k].set(
+            jnp.where(active, qn_count.astype(jnp.int32), tape.qn_count[k])),
+    )
+
+
+def tape_residual_series(residual) -> list[float]:
+    """Host-side: the batch-mean residual per realized iteration (finite
+    entries only), truncated at the last iteration any sample recorded."""
+    r = np.asarray(residual, np.float64)
+    if r.ndim == 1:
+        r = r[:, None]
+    finite = np.isfinite(r)
+    realized = finite.any(axis=1)
+    if not realized.any():
+        return []
+    last = int(np.nonzero(realized)[0].max()) + 1
+    out = []
+    for k in range(last):
+        row = r[k][finite[k]]
+        out.append(float(row.mean()) if row.size else float("nan"))
+    return out
+
+
+def tape_summary(tape: SolveTape) -> dict:
+    """Host-side digest of one solve's tape (JSON-able)."""
+    series = tape_residual_series(tape.residual)
+    qn = np.asarray(tape.qn_count)
+    step = np.asarray(tape.step_norm, np.float64)
+    return {
+        "n_iters": len(series),
+        "residual_series": series,
+        "final_residual": series[-1] if series else None,
+        "qn_occupancy_max": int(qn.max()) if qn.size else 0,
+        "step_norm_max": float(step.max()) if step.size else 0.0,
+    }

@@ -1,0 +1,179 @@
+"""Span tracing: lightweight timed spans emitting Chrome-trace JSON.
+
+The recorder collects events in the `Trace Event Format` consumed by
+Perfetto / chrome://tracing: ``{"traceEvents": [...]}`` with ``B``/``E``
+span pairs for host-side phases and complete ``X`` events for phases
+whose *end* is observed from inside compiled code.
+
+Two ways to mark time:
+
+  * :func:`span` — a host-side context manager (``with span("train_step",
+    step=i): ...``) emitting a B/E pair.  Nest freely.
+
+  * :func:`phase_done` — for phases *inside* a jitted function, where a
+    begin marker is unobservable (XLA schedules the program as a whole).
+    Call it at trace time with arrays the phase produces; when those
+    values materialize, a ``jax.debug.callback`` fires on the host and an
+    ``X`` event is recorded spanning from the previous phase boundary
+    (the enclosing span's start, or the last phase end) to now.  Within
+    one enclosing span the phases therefore tile the wall time:
+    ``forward_solve`` ends when its stats are ready, ``implicit_backward``
+    covers ready-to-ready, and so on.
+
+All events share one pid and a single synthetic tid so nesting is decided
+purely by time containment — callbacks may run on worker threads, and
+using real thread ids would scatter spans across trace rows.
+
+Like the metrics bridge, the enabled switch is consulted at TRACE time:
+enable tracing before the first call of a jitted function you want phase
+marks from.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from contextlib import contextmanager
+
+__all__ = ["TraceRecorder", "default_recorder", "set_enabled", "enabled",
+           "span", "instant", "phase_done", "write", "clear"]
+
+_PID = os.getpid()
+_TID = 1
+
+
+class TraceRecorder:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._events: list[dict] = []
+        self._t0 = time.perf_counter()
+        # the last phase boundary: start of the innermost open span, or the
+        # end of the most recent phase/span — phase_done events span from
+        # here to "now"
+        self._anchor: float | None = None
+
+    def _now(self) -> float:
+        return (time.perf_counter() - self._t0) * 1e6  # µs
+
+    def _append(self, ev: dict) -> None:
+        with self._lock:
+            self._events.append(ev)
+
+    # -- host spans --------------------------------------------------------
+
+    @contextmanager
+    def span(self, name: str, **args):
+        t = self._now()
+        self._append({"name": name, "ph": "B", "ts": t, "pid": _PID,
+                      "tid": _TID, **({"args": args} if args else {})})
+        prev_anchor, self._anchor = self._anchor, t
+        try:
+            yield
+        finally:
+            t1 = self._now()
+            self._append({"name": name, "ph": "E", "ts": t1, "pid": _PID,
+                          "tid": _TID})
+            # phases after this span anchor at its end, not inside it
+            self._anchor = t1 if prev_anchor is not None else None
+
+    def instant(self, name: str, **args) -> None:
+        self._append({"name": name, "ph": "i", "s": "t", "ts": self._now(),
+                      "pid": _PID, "tid": _TID,
+                      **({"args": args} if args else {})})
+
+    def phase_done(self, name: str, **args) -> None:
+        """Record a complete X event ending now, starting at the previous
+        phase boundary (see module docstring)."""
+        t = self._now()
+        t0 = self._anchor if self._anchor is not None else t
+        self._append({"name": name, "ph": "X", "ts": t0,
+                      "dur": max(t - t0, 0.0), "pid": _PID, "tid": _TID,
+                      **({"args": args} if args else {})})
+        self._anchor = t
+
+    # -- export ------------------------------------------------------------
+
+    def events(self) -> list[dict]:
+        with self._lock:
+            return list(self._events)
+
+    def to_chrome_trace(self) -> dict:
+        meta = [{"name": "process_name", "ph": "M", "pid": _PID, "tid": _TID,
+                 "args": {"name": "repro"}},
+                {"name": "thread_name", "ph": "M", "pid": _PID, "tid": _TID,
+                 "args": {"name": "steps"}}]
+        return {"traceEvents": meta + self.events(),
+                "displayTimeUnit": "ms"}
+
+    def write(self, path: str) -> dict:
+        trace = self.to_chrome_trace()
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as fh:
+            json.dump(trace, fh, indent=1)
+        return trace
+
+    def clear(self) -> None:
+        with self._lock:
+            self._events.clear()
+        self._anchor = None
+
+
+_RECORDER = TraceRecorder()
+_ENABLED = False
+
+
+def default_recorder() -> TraceRecorder:
+    return _RECORDER
+
+
+def set_enabled(on: bool) -> None:
+    global _ENABLED
+    _ENABLED = bool(on)
+
+
+def enabled() -> bool:
+    return _ENABLED
+
+
+@contextmanager
+def span(name: str, **args):
+    """Host-side timed span on the default recorder; no-op when disabled."""
+    if not _ENABLED:
+        yield
+        return
+    with _RECORDER.span(name, **args):
+        yield
+
+
+def instant(name: str, **args) -> None:
+    if _ENABLED:
+        _RECORDER.instant(name, **args)
+
+
+def phase_done(name: str, *deps, **args) -> None:
+    """Trace-time phase mark for jitted code: plants a jax.debug.callback
+    on ``deps`` (arrays the phase produces) that closes the phase when they
+    are ready. No-op — zero trace residue — when tracing is disabled."""
+    if not _ENABLED:
+        return
+    if not deps:
+        _RECORDER.phase_done(name, **args)
+        return
+    import jax
+
+    def cb(*_):
+        _RECORDER.phase_done(name, **args)
+
+    jax.debug.callback(cb, *deps)
+
+
+def write(path: str) -> dict:
+    return _RECORDER.write(path)
+
+
+def clear() -> None:
+    _RECORDER.clear()

@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import queue
+import time
 from typing import Any
 
 import jax
@@ -40,6 +41,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.implicit import CarryCache, write_carry_rows
 from repro.models import lm
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracing as obs_tracing
 from repro.parallel.sharding import ShardCtx
 
 
@@ -50,12 +53,15 @@ class Request:
     max_new_tokens: int = 16
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # wall time the request entered the queue (set by ServeLoop.submit);
+    # TTFT = first-token time - t_submit
+    t_submit: float = 0.0
 
 
 class ServeLoop:
     def __init__(self, params, cfg: ModelConfig, ctx: ShardCtx, *,
                  slots: int = 4, max_len: int = 256, eos_id: int = 1,
-                 greedy: bool = True):
+                 greedy: bool = True, carry_max_age: int | None = None):
         self.params, self.cfg, self.ctx = params, cfg, ctx
         self.slots, self.max_len, self.eos = slots, max_len, eos_id
         self.greedy = greedy
@@ -65,13 +71,17 @@ class ServeLoop:
         self.lengths = jnp.zeros((slots,), jnp.int32)
         self.cur_tok = jnp.zeros((slots,), jnp.int32)
         # stats: how many prefill calls / prefilled requests (coalescing
-        # means calls <= requests)
+        # means calls <= requests); mirrored onto the metrics registry as
+        # serve_prefill_{calls,requests}
         self.prefill_calls = 0
         self.prefill_requests = 0
+        self._metrics = obs_metrics.default_registry()
         # persistent per-slot solve state (DEQ models only): token-to-token
-        # warm starts, evicted when a slot is recycled
+        # warm starts, evicted when a slot is recycled; ``carry_max_age``
+        # additionally bounds per-row staleness (see CarryCache)
         self.carries = CarryCache(
-            lambda: lm.deq_solve_carry(cfg, slots, 1), slots
+            lambda: lm.deq_solve_carry(cfg, slots, 1), slots,
+            max_age=carry_max_age,
         ) if cfg.deq.enabled else None
 
         if self.carries is None:
@@ -103,6 +113,8 @@ class ServeLoop:
     # -- admission -----------------------------------------------------
 
     def submit(self, req: Request) -> None:
+        req.t_submit = time.perf_counter()
+        self._metrics.counter("serve_requests_submitted").inc()
         self.queue.put(req)
 
     def _admit(self) -> None:
@@ -112,6 +124,10 @@ class ServeLoop:
             wave.append((free.pop(0), self.queue.get()))
         if not wave:
             return
+        with obs_tracing.span("admit", wave=len(wave)):
+            self._prefill_wave(wave)
+
+    def _prefill_wave(self, wave: list[tuple[int, Request]]) -> None:
         # coalesce: one batched prefill per prompt length present in the wave
         by_len: dict[int, list[tuple[int, Request]]] = {}
         for slot, req in wave:
@@ -137,11 +153,15 @@ class ServeLoop:
                         )
                     )
             toks = jnp.asarray([req.prompt for _, req in group], jnp.int32)
-            out = self._prefill_cache[key](self.params, toks)
-            logits, cache_new = out[0], out[1]
+            with obs_tracing.span("prefill", plen=plen, wave=len(group)):
+                out = self._prefill_cache[key](self.params, toks)
+                logits = jax.block_until_ready(out[0])
+            cache_new = out[1]
             seeded = out[3] if self.carries is not None else None
             self.prefill_calls += 1
             self.prefill_requests += len(group)
+            self._metrics.counter("serve_prefill_calls").inc()
+            self._metrics.counter("serve_prefill_requests").inc(len(group))
             if self.carries is not None:
                 # one batched scatter per wave: the scatter overwrites every
                 # field of the leased rows, so the lease skips its own
@@ -158,6 +178,9 @@ class ServeLoop:
                 )
                 nxt = int(jnp.argmax(logits[row, -1]))
                 req.out.append(nxt)
+                # first token emitted here: one TTFT observation per request
+                self._metrics.histogram("serve_ttft_ms").observe(
+                    (time.perf_counter() - req.t_submit) * 1e3)
                 self.active[slot] = req
                 self.lengths = self.lengths.at[slot].set(plen)
                 self.cur_tok = self.cur_tok.at[slot].set(nxt)
@@ -166,44 +189,58 @@ class ServeLoop:
 
     def step(self) -> int:
         """One decode tick for all active slots; returns #active."""
+        with obs_tracing.span("serve_tick"):
+            return self._step()
+
+    def _step(self) -> int:
         self._admit()
         mask = np.array([r is not None and not r.done for r in self.active])
         if not mask.any():
             return 0
-        if self.carries is None:
-            logits, self.caches = self._decode(
-                self.params, self.caches, self.cur_tok, self.lengths,
-                jnp.asarray(mask),
-            )
-        else:
-            logits, self.caches, new_carry = self._decode(
-                self.params, self.caches, self.cur_tok, self.lengths,
-                jnp.asarray(mask), self.carries.carry,
-            )
-            self.carries.update(new_carry)
-        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        t0 = time.perf_counter()
+        with obs_tracing.span("decode", active=int(mask.sum())):
+            if self.carries is None:
+                logits, self.caches = self._decode(
+                    self.params, self.caches, self.cur_tok, self.lengths,
+                    jnp.asarray(mask),
+                )
+            else:
+                logits, self.caches, new_carry = self._decode(
+                    self.params, self.caches, self.cur_tok, self.lengths,
+                    jnp.asarray(mask), self.carries.carry,
+                )
+                self.carries.update(new_carry)
+            nxt = np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))
+        tok_ms = (time.perf_counter() - t0) * 1e3
         self.lengths = self.lengths + jnp.asarray(mask, jnp.int32)
-        self.cur_tok = jnp.where(jnp.asarray(mask), nxt, self.cur_tok)
+        self.cur_tok = jnp.where(jnp.asarray(mask), jnp.asarray(nxt),
+                                 self.cur_tok)
         for s, req in enumerate(self.active):
             if req is None or req.done:
                 continue
             tok = int(nxt[s])
             req.out.append(tok)
+            # the tick's decode wall, once per token generated this tick
+            self._metrics.histogram("serve_token_ms").observe(tok_ms)
+            self._metrics.counter("serve_tokens_total").inc()
             if tok == self.eos or len(req.out) >= req.max_new_tokens:
                 req.done = True
                 self.active[s] = None
+                self._metrics.counter("serve_requests_completed").inc()
                 if self.carries is not None:
                     self.carries.release(s)
         return int(mask.sum())
 
     def drain(self, reqs: list[Request], max_ticks: int = 10_000) -> list[Request]:
-        for r in reqs:
-            self.submit(r)
-        ticks = 0
-        while (not self.queue.empty() or any(a is not None for a in self.active)
-               ) and ticks < max_ticks:
-            self.step()
-            ticks += 1
+        with obs_tracing.span("drain", requests=len(reqs)):
+            for r in reqs:
+                self.submit(r)
+            ticks = 0
+            while (not self.queue.empty()
+                   or any(a is not None for a in self.active)
+                   ) and ticks < max_ticks:
+                self.step()
+                ticks += 1
         return reqs
 
 

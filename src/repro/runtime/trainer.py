@@ -23,6 +23,7 @@ from repro.configs.base import ModelConfig, TrainConfig
 from repro.implicit import ESTIMATORS, SOLVERS
 from repro.launch import steps
 from repro.launch.steps import TrainState  # re-export (legacy import path)
+from repro.obs import tracing as obs_tracing
 from repro.parallel.sharding import ShardCtx
 from repro.runtime.ft import PreemptionGuard, StragglerWatchdog
 
@@ -73,7 +74,14 @@ class Trainer:
             self._train_step = jax.jit(step_fn, donate_argnums=(0,))
         self.watchdog = StragglerWatchdog(n_hosts=max(jax.process_count(), 1))
         self.ckpt = (
-            CheckpointManager(tcfg.checkpoint_dir, keep=tcfg.keep_checkpoints)
+            CheckpointManager(
+                tcfg.checkpoint_dir, keep=tcfg.keep_checkpoints,
+                # lean mode drops the (m, B, S, d) u/v carry ring — restore
+                # zero-fills it back (fill_missing_prefixes below), which is
+                # the identity inverse
+                omit_prefixes=((".carry.lowrank.u", ".carry.lowrank.v")
+                               if tcfg.checkpoint_lean else ()),
+            )
             if tcfg.checkpoint_dir else None
         )
 
@@ -111,8 +119,14 @@ class Trainer:
         with PreemptionGuard() as guard:
             for i in range(start, steps):
                 t0 = time.perf_counter()
-                batch = next(batches)
-                state, metrics = self._train_step(state, batch)
+                with obs_tracing.span("data", step=i + 1):
+                    batch = next(batches)
+                with obs_tracing.span("train_step", step=i + 1):
+                    state, metrics = self._train_step(state, batch)
+                    if obs_tracing.enabled():
+                        # flush the step's phase_done callbacks so the
+                        # in-jit phases nest inside this host span
+                        jax.block_until_ready(metrics)
                 if (i + 1) % log_every == 0 or i + 1 == steps:
                     metrics = {k: float(v) for k, v in metrics.items()}
                     dt = time.perf_counter() - t0
@@ -128,7 +142,8 @@ class Trainer:
                 if self.ckpt and self.tcfg.checkpoint_every and (
                     (i + 1) % self.tcfg.checkpoint_every == 0
                 ):
-                    self.ckpt.save(i + 1, state)
+                    with obs_tracing.span("checkpoint", step=i + 1):
+                        self.ckpt.save(i + 1, state)
                 if guard.should_exit:
                     if self.ckpt:
                         self.ckpt.save(i + 1, state)

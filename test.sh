@@ -11,7 +11,10 @@
 #   ./test.sh ci           what CI runs, reproducible offline: tier-1 suite
 #                          + kernel sweep (both emitting JUnit XML under
 #                          results/junit/) + the bench perf-regression gate
-#                          (benchmarks/check_regression.py) — no network,
+#                          (benchmarks/check_regression.py, including the
+#                          observability-overhead gate) + a train rehearsal
+#                          and a serve drain with --metrics-out/--trace-out
+#                          (artifacts under results/obs/) — no network,
 #                          no installs
 #   ./test.sh lint         ruff when available, else a dependency-free
 #                          compileall pass (the container has no linter)
@@ -51,7 +54,27 @@ case "${1:-}" in
     python -m pytest -q tests/test_kernels.py \
       --junitxml=results/junit/kernels.xml
     python -m benchmarks.check_regression
-    echo "ci: tier-1 + kernel sweep + bench regression gate all green"
+    # observability rehearsals: a real train run and a real serve drain
+    # must produce a metrics snapshot + a Perfetto-loadable trace
+    mkdir -p results/obs
+    python -m repro.launch.train --smoke --deq --steps 2 --batch 2 --seq 16 \
+      --metrics-out results/obs/train_metrics.json \
+      --trace-out results/obs/train_trace.json
+    python -m repro.launch.serve --deq --requests 6 --slots 2 \
+      --max-new-tokens 4 --carry-max-age 3 \
+      --metrics-out results/obs/serve_metrics.json \
+      --trace-out results/obs/serve_trace.json
+    python - <<'EOF'
+import json
+for p in ("results/obs/train_metrics.json", "results/obs/serve_metrics.json"):
+    snap = json.load(open(p))
+    assert snap["schema"] == "repro.obs.metrics/v1" and snap["metrics"], p
+for p in ("results/obs/train_trace.json", "results/obs/serve_trace.json"):
+    tr = json.load(open(p))
+    assert tr["traceEvents"], p
+print("ci: observability artifacts validated (results/obs/)")
+EOF
+    echo "ci: tier-1 + kernel sweep + bench gates + obs rehearsals all green"
     ;;
   lint)
     shift
