@@ -69,17 +69,19 @@ def run_traffic(steps: int = 8) -> list[dict]:
     """Per-Broyden-iteration U/V HBM traffic, fused vs. the legacy loop.
 
     Traces an UNROLLED broyden_solve (tracing executes nothing) and reads the
-    kernel layer's trace-time stream stats: with the fused ``matvec_multi``
-    loop each iteration must perform exactly ONE streaming application pass.
-    The legacy baseline is analytic: three single-RHS applications per
-    iteration (direction, H@y, H^T s), two buffer streams each.
+    kernel layer's trace-time stream stats: with the fused ``broyden_step``
+    loop each iteration must perform exactly ONE streaming U/V pass (apply +
+    denominator + ring append in one launch).  The legacy baseline is
+    analytic: three single-RHS applications per iteration (direction, H@y,
+    H^T s), two buffer streams each, at the same ring storage dtype.
     """
     from repro.core.solvers import SolverConfig, broyden_solve
     from repro.kernels import ops as kernel_ops
 
-    m, bsz, d, itemsize = 16, 4, 512, 4
+    m, bsz, d = 16, 4, 512
     g = lambda z: z - jnp.tanh(z)  # any residual map; this is trace-only
     cfg = SolverConfig(max_steps=steps, memory=m, unroll=True)
+    itemsize = jnp.dtype(cfg.qn_dtype).itemsize
 
     kernel_ops.reset_qn_stream_stats()
     jax.eval_shape(lambda z0: broyden_solve(g, z0, cfg).z,

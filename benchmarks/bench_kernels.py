@@ -13,28 +13,34 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.solvers import SolverConfig
 from repro.kernels import ops, ref
 from repro.kernels.flash_xla import flash_attention_xla
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import print_csv, timeit
 
 KEY = jax.random.PRNGKey(0)
 
+# storage dtype of the quasi-Newton ring rows: the production default
+# (SolverConfig.qn_dtype) — bf16 halves every U/V stream byte count below
+QN_DTYPE = jnp.dtype(SolverConfig().qn_dtype)
+
 
 def _qn_bytes_moved(m, b, d, k, itemsize, transpose):
-    """U/V stream bytes + RHS in/out bytes for one fused application set."""
+    """U/V stream bytes + RHS in/out bytes (RHS vectors stay f32)."""
     return (ops.qn_stream_bytes(m, b, d, itemsize, transpose)
-            + 2 * k * b * d * itemsize)
+            + 2 * k * b * d * 4)
 
 
 def run() -> list[dict]:
     rows = []
+    qit = QN_DTYPE.itemsize
 
     # qn_apply sweep — THE SHINE op (single RHS, the backward-pass shape)
     for (m, b, d) in [(8, 4, 256), (16, 8, 1024), (30, 4, 4096)]:
         ks = jax.random.split(jax.random.fold_in(KEY, m + d), 3)
-        u = jax.random.normal(ks[0], (m, b, d))
-        v = jax.random.normal(ks[1], (m, b, d))
+        u = jax.random.normal(ks[0], (m, b, d), QN_DTYPE)
+        v = jax.random.normal(ks[1], (m, b, d), QN_DTYPE)
         x = jax.random.normal(ks[2], (b, d))
         mask = jnp.ones((m, b), jnp.float32)
         want = ref.qn_apply_ref(u, v, x, jnp.float32(1.0), mask)
@@ -45,7 +51,7 @@ def run() -> list[dict]:
         rows.append({"op": "qn_apply", "shape": f"m{m}xB{b}xD{d}",
                      "impl": "ref",
                      "wall_ms": round(t * 1e3, 3),
-                     "bytes_moved": _qn_bytes_moved(m, b, d, 1, 4, (False,)),
+                     "bytes_moved": _qn_bytes_moved(m, b, d, 1, qit, (False,)),
                      "max_abs_err": float(jnp.abs(got - want).max())})
 
     # qn_apply_multi — fused K-RHS application vs the unfused call sequence
@@ -59,8 +65,8 @@ def run() -> list[dict]:
         for (m, b, d) in [(16, 8, 1024), (30, 4, 4096)]:
             kk = len(tr)
             ks = jax.random.split(jax.random.fold_in(KEY, m * 7 + d + kk), 3)
-            u = jax.random.normal(ks[0], (m, b, d))
-            v = jax.random.normal(ks[1], (m, b, d))
+            u = jax.random.normal(ks[0], (m, b, d), QN_DTYPE)
+            v = jax.random.normal(ks[1], (m, b, d), QN_DTYPE)
             xs = jax.random.normal(ks[2], (kk, b, d))
             mask = jnp.ones((m, b), jnp.float32)
             want = ref.qn_apply_multi_ref(u, v, xs, jnp.float32(1.0), mask, tr)
@@ -68,8 +74,8 @@ def run() -> list[dict]:
                                      impl="pallas_interpret")
             t = timeit(jax.jit(lambda u, v, xs: ref.qn_apply_multi_ref(
                 u, v, xs, jnp.float32(1.0), mask, tr)), u, v, xs, iters=3)
-            fused = _qn_bytes_moved(m, b, d, kk, 4, tr)
-            unfused = sum(_qn_bytes_moved(m, b, d, 1, 4, t_) for t_ in legacy)
+            fused = _qn_bytes_moved(m, b, d, kk, qit, tr)
+            unfused = sum(_qn_bytes_moved(m, b, d, 1, qit, t_) for t_ in legacy)
             rows.append({"op": f"qn_apply_multi[{name}]",
                          "shape": f"m{m}xB{b}xD{d}xK{kk}",
                          "impl": "ref",
@@ -82,8 +88,8 @@ def run() -> list[dict]:
     # lowrank_append — fused ring-slot write (touches one row, not m)
     for (m, b, d) in [(16, 8, 1024), (30, 4, 4096)]:
         ks = jax.random.split(jax.random.fold_in(KEY, m + 3 * d), 6)
-        u = jax.random.normal(ks[0], (m, b, d))
-        v = jax.random.normal(ks[1], (m, b, d))
+        u = jax.random.normal(ks[0], (m, b, d), QN_DTYPE)
+        v = jax.random.normal(ks[1], (m, b, d), QN_DTYPE)
         s = jax.random.normal(ks[2], (b, d))
         hy = jax.random.normal(ks[3], (b, d))
         bb = jax.random.normal(ks[4], (b, d))
@@ -93,11 +99,56 @@ def run() -> list[dict]:
         want = ref.lowrank_append_ref(u, v, s, hy, bb, inv_den, slot, upd)
         got = ops.lowrank_append(u, v, s, hy, bb, inv_den, slot, upd,
                                  impl="pallas_interpret")
-        err = max(float(jnp.abs(a - w).max()) for a, w in zip(got, want))
+        err = max(float(jnp.abs((a - w).astype(jnp.float32)).max())
+                  for a, w in zip(got, want))
+        t = timeit(jax.jit(lambda u, v, s, hy, bb: ref.lowrank_append_ref(
+            u, v, s, hy, bb, inv_den, slot, upd)), u, v, s, hy, bb, iters=3)
         rows.append({"op": "lowrank_append", "shape": f"m{m}xB{b}xD{d}",
                      "impl": "ref",
-                     "wall_ms": None,
-                     "bytes_moved": 7 * b * d * 4,  # row r/w + s/hy/b + evict
+                     "wall_ms": round(t * 1e3, 3),
+                     # slot row r/w + evict out (ring dtype), s/hy/b in (f32)
+                     "bytes_moved": 4 * b * d * qit + 3 * b * d * 4,
+                     "max_abs_err": err})
+
+    # broyden_step — the single-launch fusion of the qn_apply_multi
+    # (H @ g_new, H^T @ s) stream AND the ring append: one U/V pass per
+    # Broyden iteration, write included.  Unfused = the apply stream plus a
+    # separate lowrank_append launch re-reading the slot row.
+    for (m, b, d) in [(16, 8, 1024), (30, 4, 4096)]:
+        ks = jax.random.split(jax.random.fold_in(KEY, m * 11 + d), 6)
+        u = jax.random.normal(ks[0], (m, b, d), QN_DTYPE)
+        v = jax.random.normal(ks[1], (m, b, d), QN_DTYPE)
+        g = jax.random.normal(ks[2], (b, d))
+        s = jax.random.normal(ks[3], (b, d))
+        hg = jax.random.normal(ks[4], (b, d))
+        count = jax.random.randint(ks[5], (b,), 0, 2 * m)
+        slot = (count % m).astype(jnp.int32)
+        mask = (jnp.arange(m, dtype=jnp.int32)[:, None]
+                < jnp.minimum(count, m)[None, :]).astype(jnp.float32)
+        active = jnp.ones((b,), jnp.float32)
+        want = ref.broyden_step_ref(u, v, g, s, hg, jnp.float32(1.0), mask,
+                                    slot, active, 1e-8)
+        got = ops.broyden_step(u, v, g, s, hg, jnp.float32(1.0), mask, slot,
+                               active, 1e-8, impl="pallas_interpret")
+        # relative: the appended pair ~ 1/den can be large, where one bf16
+        # ulp of storage rounding is a big ABSOLUTE number
+        err = max(float((jnp.abs((a - w).astype(jnp.float32))
+                         / (1.0 + jnp.abs(w.astype(jnp.float32)))).max())
+                  for a, w in zip(got, want))
+        t = timeit(jax.jit(lambda u, v, g, s, hg: ref.broyden_step_ref(
+            u, v, g, s, hg, jnp.float32(1.0), mask, slot, active, 1e-8)),
+            u, v, g, s, hg, iters=3)
+        # one mixed-flag U/V stream + slot row write/evict + f32 vector i/o
+        fused = (ops.qn_stream_bytes(m, b, d, qit, (False, True))
+                 + 4 * b * d * qit + 5 * b * d * 4)
+        unfused = (_qn_bytes_moved(m, b, d, 2, qit, (False, True))
+                   + 4 * b * d * qit + 3 * b * d * 4)
+        rows.append({"op": "broyden_step", "shape": f"m{m}xB{b}xD{d}",
+                     "impl": "ref",
+                     "wall_ms": round(t * 1e3, 3),
+                     "bytes_moved": fused,
+                     "unfused_bytes": unfused,
+                     "uv_traffic_ratio": round(unfused / fused, 2),
                      "max_abs_err": err})
 
     # flash_xla sweep vs dense oracle
@@ -131,9 +182,11 @@ def run() -> list[dict]:
         n = 1
         for dim in shape:
             n *= dim
+        t = timeit(jax.jit(lambda x, w: ref.rmsnorm_ref(x, w, 1e-6)),
+                   x, w, iters=3)
         rows.append({"op": "rmsnorm", "shape": "x".join(map(str, shape)),
                      "impl": "pallas_interpret",
-                     "wall_ms": None,
+                     "wall_ms": round(t * 1e3, 3),
                      "bytes_moved": 2 * n * 2 + shape[-1] * 2,
                      "max_abs_err": float(jnp.abs(
                          got.astype(jnp.float32) - want.astype(jnp.float32)).max())})
@@ -145,7 +198,9 @@ def run() -> list[dict]:
 
     rows.extend(bench_warm_start.bench_rows())
 
-    emit("kernels", rows)
+    # CSV to stdout only: the canonical persisted record is run.py's
+    # BENCH_kernels.json (+ BENCH_metrics.json) — no stray kernels.json
+    print_csv("kernels", rows)
     return rows
 
 

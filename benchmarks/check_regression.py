@@ -52,7 +52,7 @@ from pathlib import Path
 
 BASELINE = Path("results/benchmarks/BENCH_kernels.json")
 FRESH = Path("results/benchmarks/BENCH_kernels.fresh.json")
-FUSED_OPS = ("qn_apply_multi", "lowrank_append")
+FUSED_OPS = ("qn_apply_multi", "lowrank_append", "broyden_step")
 # iteration counts are deterministic on fixed seeds, but the last iteration
 # can flip on platform reduction-order wobble — allow one
 ITER_SLACK = 1

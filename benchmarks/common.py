@@ -28,6 +28,13 @@ def emit(name: str, rows: list[dict]) -> None:
     """Print a CSV block and persist JSON under results/benchmarks/."""
     RESULTS.mkdir(parents=True, exist_ok=True)
     (RESULTS / f"{name}.json").write_text(json.dumps(rows, indent=2))
+    print_csv(name, rows)
+
+
+def print_csv(name: str, rows: list[dict]) -> None:
+    """Print the CSV block only — for sections whose canonical persisted
+    record is written elsewhere (bench_kernels -> run.py's
+    BENCH_kernels.json), so no stray per-section JSON lands on disk."""
     if not rows:
         print(f"# {name}: no rows")
         return

@@ -35,6 +35,53 @@ LINK_BW = 50e9            # bytes/s per ICI link
 HBM_BYTES = 16 * 2**30    # per chip
 
 DRYRUN = Path("results/dryrun")
+REPORT = Path("results/benchmarks/ROOFLINE_report.json")
+
+
+def qn_bytes_check() -> list[dict]:
+    """Bytes-accounting gate: the kernel layer's trace-time stream counters
+    must match the analytic dtype-aware model ``qn_stream_bytes`` EXACTLY.
+
+    Traces one unrolled Broyden solve per ring dtype and checks
+    ``qn_stream_stats().uv_bytes`` against the closed form: a single-RHS
+    warm-up apply (``H0 @ g0``) plus one fused ``broyden_step`` mixed-flag
+    pass per iteration, at that dtype's itemsize.  Any drift means either a
+    kernel grew an extra U/V pass or the accounting (and therefore every
+    bytes_moved number in BENCH_kernels.json) went stale.  Also pins the
+    headline: the bf16 ring streams exactly half the f32 bytes.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.solvers import SolverConfig, broyden_solve
+    from repro.kernels import ops as kernel_ops
+
+    m, bsz, d, steps = 8, 4, 256, 6
+    g = lambda z: z - jnp.tanh(z)  # trace-only: nothing executes
+    rows = []
+    for qdt in ("bfloat16", "float32"):
+        cfg = SolverConfig(max_steps=steps, memory=m, unroll=True,
+                           qn_dtype=qdt)
+        itemsize = jnp.dtype(qdt).itemsize
+        kernel_ops.reset_qn_stream_stats()
+        jax.eval_shape(lambda z0: broyden_solve(g, z0, cfg).z,
+                       jax.ShapeDtypeStruct((bsz, d), jnp.float32))
+        st = kernel_ops.qn_stream_stats()
+        analytic = (
+            kernel_ops.qn_stream_bytes(m, bsz, d, itemsize, (False,))
+            + steps * kernel_ops.qn_stream_bytes(m, bsz, d, itemsize,
+                                                 (False, True)))
+        assert st.uv_bytes == analytic, (
+            f"qn stream accounting drift ({qdt}): traced {st.uv_bytes} "
+            f"U/V bytes, analytic model says {analytic}")
+        rows.append({"qn_dtype": qdt, "shape": f"m{m}xB{bsz}xD{d}",
+                     "iters": steps, "uv_bytes_traced": st.uv_bytes,
+                     "uv_bytes_analytic": analytic, "match": True})
+    bf16, f32 = rows[0], rows[1]
+    assert 2 * bf16["uv_bytes_traced"] == f32["uv_bytes_traced"], (
+        "bf16 ring must stream exactly half the f32 U/V bytes")
+    emit("roofline_qn_bytes", rows)
+    return rows
 
 
 def _load(arch, shape, mesh, variant, deq=False):
@@ -109,6 +156,7 @@ def analyze(mesh: str = "single", deq: bool = False) -> list[dict]:
 
 
 def run() -> list[dict]:
+    qn_rows = qn_bytes_check()
     rows = analyze("single")
     emit("roofline_single_pod", rows)
     deq_rows = analyze("single", deq=True)
@@ -128,6 +176,16 @@ def run() -> list[dict]:
                           "resident_gib": round(resident / 2**30, 2),
                           "compile_s": memo["compile_s"]})
     emit("dryrun_multi_pod", multi)
+    # one consolidated report file for the CI artifact (roofline terms need
+    # results/dryrun/ cells; the qn-bytes section always has rows and gates)
+    REPORT.parent.mkdir(parents=True, exist_ok=True)
+    REPORT.write_text(json.dumps({
+        "qn_bytes_accounting": qn_rows,
+        "roofline_single_pod": rows,
+        "roofline_deq": deq_rows,
+        "dryrun_multi_pod": multi,
+    }, indent=2))
+    print(f"roofline: report -> {REPORT}")
     return rows
 
 

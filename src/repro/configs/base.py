@@ -29,6 +29,9 @@ class DEQSettings:
     refine_steps: int = 5
     backward_max_steps: int = 16
     unroll: bool = False  # dry-run costing mode
+    # storage dtype of the quasi-Newton U/V ring (f32 accumulate regardless);
+    # "float32" opts back into full-precision storage
+    qn_dtype: str = "bfloat16"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -243,3 +246,6 @@ class TrainConfig:
     # warm-start from the iterate alone (== deq_carry="state" behaviour
     # for the first post-restore step).
     checkpoint_lean: bool = False
+    # storage dtype of the quasi-Newton ring for DEQ solves launched by the
+    # trainer; mirrored into DEQSettings.qn_dtype by the launch flag
+    qn_dtype: str = "bfloat16"

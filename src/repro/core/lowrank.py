@@ -169,6 +169,35 @@ class LowRank:
         H = LowRank(alpha=self.alpha, u=new_u, v=new_v, count=new_count)
         return H, ev_u, ev_v
 
+    def broyden_step(
+        self,
+        g_new: jax.Array,   # (B, *F) f32 residual at the new iterate
+        s: jax.Array,       # (B, *F) f32 step z_new - z
+        hg_old: jax.Array,  # (B, *F) f32 carried H @ g_old
+        active: jax.Array,  # (B,) bool: sample still iterating
+        eps: float,
+    ) -> tuple["LowRank", jax.Array, jax.Array, jax.Array, jax.Array,
+               jax.Array, jax.Array]:
+        """One Broyden iteration's full memory work in a single kernel
+        launch (kernels/ops.broyden_step): the fused apply (``H @ g_new``,
+        ``H^T @ s``), the denominator ``s^T H y`` and the guarded ring
+        append — one U/V pass total, write included.
+
+        Returns ``(H_new, hg_new, b, den, upd, ev_u, ev_v)``: ``upd`` is
+        the per-sample append mask (``active`` and a well-conditioned
+        denominator); ``ev_u/ev_v`` are the overwritten slot's previous
+        contents for the caller's carried-product correction.
+        """
+        m = self.memory
+        slot = (self.count % m).astype(jnp.int32)
+        new_u, new_v, hg_new, b, den, ev_u, ev_v = kernel_ops.broyden_step(
+            self.u, self.v, g_new, s, hg_old, self.alpha, self._valid_mask(),
+            slot, active, eps)
+        upd = active & (jnp.abs(den) > eps)
+        H = LowRank(alpha=self.alpha, u=new_u, v=new_v,
+                    count=self.count + upd.astype(jnp.int32))
+        return H, hg_new, b, den, upd, ev_u, ev_v
+
     # -- diagnostics ----------------------------------------------------------
 
     def dense(self) -> jax.Array:

@@ -88,12 +88,22 @@ def init_solve_carry(
     *,
     alpha: float = 1.0,
     dtype=jnp.float32,
+    qn_dtype="bfloat16",
 ) -> SolveCarry:
-    """An all-cold carry: every row starts from the caller's ``z0``."""
+    """An all-cold carry: every row starts from the caller's ``z0``.
+
+    ``qn_dtype`` sets the storage dtype of the quasi-Newton U/V ring
+    independently of the iterate dtype (API.md "Precision policy").  The
+    default matches ``SolverConfig.qn_dtype`` so a carried solve is
+    bit-identical to a carryless one; pass ``None`` to keep the ring in
+    the iterate dtype.
+    """
     feat = (feat,) if isinstance(feat, int) else tuple(feat)
+    ring_dtype = jnp.dtype(qn_dtype) if qn_dtype is not None else dtype
     return SolveCarry(
         z=jnp.zeros((batch,) + feat, dtype),
-        lowrank=LowRank.identity(batch, feat, memory, alpha=alpha, dtype=dtype),
+        lowrank=LowRank.identity(batch, feat, memory, alpha=alpha,
+                                 dtype=ring_dtype),
         warm=jnp.zeros((batch,), bool),
         age=jnp.zeros((batch,), jnp.int32),
     )
@@ -249,6 +259,10 @@ class SolverConfig:
     # XLA cost analysis counts while-loop bodies ONCE, so roofline cells lower
     # the unrolled form (DESIGN.md / EXPERIMENTS.md §Dry-run).
     unroll: bool = False
+    # storage dtype of the quasi-Newton U/V ring. Coefficients/denominators
+    # always accumulate in f32 (API.md "Precision policy"); bf16 halves the
+    # per-iteration HBM stream at unchanged accumulate precision.
+    qn_dtype: str = "bfloat16"
 
 
 class SolveResult(NamedTuple):
@@ -309,12 +323,15 @@ def broyden_solve(
 
     Streaming structure (the fused hot path): the loop carries
     ``Hg = H_n @ g(z_n)`` so the direction costs nothing, and each iteration
-    makes exactly ONE streaming pass over the U/V buffers — a fused
-    ``matvec_multi`` computing ``H @ g(z_{n+1})`` and ``H^T @ s_n`` together.
+    is exactly ONE kernel launch and ONE streaming pass over the U/V
+    buffers — the fused ``LowRank.broyden_step`` computes ``H @ g(z_{n+1})``
+    and ``H^T @ s_n`` together, derives the denominator ``s^T H y`` from the
+    same coefficient pass, and writes the rank-one ring append in place.
     ``H @ y_n`` falls out as ``H @ g(z_{n+1}) - Hg`` (linearity), and the
     carried product is advanced to ``H_{n+1} @ g(z_{n+1})`` by a rank-one
     correction using the appended pair and the ring-evicted pair returned by
-    the fused ``apply_update`` — O(B·D), no extra U/V traffic.
+    the fused step — O(B·D), no extra U/V traffic.  The ring's storage
+    dtype is ``cfg.qn_dtype`` (default bf16; coefficients accumulate f32).
 
     Batched serving mode: ``freeze_mask: (B,) bool`` marks samples (padding
     slots, already-served requests) as converged at entry — they never move,
@@ -333,7 +350,8 @@ def broyden_solve(
     z0 = sh.state(z0)
     H0 = init_lowrank if init_lowrank is not None else carry_H
     if H0 is None:
-        H0 = LowRank.identity(bsz, feat, cfg.memory, alpha=alpha0, dtype=z0.dtype)
+        H0 = LowRank.identity(bsz, feat, cfg.memory, alpha=alpha0,
+                              dtype=jnp.dtype(cfg.qn_dtype))
     H0 = H0.constrain(sh.memory)
 
     g0 = g(z0)
@@ -358,15 +376,14 @@ def broyden_solve(
 
         s = (z_new - z).astype(jnp.float32)
         g_new32 = gz_new.astype(jnp.float32)
-        # THE per-step U/V stream: H @ g(z_new) and H^T @ s, fused.
-        Hg_new, b = H.matvec_multi((g_new32, s), (False, True))
-        Hy = Hg_new - Hg                              # H @ (g_new - g_old)
-        den = bdot(s, Hy)                             # (B,)
-        safe = jnp.abs(den) > cfg.eps
-        denom = jnp.where(safe, den, 1.0)
-        upd = active & safe
         wrapped = H.count >= H.memory                 # slot being overwritten
-        H, ev_u, ev_v = H.apply_update(s, Hy, b, denom, upd)
+        # THE per-step U/V stream: the fused broyden_step kernel computes
+        # H @ g(z_new), H^T @ s, the denominator s^T H y, AND the guarded
+        # ring append in a single launch — one pass, write included.
+        H, Hg_new, b, den, upd, ev_u, ev_v = H.broyden_step(
+            g_new32, s, Hg, active, cfg.eps)
+        Hy = Hg_new - Hg                              # H @ (g_new - g_old)
+        denom = jnp.where(jnp.abs(den) > cfg.eps, den, 1.0)
 
         # Advance the carried product to H_{n+1} @ g_new: add the appended
         # pair's contribution, remove the evicted pair's (storage precision,

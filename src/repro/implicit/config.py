@@ -55,6 +55,9 @@ class ImplicitConfig:
     backward: BackwardConfig = dataclasses.field(default_factory=BackwardConfig)
     memory: int = 24
     unroll: bool = False
+    # storage dtype of the shared quasi-Newton U/V ring (both passes read
+    # the same chain, so the knob lives at this level, not per-pass)
+    qn_dtype: str = "bfloat16"
 
     # -- internal solver-config builders ------------------------------------
 
@@ -63,12 +66,13 @@ class ImplicitConfig:
         return SolverConfig(
             max_steps=f.max_steps, tol=f.tol, memory=self.memory,
             step_size=f.step_size, opa_freq=f.opa_freq, unroll=self.unroll,
+            qn_dtype=self.qn_dtype,
         )
 
     def adjoint_cfg(self, steps: int) -> SolverConfig:
         return SolverConfig(
             max_steps=steps, tol=self.backward.tol, memory=self.memory,
-            relative=False, unroll=self.unroll,
+            relative=False, unroll=self.unroll, qn_dtype=self.qn_dtype,
         )
 
     # -- legacy-string shim --------------------------------------------------
@@ -89,6 +93,7 @@ class ImplicitConfig:
         backward_tol: float = 1e-6,
         fallback_ratio: float = 1.3,
         unroll: bool = False,
+        qn_dtype: str = "bfloat16",
     ) -> "ImplicitConfig":
         """Build from the legacy flat ``DEQConfig`` field names."""
         return cls(
@@ -103,4 +108,5 @@ class ImplicitConfig:
             ),
             memory=memory,
             unroll=unroll,
+            qn_dtype=qn_dtype,
         )

@@ -240,4 +240,4 @@ def carry_for_state(z0: Pytree, cfg: ImplicitConfig, *,
     z0_flat, _ = ravel_state(z0)
     return init_solve_carry(
         z0_flat.shape[0], z0_flat.shape[1:], cfg.memory,
-        dtype=dtype or z0_flat.dtype)
+        dtype=dtype or z0_flat.dtype, qn_dtype=cfg.qn_dtype)

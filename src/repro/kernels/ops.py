@@ -18,10 +18,18 @@ backend, and ``force_impl`` overrides globally for tests):
                      |                                   | (./test.sh kernels)
 
 Ops dispatched here: ``qn_apply`` (single-RHS SHINE inverse application),
-``qn_apply_multi`` (K stacked RHS, per-RHS H vs H^T, ONE stream over U/V —
-the hot path of every Broyden-family iteration), ``lowrank_append`` (fused
-Broyden ring-buffer update writing only the target slot row), ``attention``,
-``decode_attention``, ``rmsnorm``.
+``qn_apply_multi`` (K stacked RHS, per-RHS H vs H^T, ONE stream over U/V),
+``lowrank_append`` (fused Broyden ring-buffer update writing only the target
+slot row), ``broyden_step`` (the apply AND the append of one Broyden
+iteration in a single launch — the hot path of the forward solve),
+``attention``, ``decode_attention``, ``rmsnorm``.
+
+Precision: the qN ring may be stored bf16 (``SolverConfig.qn_dtype``); every
+path upcasts U/V tiles on read and accumulates coefficients, denominators
+and outputs in f32, so halving the storage dtype halves U/V stream bytes
+without touching the accumulation precision.  The stream counters use the
+actual ``u.dtype.itemsize``, and a ``qn_ring_bytes`` gauge labelled by dtype
+records the resident ring footprint.
 
 SPMD posture (the sharded batched fixed-point engine): the solvers pin the
 (U, V) chain batch-sharded next to the state, so on the ref path every qn
@@ -62,6 +70,7 @@ from repro.kernels.flash_attention import (
 )
 from repro.kernels.flash_xla import flash_attention_xla
 from repro.kernels.qn_apply import (
+    broyden_step_pallas,
     lowrank_append_pallas,
     qn_apply_multi_pallas,
     qn_apply_pallas,
@@ -156,6 +165,9 @@ def _record_stream(u: jax.Array, transpose: Sequence[bool]) -> None:
     reg.counter("qn_stream_rhs").inc(len(transpose))
     reg.counter("qn_stream_uv_bytes").inc(
         qn_stream_bytes(m, bsz, dim, u.dtype.itemsize, transpose))
+    # resident ring footprint by storage dtype (U + V), trace-time gauge
+    reg.gauge("qn_ring_bytes", {"dtype": jnp.dtype(u.dtype).name}).set(
+        2 * m * bsz * dim * u.dtype.itemsize)
 
 
 def _pad_memory_axis(u2, v2, mask):
@@ -288,6 +300,40 @@ def lowrank_append(u, v, s, hy, b, inv_den, slot, upd,
     )
     unflat = lambda a, lead: a.reshape(lead + feat_shape)
     return (unflat(new_u, (m, bsz)), unflat(new_v, (m, bsz)),
+            unflat(ev_u, (bsz,)), unflat(ev_v, (bsz,)))
+
+
+def broyden_step(u, v, g_new, s, hg_old, alpha, mask, slot, active, eps,
+                 impl: Impl | None = None):
+    """The whole Broyden iteration's memory work in ONE kernel launch: the
+    fused K-RHS apply (``H @ g_new``, ``H^T @ s``), the denominator
+    ``s^T H y`` and the guarded ring append.  ``hg_old`` is the carried
+    ``H @ g_old`` (so ``H y`` falls out by linearity).  Counts as exactly
+    one stream call — one fused U/V pass per solver iteration, write
+    included.
+
+    Returns ``(new_u, new_v, hg_new, b, den, ev_u, ev_v)``; see
+    ``kernels/ref.broyden_step_ref`` for the per-output contract.
+    """
+    impl = _resolve(impl)
+    _record_stream(u, (False, True))
+    if impl == "ref":
+        return ref.broyden_step_ref(u, v, g_new, s, hg_old, alpha, mask,
+                                    slot, active, eps)
+    m, bsz = u.shape[0], u.shape[1]
+    feat_shape = u.shape[2:]
+    flat = lambda a, lead: a.reshape(lead + (-1,))
+    u2, v2 = flat(u, (m, bsz)), flat(v, (m, bsz))
+    u2, v2, mask = _pad_memory_axis(u2, v2, mask)
+    new_u, new_v, hg_new, b, den, ev_u, ev_v = broyden_step_pallas(
+        u2, v2, flat(g_new, (bsz,)), flat(s, (bsz,)), flat(hg_old, (bsz,)),
+        alpha, mask, slot.astype(jnp.int32),
+        jnp.asarray(active, jnp.float32), eps=float(eps),
+        interpret=(impl == "pallas_interpret"),
+    )
+    unflat = lambda a, lead: a.reshape(lead + feat_shape)
+    return (unflat(new_u[:m], (m, bsz)), unflat(new_v[:m], (m, bsz)),
+            unflat(hg_new, (bsz,)), unflat(b, (bsz,)), den,
             unflat(ev_u, (bsz,)), unflat(ev_v, (bsz,)))
 
 

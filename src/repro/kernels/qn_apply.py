@@ -35,6 +35,22 @@ Kernels in this module:
                            no gather/scatter round-trip over the (m, B, D)
                            buffers — and returns the evicted pair so the
                            solver can rank-one-correct carried products.
+``broyden_step_pallas``    the whole Broyden iteration's memory work as ONE
+                           pallas_call: the K-RHS apply (H @ g_new, H^T @ s)
+                           AND the ring append in a single launch and a
+                           single U/V pass including the write.  The trick
+                           is the denominator: s^T H y is needed before the
+                           append can be formed, but it decomposes as
+                           alpha*(s.g_new) + sum_i mask_i (v_i.g_new)(u_i.s)
+                           - s.Hg_old — exactly the coefficient-phase
+                           products plus two cheap vector dots, so no third
+                           U/V stream is required.  Phase 0 accumulates
+                           coefficients and the denominator (and writes the
+                           OLD slot row into the aliased row outputs, making
+                           the write-backs value-identical no-ops); phase 1
+                           emits H @ g_new, H^T @ s and the guarded slot
+                           write.  Inputs may be stored bf16: both phases
+                           upcast tiles on read and accumulate in f32 VMEM.
 
 MXU alignment: the d-tile is clamped to a multiple of 128 lanes and the
 feature axis is zero-padded up to the lane boundary (never a ragged
@@ -381,3 +397,159 @@ def lowrank_append_pallas(
         new_u, new_v = new_u[..., :dim], new_v[..., :dim]
         ev_u, ev_v = ev_u[..., :dim], ev_v[..., :dim]
     return new_u, new_v, ev_u, ev_v
+
+
+# ---------------------------------------------------------------------------
+# Fused Broyden step: apply + ring append in one launch, one U/V pass
+# ---------------------------------------------------------------------------
+
+
+def _make_broyden_step_kernel(eps: float, nd: int):
+    def kernel(slot_ref, u_ref, v_ref, g_ref, s_ref, hg_ref, mask_ref,
+               alpha_ref, active_ref, new_u_ref, new_v_ref, hg_new_ref,
+               b_ref, ev_u_ref, ev_v_ref, coeff_ref, den_ref):
+        bb = pl.program_id(0)
+        ph = pl.program_id(1)
+        j = pl.program_id(2)
+        sl = slot_ref[bb]
+        u_t = u_ref[:, 0, :].astype(jnp.float32)            # (m, blk)
+        v_t = v_ref[:, 0, :].astype(jnp.float32)
+        rows = jax.lax.broadcasted_iota(jnp.int32, u_t.shape, 0)
+        is_slot = rows == sl
+        old_u = jnp.sum(jnp.where(is_slot, u_t, 0.0), axis=0)   # (blk,)
+        old_v = jnp.sum(jnp.where(is_slot, v_t, 0.0), axis=0)
+        gj = g_ref[0, :]
+        sj = s_ref[0, :]
+
+        @pl.when((ph == 0) & (j == 0))
+        def _init():
+            coeff_ref[...] = jnp.zeros_like(coeff_ref)
+            den_ref[...] = jnp.zeros_like(den_ref)
+
+        @pl.when(ph == 0)
+        def _coeff_phase():
+            coeff_ref[0, 0, :] += v_t @ gj                  # v_i . g_new
+            coeff_ref[0, 1, :] += u_t @ sj                  # u_i . s
+            den_ref[0, 0] += (alpha_ref[0] * jnp.sum(sj * gj)
+                              - jnp.sum(sj * hg_ref[0, :]))
+            # write the OLD row into the aliased row outputs so phase-0
+            # write-backs are value-identical no-ops against the u/v tiles
+            # phase 1 re-reads; this read doubles as the eviction path
+            new_u_ref[0, 0, :] = old_u.astype(new_u_ref.dtype)
+            new_v_ref[0, 0, :] = old_v.astype(new_v_ref.dtype)
+            ev_u_ref[0, :] = old_u.astype(ev_u_ref.dtype)
+            ev_v_ref[0, :] = old_v.astype(ev_v_ref.dtype)
+            hg_new_ref[0, :] = jnp.zeros_like(hg_new_ref[0, :])
+            b_ref[0, :] = jnp.zeros_like(b_ref[0, :])
+
+        @pl.when((ph == 0) & (j == nd - 1))
+        def _den_final():
+            # all d-tiles accumulated: fold in the rank-one part of
+            # den = alpha*(s.g_new) + sum_i mask_i (v_i.g)(u_i.s) - s.Hg_old
+            den_ref[0, 0] += jnp.sum(
+                mask_ref[:, 0] * coeff_ref[0, 0, :] * coeff_ref[0, 1, :])
+
+        @pl.when(ph == 1)
+        def _apply_phase():
+            maskv = mask_ref[:, 0]
+            cg = coeff_ref[0, 0, :] * maskv
+            cs = coeff_ref[0, 1, :] * maskv
+            alpha = alpha_ref[0]
+            hg_new_j = alpha * gj + cg @ u_t                # (blk,)
+            b_j = alpha * sj + cs @ v_t
+            den = den_ref[0, 0]
+            safe = jnp.abs(den) > eps
+            upd = safe & (active_ref[0] > 0.5)
+            inv_den = jnp.where(safe, 1.0 / jnp.where(safe, den, 1.0), 0.0)
+            hy_j = hg_new_j - hg_ref[0, :]
+            a_j = (sj - hy_j) * inv_den
+            hg_new_ref[0, :] = hg_new_j
+            b_ref[0, :] = b_j
+            ev_u_ref[0, :] = old_u.astype(ev_u_ref.dtype)
+            ev_v_ref[0, :] = old_v.astype(ev_v_ref.dtype)
+            new_u_ref[0, 0, :] = jnp.where(
+                upd, a_j.astype(new_u_ref.dtype),
+                old_u.astype(new_u_ref.dtype))
+            new_v_ref[0, 0, :] = jnp.where(
+                upd, b_j.astype(new_v_ref.dtype),
+                old_v.astype(new_v_ref.dtype))
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_d", "interpret"))
+def broyden_step_pallas(
+    u: jax.Array,        # (m, B, D) qN ring (storage dtype: f32 or bf16)
+    v: jax.Array,        # (m, B, D)
+    g_new: jax.Array,    # (B, D) residual at the new iterate
+    s: jax.Array,        # (B, D) step z_new - z
+    hg_old: jax.Array,   # (B, D) carried H @ g_old
+    alpha: jax.Array,    # scalar f32
+    mask: jax.Array,     # (m, B) f32 validity of the PRE-update ring
+    slot: jax.Array,     # (B,) int32 ring slot to write
+    active: jax.Array,   # (B,) f32 1.0 where the sample still iterates
+    *,
+    eps: float,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> tuple[jax.Array, ...]:
+    """One Broyden iteration = one kernel launch and one U/V pass.
+
+    Grid ``(B, 2, nd)``: phase 0 streams the u/v tiles once, accumulating
+    the (2, m) coefficient block and the denominator ``s^T H y`` in
+    VMEM-resident f32 outputs; phase 1 streams them again to emit
+    ``H @ g_new`` / ``H^T @ s`` and writes the guarded rank-one pair into
+    ring slot ``slot[bb]`` via input/output aliasing.  Total U/V traffic is
+    the mixed-flag apply model (4·m·B·D·itemsize) — the append costs no
+    extra stream because the written row rides the aliased row output.
+
+    Returns ``(new_u, new_v, hg_new, b, den, ev_u, ev_v)``; ``hg_new``/``b``
+    are f32, ``den`` is (B,) f32, ``ev_u``/``ev_v`` (storage dtype) are the
+    slot's previous contents for the caller's carried-product correction.
+    """
+    m, bsz, dim = u.shape
+    block_d, u, v, g_new, s, hg_old = _pad_features(
+        block_d, dim, u, v, g_new, s, hg_old)
+    dim_p = u.shape[-1]
+    nd = dim_p // block_d
+    alpha_arr = jnp.broadcast_to(jnp.asarray(alpha, jnp.float32), (1,))
+
+    tile = pl.BlockSpec((m, 1, block_d), lambda bb, ph, j, sl: (0, bb, j))
+    row = pl.BlockSpec((1, 1, block_d), lambda bb, ph, j, sl: (sl[bb], bb, j))
+    vec = pl.BlockSpec((1, block_d), lambda bb, ph, j, sl: (bb, j))
+    mask_spec = pl.BlockSpec((m, 1), lambda bb, ph, j, sl: (0, bb))
+    one = pl.BlockSpec((1,), lambda bb, ph, j, sl: (0,))
+    per_b = pl.BlockSpec((1,), lambda bb, ph, j, sl: (bb,))
+    coeff_spec = pl.BlockSpec((1, 2, m), lambda bb, ph, j, sl: (bb, 0, 0))
+    den_spec = pl.BlockSpec((1, 1), lambda bb, ph, j, sl: (bb, 0))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bsz, 2, nd),
+        in_specs=[tile, tile, vec, vec, vec, mask_spec, one, per_b],
+        out_specs=[row, row, vec, vec, vec, vec, coeff_spec, den_spec],
+    )
+    outs = pl.pallas_call(
+        _make_broyden_step_kernel(eps, nd),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(u.shape, u.dtype),
+            jax.ShapeDtypeStruct(v.shape, v.dtype),
+            jax.ShapeDtypeStruct((bsz, dim_p), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, dim_p), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, dim_p), u.dtype),
+            jax.ShapeDtypeStruct((bsz, dim_p), v.dtype),
+            jax.ShapeDtypeStruct((bsz, 2, m), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, 1), jnp.float32),
+        ],
+        # aliasing indices count the scalar-prefetch operand: slot=0, u=1, v=2
+        input_output_aliases={1: 0, 2: 1},
+        interpret=interpret,
+    )(slot, u, v, g_new.astype(jnp.float32), s.astype(jnp.float32),
+      hg_old.astype(jnp.float32), mask, alpha_arr, active.astype(jnp.float32))
+    new_u, new_v, hg_new, b, ev_u, ev_v, _coeff, den = outs
+    if dim_p != dim:
+        new_u, new_v = new_u[..., :dim], new_v[..., :dim]
+        hg_new, b = hg_new[..., :dim], b[..., :dim]
+        ev_u, ev_v = ev_u[..., :dim], ev_v[..., :dim]
+    return new_u, new_v, hg_new, b, den[:, 0], ev_u, ev_v

@@ -99,6 +99,45 @@ def lowrank_append_ref(
     return new_u, new_v, ev_u, ev_v
 
 
+def broyden_step_ref(
+    u: jax.Array,       # (m, B, *F) qN ring (storage dtype)
+    v: jax.Array,       # (m, B, *F)
+    g_new: jax.Array,   # (B, *F) residual at the new iterate (f32)
+    s: jax.Array,       # (B, *F) step z_new - z (f32)
+    hg_old: jax.Array,  # (B, *F) carried H @ g_old (f32)
+    alpha: jax.Array,   # scalar
+    mask: jax.Array,    # (m, B) validity of ring slots (pre-update H)
+    slot: jax.Array,    # (B,) int32 ring slot to write
+    active: jax.Array,  # (B,) bool / 0-1: sample still iterating
+    eps: float,
+) -> tuple[jax.Array, ...]:
+    """One full Broyden iteration's memory work: the fused-kernel oracle.
+
+    Composes the two ops a Broyden step used to launch separately — the
+    K-RHS apply (``H @ g_new``, ``H^T @ s``) and the ring append — plus the
+    denominator ``s^T H y`` that links them.  ``H y = H g_new - H g_old``
+    by linearity, so the carried ``hg_old`` saves a third RHS.
+
+    Returns ``(new_u, new_v, hg_new, b, den, ev_u, ev_v)`` where ``hg_new =
+    H @ g_new`` and ``b = H^T s`` are f32, ``den = s^T H y`` is (B,) f32,
+    and ``ev_u/ev_v`` are slot ``slot``'s previous contents (storage dtype).
+    Samples where ``active`` is false or ``|den| <= eps`` leave the ring
+    untouched.
+    """
+    xs = jnp.stack([g_new.astype(jnp.float32), s.astype(jnp.float32)])
+    out = qn_apply_multi_ref(u, v, xs, alpha, mask, (False, True))
+    hg_new, b = out[0], out[1]
+    hy = hg_new - hg_old.astype(jnp.float32)
+    axes = tuple(range(1, hy.ndim))
+    den = jnp.sum(s.astype(jnp.float32) * hy, axis=axes)
+    safe = jnp.abs(den) > eps
+    upd = (active.astype(jnp.float32) > 0.5) & safe
+    inv_den = jnp.where(safe, 1.0 / jnp.where(safe, den, 1.0), 0.0)
+    new_u, new_v, ev_u, ev_v = lowrank_append_ref(
+        u, v, s, hy, b, inv_den, slot, upd)
+    return new_u, new_v, hg_new, b, den, ev_u, ev_v
+
+
 def _gqa_expand(k: jax.Array, num_heads: int) -> jax.Array:
     """(B, T, KV, hd) -> (B, T, H, hd) by repeating KV head groups."""
     b, t, kv, hd = k.shape

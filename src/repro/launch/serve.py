@@ -35,6 +35,10 @@ def main() -> None:
     ap.add_argument("--carry-max-age", type=int, default=None,
                     help="DEQ carry staleness bound: evict per-slot solve "
                          "state older than this many solves")
+    ap.add_argument("--qn-dtype", default=None,
+                    choices=("bfloat16", "float32"),
+                    help="storage dtype of the quasi-Newton U/V ring "
+                         "(default bf16; coefficients accumulate f32)")
     ap.add_argument("--metrics-out", default="",
                     help="write a metrics-registry JSON snapshot here after "
                          "the drain (enables the jit metrics bridge)")
@@ -69,6 +73,10 @@ def main() -> None:
     if args.arch not in ARCHS:
         raise SystemExit(f"unknown arch {args.arch!r}; have {sorted(ARCHS)}")
     cfg = smoke_config(args.arch, deq=args.deq)
+    if args.qn_dtype:
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, deq=dataclasses.replace(cfg.deq, qn_dtype=args.qn_dtype))
     if cfg.family == "audio":
         raise SystemExit("encoder-only arch: no autoregressive serving")
     if args.mesh:

@@ -54,6 +54,10 @@ def main() -> None:
     ap.add_argument("--checkpoint-lean", action="store_true",
                     help="omit the u/v quasi-Newton carry ring from "
                          "checkpoints (restore zero-fills it)")
+    ap.add_argument("--qn-dtype", default=None,
+                    choices=("bfloat16", "float32"),
+                    help="storage dtype of the quasi-Newton U/V ring "
+                         "(default bf16; coefficients accumulate f32)")
     args = ap.parse_args()
 
     # observability switches are trace-time gates: enable BEFORE the first
@@ -65,12 +69,14 @@ def main() -> None:
 
     cfg = smoke_config(args.arch, deq=args.deq) if args.smoke \
         else get_config(args.arch, deq=args.deq)
-    if args.deq and (args.backward or args.solver):
+    if args.backward or args.solver or args.qn_dtype:
         deq = cfg.deq
         if args.backward:
             deq = dataclasses.replace(deq, backward=args.backward)
         if args.solver:
             deq = dataclasses.replace(deq, solver=args.solver)
+        if args.qn_dtype:
+            deq = dataclasses.replace(deq, qn_dtype=args.qn_dtype)
         cfg = dataclasses.replace(cfg, deq=deq)
 
     if args.mesh == "none":
@@ -86,6 +92,7 @@ def main() -> None:
         checkpoint_dir=args.checkpoint_dir,
         checkpoint_every=args.checkpoint_every,
         checkpoint_lean=args.checkpoint_lean,
+        qn_dtype=args.qn_dtype or cfg.deq.qn_dtype,
         zero1=(ctx.mesh is not None),
     )
 

@@ -299,7 +299,7 @@ def deq_solve_carry(cfg: ModelConfig, batch: int, seq: int) -> SolveCarry:
     consecutive solves (train steps, decode tokens)."""
     dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
     return init_solve_carry(batch, (seq, cfg.d_model), cfg.deq.memory,
-                            dtype=dtype)
+                            dtype=dtype, qn_dtype=cfg.deq.qn_dtype)
 
 
 def apply_stack(
@@ -417,6 +417,7 @@ def _apply_deq(params, x_emb, cfg, ctx, positions, caches, cache_index, train,
         solver=d.solver, max_steps=d.max_steps, tol=d.tol, memory=d.memory,
         backward=d.backward, refine_steps=d.refine_steps,
         backward_max_steps=d.backward_max_steps, unroll=d.unroll,
+        qn_dtype=d.qn_dtype,
     )
 
     # IMPORTANT: everything traced must flow through the custom_vjp's

@@ -12,7 +12,9 @@
 #                          + kernel sweep (both emitting JUnit XML under
 #                          results/junit/) + the bench perf-regression gate
 #                          (benchmarks/check_regression.py, including the
-#                          observability-overhead gate) + a train rehearsal
+#                          observability-overhead gate) + the roofline
+#                          report with its qN bytes-accounting gate
+#                          (benchmarks/roofline.py) + a train rehearsal
 #                          and a serve drain with --metrics-out/--trace-out
 #                          (artifacts under results/obs/) — no network,
 #                          no installs
@@ -54,6 +56,11 @@ case "${1:-}" in
     python -m pytest -q tests/test_kernels.py \
       --junitxml=results/junit/kernels.xml
     python -m benchmarks.check_regression
+    # roofline report + qN bytes-accounting gate: trace-time stream counters
+    # must match the analytic dtype-aware byte model exactly (bf16 ring =
+    # half the f32 U/V bytes); report lands at
+    # results/benchmarks/ROOFLINE_report.json (CI uploads it as an artifact)
+    python -m benchmarks.roofline
     # observability rehearsals: a real train run and a real serve drain
     # must produce a metrics snapshot + a Perfetto-loadable trace
     mkdir -p results/obs

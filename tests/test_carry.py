@@ -290,6 +290,33 @@ def test_train_state_carries_solve_state_across_steps(tmp_path):
         np.asarray(state.carry.lowrank.u, np.float32))
 
 
+def test_bf16_ring_checkpoint_dtype_roundtrip(tmp_path):
+    """The half-precision qN ring must survive save/restore BIT-FOR-BIT:
+    npz has no bfloat16, so the manager stores bf16 leaves widened to f32
+    (lossless) and the restore casts them back to the template dtype."""
+    carry = init_solve_carry(3, 16, 4, dtype=jnp.float32,
+                             qn_dtype="bfloat16")
+    assert carry.lowrank.u.dtype == jnp.bfloat16
+    assert carry.z.dtype == jnp.float32
+    ring = jax.random.normal(jax.random.PRNGKey(9), carry.lowrank.u.shape,
+                             jnp.bfloat16)
+    carry = dataclasses.replace(
+        carry, lowrank=dataclasses.replace(carry.lowrank, u=ring, v=-ring,
+                                           count=jnp.array([4, 1, 0])))
+    mgr = CheckpointManager(str(tmp_path), keep=1, async_save=False)
+    mgr.save(1, carry)
+    _, restored, _ = mgr.restore(jax.eval_shape(lambda: carry))
+    assert restored.lowrank.u.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(restored.lowrank.u, np.float32),
+        np.asarray(carry.lowrank.u, np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(restored.lowrank.v, np.float32),
+        np.asarray(carry.lowrank.v, np.float32))
+    np.testing.assert_array_equal(np.asarray(restored.lowrank.count),
+                                  np.asarray(carry.lowrank.count))
+
+
 def test_restore_pre_carry_checkpoint_zero_fills_cold_carry(tmp_path):
     """A checkpoint written WITHOUT a carry (pre-lifecycle run, or a custom
     loop) must restore into the carry-bearing TrainState with a cold carry —

@@ -165,6 +165,115 @@ def test_lowrank_append_pallas_vs_oracle(m, bsz, d, dtype):
 
 
 # ---------------------------------------------------------------------------
+# broyden_step (single-launch fused apply + denominator + ring append)
+# ---------------------------------------------------------------------------
+
+
+def _broyden_step_inputs(m, bsz, d, dtype, key):
+    ks = jax.random.split(jax.random.fold_in(KEY, key), 6)
+    u = jax.random.normal(ks[0], (m, bsz, d), dtype)
+    v = jax.random.normal(ks[1], (m, bsz, d), dtype)
+    g = jax.random.normal(ks[2], (bsz, d))
+    s = jax.random.normal(ks[3], (bsz, d))
+    hg = jax.random.normal(ks[4], (bsz, d))
+    # ragged ring: rows span empty, partial and wrapped (count > m)
+    count = jax.random.randint(ks[5], (bsz,), 0, 2 * m)
+    slot = (count % m).astype(jnp.int32)
+    mask = (jnp.arange(m)[:, None]
+            < jnp.minimum(count, m)[None, :]).astype(jnp.float32)
+    return u, v, g, s, hg, mask, slot
+
+
+@pytest.mark.parametrize("m,bsz,d", [(1, 1, 8), (5, 2, 777), (16, 3, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_broyden_step_pallas_vs_oracle(m, bsz, d, dtype):
+    """Fused kernel vs the ref oracle: ragged ring counts, m % 8 != 0 (the
+    (5, 2, 777) case also hits feature-lane padding), freeze-mask rows."""
+    u, v, g, s, hg, mask, slot = _broyden_step_inputs(
+        m, bsz, d, dtype, m * 131 + d)
+    active = (jnp.arange(bsz) % 2 == 0).astype(jnp.float32)  # frozen rows
+    alpha = jnp.float32(0.7)
+    want = ref.broyden_step_ref(u, v, g, s, hg, alpha, mask, slot, active,
+                                1e-8)
+    got = ops.broyden_step(u, v, g, s, hg, alpha, mask, slot, active, 1e-8,
+                           impl="pallas_interpret")
+    assert got[0].dtype == dtype and got[1].dtype == dtype  # ring storage
+    assert got[2].dtype == jnp.float32                      # f32 accumulate
+    # normalized error: on random data the denominator s^T H y is a small
+    # difference of O(m sqrt(d)) terms, so 1/den amplifies the (benign,
+    # order-of-accumulation) f32 discrepancy of the appended pair by the
+    # cancellation factor — compare relative to each output's magnitude
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    for got_a, want_a in zip(got, want):
+        ga = np.asarray(got_a, np.float32)
+        wa = np.asarray(want_a, np.float32)
+        denom = 1.0 + np.max(np.abs(wa))
+        assert np.max(np.abs(ga - wa)) / denom < tol
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_broyden_step_ref_matches_unfused_composition(dtype):
+    """The oracle must equal the legacy unfused sequence it replaces:
+    qn_apply_multi (H@g_new, H^T@s) -> denominator -> lowrank_append."""
+    m, bsz, d = 6, 4, 100
+    u, v, g, s, hg, mask, slot = _broyden_step_inputs(m, bsz, d, dtype, 42)
+    active = jnp.ones((bsz,), jnp.float32)
+    alpha = jnp.float32(0.9)
+    eps = 1e-8
+
+    out = ref.qn_apply_multi_ref(
+        u, v, jnp.stack([g, s]), alpha, mask, (False, True))
+    hg_new, b = out[0], out[1]
+    hy = hg_new - hg
+    den = jnp.sum(s * hy, axis=1)
+    safe = jnp.abs(den) > eps
+    upd = (active > 0.5) & safe
+    inv_den = jnp.where(safe, 1.0 / jnp.where(safe, den, 1.0), 0.0)
+    want_append = ref.lowrank_append_ref(u, v, s, hy, b, inv_den, slot, upd)
+
+    got = ref.broyden_step_ref(u, v, g, s, hg, alpha, mask, slot, active, eps)
+    want = (*want_append[:2], hg_new, b, den, *want_append[2:])
+    for got_a, want_a in zip(got, want):
+        np.testing.assert_allclose(np.asarray(got_a, np.float32),
+                                   np.asarray(want_a, np.float32),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_broyden_step_freeze_rows_leave_ring_untouched(dtype):
+    """Inactive rows must come back bit-for-bit: no append, same slot row."""
+    m, bsz, d = 4, 3, 64
+    u, v, g, s, hg, mask, slot = _broyden_step_inputs(m, bsz, d, dtype, 7)
+    active = jnp.zeros((bsz,), jnp.float32)
+    got = ops.broyden_step(u, v, g, s, hg, jnp.float32(1.0), mask, slot,
+                           active, 1e-8, impl="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(u))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(v))
+
+
+def test_broyden_step_multidim_features():
+    """(B, S, d) solver states flatten through the dispatch and come back."""
+    m, bsz, seq, d = 3, 2, 4, 40
+    ks = jax.random.split(jax.random.fold_in(KEY, 1234), 6)
+    u = jax.random.normal(ks[0], (m, bsz, seq, d))
+    v = jax.random.normal(ks[1], (m, bsz, seq, d))
+    g = jax.random.normal(ks[2], (bsz, seq, d))
+    s = jax.random.normal(ks[3], (bsz, seq, d))
+    hg = jax.random.normal(ks[4], (bsz, seq, d))
+    slot = jnp.zeros((bsz,), jnp.int32)
+    mask = jnp.ones((m, bsz), jnp.float32)
+    active = jnp.ones((bsz,), jnp.float32)
+    want = ref.broyden_step_ref(u, v, g, s, hg, jnp.float32(1.0), mask, slot,
+                                active, 1e-8)
+    got = ops.broyden_step(u, v, g, s, hg, jnp.float32(1.0), mask, slot,
+                           active, 1e-8, impl="pallas_interpret")
+    for got_a, want_a in zip(got, want):
+        assert got_a.shape == want_a.shape
+        np.testing.assert_allclose(np.asarray(got_a), np.asarray(want_a),
+                                   rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
 # rmsnorm
 # ---------------------------------------------------------------------------
 

@@ -35,6 +35,26 @@ def test_broyden_converges_linear():
                                rtol=1e-4, atol=1e-4)
 
 
+def test_bf16_ring_iteration_parity():
+    """Convergence safety of the default bf16 qN ring (gated, not assumed):
+    the half-precision chain must reach the SAME fixed point within a small
+    iteration slack of the f32 ring — storage rounding may cost a couple of
+    tail iterations, never convergence."""
+    g, z_star, *_ = _linear_problem(jax.random.PRNGKey(3), bsz=8, d=64)
+    z0 = jnp.zeros_like(z_star)
+    out = {}
+    for qdt in ("bfloat16", "float32"):
+        res = broyden_solve(g, z0, SolverConfig(
+            max_steps=60, tol=1e-6, memory=40, qn_dtype=qdt))
+        assert bool(res.converged.all()), qdt
+        assert res.lowrank.u.dtype == jnp.dtype(qdt)
+        out[qdt] = res
+    assert int(out["bfloat16"].n_steps) <= int(out["float32"].n_steps) + 2
+    np.testing.assert_allclose(np.asarray(out["bfloat16"].z),
+                               np.asarray(out["float32"].z),
+                               rtol=1e-3, atol=1e-3)
+
+
 def test_broyden_trace_monotone_tail():
     """Residual trace should show (weak) overall decrease on a contraction."""
     g, z_star, *_ = _linear_problem(jax.random.PRNGKey(1))
