@@ -198,6 +198,12 @@ def run() -> list[dict]:
 
     rows.extend(bench_warm_start.bench_rows())
 
+    # the cross-request prefix-cache row rides the record the same way: its
+    # warm-arm prefill iteration total is deterministic on fixed seeds
+    from benchmarks import bench_prefix_cache
+
+    rows.extend(bench_prefix_cache.bench_rows())
+
     # CSV to stdout only: the canonical persisted record is run.py's
     # BENCH_kernels.json (+ BENCH_metrics.json) — no stray kernels.json
     print_csv("kernels", rows)

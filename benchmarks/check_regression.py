@@ -46,6 +46,8 @@ disables it; ``--obs-overhead`` runs ONLY it.
 from __future__ import annotations
 
 import argparse
+import contextlib
+import io
 import json
 import sys
 from pathlib import Path
@@ -233,6 +235,30 @@ def check_obs_overhead(*, ratio: float, slack_ms: float, reps: int) -> int:
     return 0 if ok else 1
 
 
+class _Tee(io.TextIOBase):
+    """Mirror writes to several text streams (stdout + the report buffer)."""
+
+    def __init__(self, *streams):
+        self._streams = streams
+
+    def write(self, s):
+        for st in self._streams:
+            st.write(s)
+        return len(s)
+
+    def flush(self):
+        for st in self._streams:
+            st.flush()
+
+
+def _append_summary(path: Path, body: str, status: int) -> None:
+    """Append a markdown regression report (GitHub step-summary flavoured)."""
+    verdict = "PASS" if status == 0 else "FAIL"
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with path.open("a") as fh:
+        fh.write(f"## Bench regression gate: {verdict}\n\n```\n{body}```\n")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", type=Path, default=BASELINE)
@@ -249,8 +275,22 @@ def main() -> int:
     ap.add_argument("--obs-ratio", type=float, default=1.05)
     ap.add_argument("--obs-slack-ms", type=float, default=2.0)
     ap.add_argument("--obs-reps", type=int, default=5)
+    ap.add_argument("--summary", type=Path, default=None,
+                    help="append a markdown PASS/FAIL report of the gate's "
+                         "output to this file (point it at "
+                         "$GITHUB_STEP_SUMMARY in CI)")
     args = ap.parse_args()
 
+    if args.summary is None:
+        return _run(args)
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(_Tee(sys.stdout, buf)):
+        status = _run(args)
+    _append_summary(args.summary, buf.getvalue(), status)
+    return status
+
+
+def _run(args) -> int:
     if args.obs_overhead:
         return check_obs_overhead(ratio=args.obs_ratio,
                                   slack_ms=args.obs_slack_ms,

@@ -22,7 +22,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: bilevel,opa,deq,spectral,"
-                         "nlls,kernels,warm_start,roofline")
+                         "nlls,kernels,warm_start,prefix_cache,roofline")
     ap.add_argument("--fast", action="store_true",
                     help="reduced iteration counts")
     args = ap.parse_args()
@@ -71,6 +71,12 @@ def main() -> None:
         sections.append(
             ("warm-start lifecycle (cold vs carried solves)",
              bench_warm_start.run))
+    # same embedding rule for the prefix-cache serve-drain row
+    if want("prefix_cache") and (only is not None and "kernels" not in only):
+        from benchmarks import bench_prefix_cache
+        sections.append(
+            ("prefix carry cache (cross-request prefill reuse)",
+             bench_prefix_cache.run))
     if want("roofline"):
         from benchmarks import roofline
         sections.append(("roofline (dry-run derived)", roofline.run))

@@ -43,8 +43,12 @@ from repro.core.solvers import (
 from repro.implicit.engine import (
     CarryCache,
     CoalescedBatch,
+    PrefixCarryIndex,
+    PrefixEntry,
+    PrefixMatch,
     batched_solve,
     coalesce_states,
+    prefix_hashes,
     write_carry_rows,
     write_carry_slot,
 )
@@ -73,6 +77,9 @@ __all__ = [
     "ForwardConfig",
     "ImplicitConfig",
     "ImplicitStats",
+    "PrefixCarryIndex",
+    "PrefixEntry",
+    "PrefixMatch",
     "Registry",
     "SOLVERS",
     "SolveCarry",
@@ -90,6 +97,7 @@ __all__ = [
     "init_solve_carry",
     "jfb_cotangent",
     "pack_state",
+    "prefix_hashes",
     "ravel_state",
     "register_estimator",
     "register_solver",

@@ -29,10 +29,12 @@ freeze mask.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Callable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.solvers import SolveCarry, reset_carry_rows
 from repro.implicit.config import ImplicitConfig
@@ -240,8 +242,6 @@ class CarryCache:
         self.carry = carry
         if self.max_age is None:
             return
-        import numpy as np
-
         # age is a small (slots,) vector; the host round-trip is trivial
         # next to the solve that produced the carry
         stale = np.asarray(carry.age) > self.max_age
@@ -249,3 +249,226 @@ class CarryCache:
         if n:
             self.carry = reset_carry_rows(self.carry, jnp.asarray(stale))
             self._count("stale", n)
+
+
+# ---------------------------------------------------------------------------
+# Cross-request prefix carry cache (the prefix-cache analogue of CarryCache)
+# ---------------------------------------------------------------------------
+
+
+_PREFIX_HASH_MOD = (1 << 61) - 1
+_PREFIX_HASH_MUL = 1_000_003
+_PREFIX_HASH_SEED = 7919
+
+
+def prefix_hashes(tokens: Sequence[int]) -> list[int]:
+    """Rolling (polynomial) hashes of every prefix of ``tokens``.
+
+    ``out[k]`` covers ``tokens[:k]`` (``out[0]`` is the empty-prefix seed).
+    One O(len) pass per lookup; index entries are keyed by ``out[L]`` so a
+    longest-prefix-match probes exactly one dict slot per stored length.
+    """
+    out = [_PREFIX_HASH_SEED]
+    acc = _PREFIX_HASH_SEED
+    for t in tokens:
+        acc = (acc * _PREFIX_HASH_MUL + int(t) + 1) % _PREFIX_HASH_MOD
+        out.append(acc)
+    return out
+
+
+@dataclasses.dataclass
+class PrefixEntry:
+    """One cached prefix: the solve carry snapshot at a token boundary.
+
+    ``z`` is the (L, *feat) equilibrium slice over the prefix positions;
+    ``u``/``v`` the donor's quasi-Newton ring restricted to the same
+    positions (``(m, L, *feat)``; zero-padded pairs act as identity on any
+    suffix subspace a consumer appends) with ``count`` valid slots.  Host
+    arrays — the index never holds device memory alive.
+    """
+
+    tokens: tuple[int, ...]
+    z: Any
+    u: Any
+    v: Any
+    count: int
+    born: int        # index clock at (re)publication — staleness anchor
+    last_used: int   # index clock at last lease/publication — LRU anchor
+    refs: int = 0    # in-flight leases; ref'd entries are never evicted
+    hits: int = 0
+
+    @property
+    def length(self) -> int:
+        return len(self.tokens)
+
+
+class PrefixMatch(NamedTuple):
+    """A leased lookup result: release via ``PrefixCarryIndex.release``."""
+
+    entry: PrefixEntry
+    length: int   # matched prefix length (== entry.length)
+    exact: bool   # the whole prompt matched (full hit vs partial hit)
+
+
+class PrefixCarryIndex:
+    """Host-side cross-request prefix cache of solve-carry snapshots.
+
+    SHINE's reuse move — share the forward pass's inverse estimate instead
+    of recomputing it — applied ACROSS requests: two prompts sharing a
+    token prefix converge (causally) to the same prefix equilibrium, so the
+    carry computed for one prefill (iterate + qN ring at the divergence
+    point) is a valid warm start for the other.  The serving loop publishes
+    every completed prefill's carry here and consults the index at
+    admission; see ``runtime/serving.ServeLoop``.
+
+    Keying: entries are keyed by a rolling hash of the token prefix and
+    stored at ``block``-aligned boundaries plus the full prompt length, so
+    a lookup finds the longest stored prefix of the query (full prompt
+    match = exact hit, shorter boundary = partial hit).  Hash collisions
+    are excluded by comparing the stored token tuple.  Publishing a prefix
+    that is already stored refreshes the entry (dedup: shared prefixes
+    across prompts are stored once).
+
+    Eviction reuses the PR 6 staleness machinery's shape: ``slots`` bounds
+    capacity with LRU eviction, ``max_age`` bounds how many index
+    operations (≈ admitted requests) an entry may survive without being
+    republished.  Entries with a live ref (leased to an in-flight prefill)
+    are never evicted — capacity may transiently overflow until release.
+    Every eviction lands in ``evictions_by_reason`` and the registry
+    counter ``prefix_cache_evictions_total{reason=lru|stale}``; occupancy
+    is mirrored to the ``prefix_cache_entries`` / ``prefix_cache_tokens``
+    gauges.
+    """
+
+    def __init__(self, slots: int = 32, *, block: int = 4,
+                 max_age: int | None = None):
+        if slots < 0:
+            raise ValueError(f"slots must be >= 0, got {slots}")
+        if block < 1:
+            raise ValueError(f"block must be >= 1, got {block}")
+        if max_age is not None and max_age < 1:
+            raise ValueError(f"max_age must be >= 1, got {max_age}")
+        self.slots = slots
+        self.block = block
+        self.max_age = max_age
+        self._entries: dict[int, PrefixEntry] = {}
+        self._clock = 0
+        self.published = 0
+        self.lookups = 0
+        self.hits = 0
+        self.evictions_by_reason = {"lru": 0, "stale": 0}
+
+    # -- bookkeeping ---------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def tokens_held(self) -> int:
+        return sum(e.length for e in self._entries.values())
+
+    def stats(self) -> dict:
+        return {"entries": len(self), "tokens": self.tokens_held(),
+                "published": self.published, "lookups": self.lookups,
+                "hits": self.hits, "evictions": dict(self.evictions_by_reason)}
+
+    def _publish_gauges(self) -> None:
+        obs_metrics.record_prefix_occupancy(len(self), self.tokens_held())
+
+    def _evict(self, key: int, reason: str) -> None:
+        del self._entries[key]
+        self.evictions_by_reason[reason] += 1
+        obs_metrics.default_registry().counter(
+            "prefix_cache_evictions_total", {"reason": reason}).inc()
+
+    def _sweep_stale(self) -> None:
+        if self.max_age is None:
+            return
+        stale = [k for k, e in self._entries.items()
+                 if e.refs == 0 and self._clock - e.born > self.max_age]
+        for k in stale:
+            self._evict(k, "stale")
+
+    def _evict_lru(self) -> None:
+        while len(self._entries) > self.slots:
+            victims = [(e.last_used, k) for k, e in self._entries.items()
+                       if e.refs == 0]
+            if not victims:
+                return  # everything leased: transient overflow until release
+            self._evict(min(victims)[1], "lru")
+
+    # -- the cache interface -------------------------------------------
+
+    def publish(self, tokens: Sequence[int], z, u=None, v=None,
+                count: int = 0) -> int:
+        """Store a completed prefill's carry snapshot for ``tokens``.
+
+        ``z``: the (L, *feat) converged equilibrium over the prompt;
+        ``u``/``v``: the donor's (m, L, *feat) quasi-Newton ring buffers
+        with ``count`` valid slots (``None`` stores an iterate-only entry).
+        The snapshot is sliced at ``block``-aligned boundaries plus the full
+        length so shorter overlaps remain matchable; returns the number of
+        NEW entries created (0 = the whole prefix chain was already cached).
+        """
+        self._clock += 1
+        self._sweep_stale()
+        n = len(tokens)
+        if n == 0:
+            return 0
+        toks = tuple(int(t) for t in tokens)
+        hashes = prefix_hashes(toks)
+        lengths = sorted({min(self.block * k, n)
+                          for k in range(1, n // self.block + 2)} | {n})
+        created = 0
+        for L in lengths:
+            key = hashes[L]
+            e = self._entries.get(key)
+            if e is not None and e.tokens == toks[:L]:
+                # dedup: refresh the existing entry instead of re-slicing
+                e.born = e.last_used = self._clock
+                continue
+            ring = u is not None and v is not None and count > 0
+            self._entries[key] = PrefixEntry(
+                tokens=toks[:L],
+                z=np.ascontiguousarray(np.asarray(z)[:L]),
+                u=np.ascontiguousarray(np.asarray(u)[:, :L]) if ring else None,
+                v=np.ascontiguousarray(np.asarray(v)[:, :L]) if ring else None,
+                count=int(count) if ring else 0,
+                born=self._clock, last_used=self._clock,
+            )
+            created += 1
+        self.published += 1
+        self._evict_lru()
+        self._publish_gauges()
+        return created
+
+    def lookup(self, tokens: Sequence[int]) -> PrefixMatch | None:
+        """Longest-prefix-match for ``tokens``; leases the entry (its ref
+        count protects it from eviction) until ``release`` is called."""
+        self._clock += 1
+        self._sweep_stale()
+        self.lookups += 1
+        toks = tuple(int(t) for t in tokens)
+        hashes = prefix_hashes(toks)
+        present = sorted({e.length for e in self._entries.values()},
+                         reverse=True)
+        for L in present:
+            if L > len(toks):
+                continue
+            e = self._entries.get(hashes[L])
+            if e is not None and e.tokens == toks[:L]:
+                e.refs += 1
+                e.hits += 1
+                e.last_used = self._clock
+                self.hits += 1
+                return PrefixMatch(entry=e, length=L, exact=L == len(toks))
+        return None
+
+    def release(self, match: PrefixMatch | PrefixEntry) -> None:
+        """Return a lease taken by ``lookup`` (idempotence NOT provided —
+        release exactly once per successful lookup)."""
+        e = match.entry if isinstance(match, PrefixMatch) else match
+        if e.refs <= 0:
+            raise ValueError("release without a matching lookup lease")
+        e.refs -= 1
+        self._evict_lru()
+        self._publish_gauges()

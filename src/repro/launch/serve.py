@@ -35,6 +35,24 @@ def main() -> None:
     ap.add_argument("--carry-max-age", type=int, default=None,
                     help="DEQ carry staleness bound: evict per-slot solve "
                          "state older than this many solves")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="DEQ only: cross-request prefix carry cache — seed "
+                         "each prefill solve from the longest cached prompt "
+                         "prefix instead of cold-starting")
+    ap.add_argument("--prefix-cache-slots", type=int, default=32,
+                    help="prefix-cache capacity (entries); 0 = always-miss "
+                         "cold accounting arm")
+    ap.add_argument("--prefix-block", type=int, default=4,
+                    help="prefix-cache publication granularity: entries are "
+                         "stored at multiples of this many tokens (plus the "
+                         "full prompt length)")
+    ap.add_argument("--prefix-max-age", type=int, default=None,
+                    help="prefix-cache staleness bound: evict entries not "
+                         "republished within this many cache operations")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="synthetic prompt stream: all prompts share this "
+                         "many leading tokens (exercises the prefix cache); "
+                         "0 = fully random prompts")
     ap.add_argument("--qn-dtype", default=None,
                     choices=("bfloat16", "float32"),
                     help="storage dtype of the quasi-Newton U/V ring "
@@ -92,12 +110,27 @@ def main() -> None:
     params = lm.init_params(cfg, jax.random.PRNGKey(args.seed))
 
     loop = ServeLoop(params, cfg, ctx, slots=args.slots, max_len=args.max_len,
-                     carry_max_age=args.carry_max_age)
+                     carry_max_age=args.carry_max_age,
+                     prefix_cache=args.prefix_cache,
+                     prefix_cache_slots=args.prefix_cache_slots,
+                     prefix_block=args.prefix_block,
+                     prefix_max_age=args.prefix_max_age)
     rng = np.random.default_rng(args.seed)
+    if args.shared_prefix:
+        # overlapping-prefix stream: one shared base + fixed-length random
+        # tails, so waves coalesce at one prompt length and later requests
+        # hit the prefixes published by earlier ones
+        base = rng.integers(2, cfg.vocab_size, size=args.shared_prefix).tolist()
+        prompts = [base + rng.integers(2, cfg.vocab_size, size=4).tolist()
+                   for _ in range(args.requests)]
+    else:
+        prompts = [
+            rng.integers(2, cfg.vocab_size,
+                         size=int(rng.integers(4, 12))).tolist()
+            for _ in range(args.requests)
+        ]
     reqs = [
-        Request(uid=i,
-                prompt=rng.integers(2, cfg.vocab_size, size=int(rng.integers(4, 12))).tolist(),
-                max_new_tokens=args.max_new_tokens)
+        Request(uid=i, prompt=prompts[i], max_new_tokens=args.max_new_tokens)
         for i in range(args.requests)
     ]
     t0 = time.perf_counter()
@@ -108,6 +141,12 @@ def main() -> None:
           f"in {dt:.2f}s ({tokens/dt:.1f} tok/s)")
     for r in reqs[:4]:
         print(f"  req {r.uid}: prompt[{len(r.prompt)}] -> {r.out}")
+    if loop.prefix is not None:
+        st = loop.prefix.stats()
+        print(f"prefix cache: {st['hits']}/{st['lookups']} lookups hit, "
+              f"{st['entries']} entries ({st['tokens']} tokens) held, "
+              f"evictions={st['evictions']}; prefill iters "
+              f"{loop.prefill_iters:.0f} total, {loop.saved_iters:.0f} saved")
 
     if args.metrics_out:
         obs_metrics.default_registry().write_json(args.metrics_out)

@@ -27,6 +27,7 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.implicit import (
@@ -589,8 +590,65 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
     return caches
 
 
+def prefix_seed_carry(cfg: ModelConfig, batch: int, seq: int,
+                      snapshots: list) -> tuple[SolveCarry, Array]:
+    """Assemble a PREFILL-shaped carry from per-row prefix-cache snapshots.
+
+    ``snapshots``: one entry per batch row — ``None`` for a cache miss
+    (the row stays cold, bit-identical to a carryless prefill) or a host
+    tuple ``(z, u, v, count)`` with ``z: (L, d)`` the cached prefix
+    equilibrium and ``u/v: (m, L, d)`` the donor's quasi-Newton ring over
+    the prefix positions (``None``/``count=0`` for an iterate-only seed).
+    Suffix positions (``>= L``) are zero here; :func:`prefill` overwrites
+    them with the live ``x_emb`` so the suffix still cold-starts AT the
+    injection, and the zero-padded ring pairs act as identity on the
+    suffix subspace.  Returns ``(carry, prefix_len)`` where ``prefix_len:
+    (B,) int32`` is per-row ``L`` (0 for misses).
+    """
+    if len(snapshots) != batch:
+        raise ValueError(f"{len(snapshots)} snapshots for batch {batch}")
+    tmpl = deq_solve_carry(cfg, batch, seq)
+    m = tmpl.memory
+    z = np.zeros(tmpl.z.shape, tmpl.z.dtype)
+    u = np.zeros(tmpl.lowrank.u.shape, tmpl.lowrank.u.dtype)
+    v = np.zeros(tmpl.lowrank.v.shape, tmpl.lowrank.v.dtype)
+    count = np.zeros((batch,), np.int32)
+    warm = np.zeros((batch,), bool)
+    plen = np.zeros((batch,), np.int32)
+    for i, snap in enumerate(snapshots):
+        if snap is None:
+            continue
+        sz, su, sv, sc = snap
+        sz = np.asarray(sz)
+        length = sz.shape[0]
+        if length > seq:
+            raise ValueError(f"snapshot row {i}: prefix {length} > seq {seq}")
+        warm[i] = True
+        plen[i] = length
+        z[i, :length] = sz.astype(z.dtype)
+        if su is not None and sv is not None and sc:
+            su, sv = np.asarray(su), np.asarray(sv)
+            if su.shape[0] != m:
+                raise ValueError(
+                    f"snapshot row {i}: ring memory {su.shape[0]} != {m}")
+            u[:, i, :length] = su.astype(u.dtype)
+            v[:, i, :length] = sv.astype(v.dtype)
+            count[i] = min(int(sc), m)
+    carry = SolveCarry(
+        z=jnp.asarray(z),
+        lowrank=dataclasses.replace(
+            tmpl.lowrank, u=jnp.asarray(u), v=jnp.asarray(v),
+            count=jnp.asarray(count)),
+        warm=jnp.asarray(warm),
+        age=tmpl.age,
+    )
+    return carry, jnp.asarray(plen)
+
+
 def prefill(params, batch: dict, cfg: ModelConfig, ctx: ShardCtx,
-            max_len: int, carry: SolveCarry | None = None):
+            max_len: int, carry: SolveCarry | None = None,
+            prefix_carry: SolveCarry | None = None,
+            prefix_len: Array | None = None):
     """Encode a prompt; returns (logits, caches, lengths).
 
     ``carry`` must be a DECODE-shaped carry (``deq_solve_carry(cfg, B, 1)``):
@@ -598,22 +656,49 @@ def prefill(params, batch: dict, cfg: ModelConfig, ctx: ShardCtx,
     problem), but the last token's equilibrium SEEDS the carry so the first
     decode step warm-starts — token-to-token reuse begins at token 0.  With
     a carry the return is ``(logits, caches, lengths, carry)``.
+
+    ``prefix_carry`` + ``prefix_len`` (DEQ only) seed the PREFILL solve
+    itself from a cross-request prefix-cache snapshot (see
+    :func:`prefix_seed_carry`): warm rows start at
+    ``where(pos < prefix_len, cached_z, x_emb)`` with the cached ring
+    chain, cold rows are bit-identical to a carryless prefill.
+    ``prefix_len`` is traced, so one compiled program serves every match
+    length.  The return gains ``(solve_carry, deq_steps)`` — the converged
+    prefill carry (for publication back to the index) and the solver's
+    step count (iteration accounting).
     """
     x, pos = _input_embedding(params, batch, cfg, ctx)
     b = x.shape[0]
     caches = init_cache(cfg, b, max_len)
     idx0 = jnp.zeros((b,), jnp.int32)
-    x, caches, _aux = apply_stack(
-        params, x, cfg, ctx, pos, caches, idx0, train=False
+    solve_carry = None
+    if prefix_carry is not None:
+        if not cfg.deq.enabled:
+            raise ValueError("prefix_carry requires cfg.deq.enabled")
+        if prefix_len is None:
+            raise ValueError("prefix_carry requires prefix_len")
+        # live suffix positions start at the injection (x_emb), cached
+        # prefix positions at the donor equilibrium — assembled inside the
+        # jitted program so match lengths never retrace
+        pmask = (pos < prefix_len[:, None])[..., None]
+        solve_carry = dataclasses.replace(
+            prefix_carry,
+            z=jnp.where(pmask, prefix_carry.z.astype(x.dtype), x))
+    x, caches, aux = apply_stack(
+        params, x, cfg, ctx, pos, caches, idx0, train=False,
+        carry=solve_carry,
     )
     # for the DEQ path, the stack output IS the equilibrium z*
     z_last = x[:, -1:, :]
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = lm_logits(params["embed"], x, cfg, ctx)
     lengths = jnp.full((b,), x.shape[1], jnp.int32)
-    if carry is None:
-        return logits, caches, lengths
-    return logits, caches, lengths, seed_carry(carry, z_last)
+    out = (logits, caches, lengths)
+    if carry is not None:
+        out = out + (seed_carry(carry, z_last),)
+    if prefix_carry is not None:
+        out = out + (aux["solve_carry"], aux["deq_steps"])
+    return out
 
 
 def decode_step(params, caches, tokens: Array, cache_index: Array,

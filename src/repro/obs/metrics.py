@@ -41,6 +41,8 @@ import numpy as np
 __all__ = [
     "MetricsRegistry", "default_registry", "set_enabled", "enabled",
     "emit_scalar", "record_solve", "record_backward",
+    "record_prefix_lookup", "record_prefix_occupancy",
+    "record_prefix_saved_iters",
 ]
 
 _LabelsKey = tuple[tuple[str, str], ...]
@@ -337,3 +339,38 @@ def record_backward(estimator: str, adj) -> None:
                 float(fb.sum()))
 
     jax.debug.callback(cb, adj.n_steps, adj.residual, adj.fallback_mask)
+
+
+# -- prefix carry cache (host-side: plain Python, unconditional) ------------
+
+
+def record_prefix_lookup(outcome: str, *, matched_tokens: int = 0,
+                         prompt_tokens: int = 0) -> None:
+    """Record one prefix-cache admission lookup.
+
+    ``outcome`` is ``hit`` (the whole prompt matched), ``partial`` (a
+    shorter stored boundary matched) or ``miss``.  Token totals feed the
+    hit-coverage ratio (matched / prompt tokens across all lookups).
+    """
+    reg = _REGISTRY
+    reg.counter("prefix_cache_lookups_total", {"outcome": outcome}).inc()
+    if matched_tokens:
+        reg.counter("prefix_cache_matched_tokens_total").inc(
+            float(matched_tokens))
+    if prompt_tokens:
+        reg.counter("prefix_cache_prompt_tokens_total").inc(
+            float(prompt_tokens))
+
+
+def record_prefix_occupancy(entries: int, tokens: int) -> None:
+    """Mirror the index's current occupancy into gauges."""
+    reg = _REGISTRY
+    reg.gauge("prefix_cache_entries").set(float(entries))
+    reg.gauge("prefix_cache_tokens").set(float(tokens))
+
+
+def record_prefix_saved_iters(saved) -> None:
+    """Append per-request Broyden iterations saved vs the cold reference
+    (one value per seeded prefill) to the ``prefix_cache_saved_iters``
+    series."""
+    _REGISTRY.series("prefix_cache_saved_iters").record(saved)

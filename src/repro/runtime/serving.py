@@ -39,7 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.implicit import CarryCache, write_carry_rows
+from repro.implicit import CarryCache, PrefixCarryIndex, write_carry_rows
 from repro.models import lm
 from repro.obs import metrics as obs_metrics
 from repro.obs import tracing as obs_tracing
@@ -61,7 +61,9 @@ class Request:
 class ServeLoop:
     def __init__(self, params, cfg: ModelConfig, ctx: ShardCtx, *,
                  slots: int = 4, max_len: int = 256, eos_id: int = 1,
-                 greedy: bool = True, carry_max_age: int | None = None):
+                 greedy: bool = True, carry_max_age: int | None = None,
+                 prefix_cache: bool = False, prefix_cache_slots: int = 32,
+                 prefix_block: int = 4, prefix_max_age: int | None = None):
         self.params, self.cfg, self.ctx = params, cfg, ctx
         self.slots, self.max_len, self.eos = slots, max_len, eos_id
         self.greedy = greedy
@@ -83,6 +85,23 @@ class ServeLoop:
             lambda: lm.deq_solve_carry(cfg, slots, 1), slots,
             max_age=carry_max_age,
         ) if cfg.deq.enabled else None
+        # cross-request prefix carry cache (DEQ only): admission consults
+        # the index before each batched prefill, seeds hit rows from the
+        # stored carry snapshot, and publishes every completed prefill's
+        # carry back.  ``prefix_cache_slots=0`` is the cold accounting arm:
+        # every lookup misses (bit-identical to cache-off) but prefill
+        # iteration totals are still tracked, so warm/cold ratios compare
+        # like for like.  On non-DEQ models the flag is a no-op (there is
+        # no solve state to share).
+        self.prefix = PrefixCarryIndex(
+            prefix_cache_slots, block=prefix_block, max_age=prefix_max_age,
+        ) if (prefix_cache and cfg.deq.enabled) else None
+        # total Broyden iterations spent in prefill solves (prefix path
+        # only), plus the per-(plen, wave) cold reference used to credit
+        # saved iterations on hit waves
+        self.prefill_iters = 0.0
+        self.saved_iters = 0.0
+        self._cold_prefill_ref: dict[tuple[int, int], float] = {}
 
         if self.carries is None:
             self._decode = jax.jit(
@@ -127,13 +146,53 @@ class ServeLoop:
         with obs_tracing.span("admit", wave=len(wave)):
             self._prefill_wave(wave)
 
+    def _prefix_lookup(self, plen: int,
+                       group: list[tuple[int, Request]]) -> tuple[list, list]:
+        """Consult the prefix index for every request in a coalesced group.
+
+        Returns ``(matches, snapshots)`` aligned with the group: matches
+        hold the leases (released after the wave's prefill lands),
+        snapshots feed :func:`lm.prefix_seed_carry` (``None`` = cold row).
+        """
+        matches, snapshots = [], []
+        for _slot, req in group:
+            m = self.prefix.lookup(req.prompt)
+            matches.append(m)
+            if m is None:
+                snapshots.append(None)
+                obs_metrics.record_prefix_lookup("miss", prompt_tokens=plen)
+            else:
+                e = m.entry
+                snapshots.append((e.z, e.u, e.v, e.count))
+                obs_metrics.record_prefix_lookup(
+                    "hit" if m.exact else "partial",
+                    matched_tokens=m.length, prompt_tokens=plen)
+        return matches, snapshots
+
+    def _prefix_publish(self, group: list[tuple[int, Request]],
+                        pf_carry, matches: list) -> None:
+        """Publish the wave's converged prefill carries and drop leases."""
+        z_np = np.asarray(jax.device_get(pf_carry.z))
+        u_np = np.asarray(jax.device_get(pf_carry.lowrank.u))
+        v_np = np.asarray(jax.device_get(pf_carry.lowrank.v))
+        c_np = np.asarray(jax.device_get(pf_carry.lowrank.count))
+        for row, (_slot, req) in enumerate(group):
+            self.prefix.publish(req.prompt, z_np[row], u_np[:, row],
+                                v_np[:, row], int(c_np[row]))
+        for m in matches:
+            if m is not None:
+                self.prefix.release(m)
+
     def _prefill_wave(self, wave: list[tuple[int, Request]]) -> None:
         # coalesce: one batched prefill per prompt length present in the wave
         by_len: dict[int, list[tuple[int, Request]]] = {}
         for slot, req in wave:
             by_len.setdefault(len(req.prompt), []).append((slot, req))
         for plen, group in by_len.items():
-            key = (plen, len(group))
+            # the prefix-on program takes two extra traced args (the seed
+            # carry + per-row match lengths) — a distinct jit cache entry,
+            # but ONE program per (plen, wave) across all match lengths
+            key = (plen, len(group), self.prefix is not None)
             if key not in self._prefill_cache:
                 if self.carries is None:
                     self._prefill_cache[key] = jax.jit(
@@ -142,7 +201,7 @@ class ServeLoop:
                             self.max_len
                         )
                     )
-                else:
+                elif self.prefix is None:
                     # wave-shaped cold carry: prefill seeds it with the last
                     # token's equilibrium (token-to-token reuse from token 0)
                     wave_carry = lm.deq_solve_carry(self.cfg, len(group), 1)
@@ -152,12 +211,43 @@ class ServeLoop:
                             self.max_len, carry=_c
                         )
                     )
+                else:
+                    wave_carry = lm.deq_solve_carry(self.cfg, len(group), 1)
+                    self._prefill_cache[key] = jax.jit(
+                        lambda p, toks, pc, pl, _c=wave_carry: lm.prefill(
+                            p, {"tokens": toks}, self.cfg, self.ctx,
+                            self.max_len, carry=_c, prefix_carry=pc,
+                            prefix_len=pl
+                        )
+                    )
             toks = jnp.asarray([req.prompt for _, req in group], jnp.int32)
+            matches = None
             with obs_tracing.span("prefill", plen=plen, wave=len(group)):
-                out = self._prefill_cache[key](self.params, toks)
+                if self.prefix is None:
+                    out = self._prefill_cache[key](self.params, toks)
+                else:
+                    matches, snapshots = self._prefix_lookup(plen, group)
+                    pc, pl = lm.prefix_seed_carry(
+                        self.cfg, len(group), plen, snapshots)
+                    out = self._prefill_cache[key](self.params, toks, pc, pl)
                 logits = jax.block_until_ready(out[0])
             cache_new = out[1]
             seeded = out[3] if self.carries is not None else None
+            if self.prefix is not None:
+                pf_carry, steps = out[4], float(jax.device_get(out[5]))
+                self.prefill_iters += steps
+                ck = (plen, len(group))
+                if any(m is not None for m in matches):
+                    ref = self._cold_prefill_ref.get(ck)
+                    if ref is not None:
+                        saved = max(0.0, ref - steps)
+                        self.saved_iters += saved
+                        obs_metrics.record_prefix_saved_iters([saved])
+                else:
+                    # all-miss wave == the cold path bit-for-bit: its step
+                    # count is the cold reference for this program shape
+                    self._cold_prefill_ref.setdefault(ck, steps)
+                self._prefix_publish(group, pf_carry, matches)
             self.prefill_calls += 1
             self.prefill_requests += len(group)
             self._metrics.counter("serve_prefill_calls").inc()

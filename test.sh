@@ -8,16 +8,21 @@
 #                          pallas_interpret parametrization in
 #                          tests/test_kernels.py, so the TPU code path is
 #                          exercised on CPU (extra pytest args pass through)
+#   ./test.sh obs          observability rehearsals only — exactly what the
+#                          CI observability job runs: a real train run, a
+#                          serve drain, and a prefix-cache serve drain over
+#                          overlapping prompts, each with
+#                          --metrics-out/--trace-out; validates the
+#                          snapshots (schema, non-empty traces, >= 1
+#                          prefix-cache hit) under results/obs/
 #   ./test.sh ci           what CI runs, reproducible offline: tier-1 suite
 #                          + kernel sweep (both emitting JUnit XML under
 #                          results/junit/) + the bench perf-regression gate
 #                          (benchmarks/check_regression.py, including the
 #                          observability-overhead gate) + the roofline
 #                          report with its qN bytes-accounting gate
-#                          (benchmarks/roofline.py) + a train rehearsal
-#                          and a serve drain with --metrics-out/--trace-out
-#                          (artifacts under results/obs/) — no network,
-#                          no installs
+#                          (benchmarks/roofline.py) + the obs rehearsals
+#                          (./test.sh obs) — no network, no installs
 #   ./test.sh lint         ruff when available, else a dependency-free
 #                          compileall pass (the container has no linter)
 #   ./test.sh tests/x.py   pass any pytest args through (ungated)
@@ -41,13 +46,57 @@ run_gated() {
     --baseline tests/baseline_failures.txt --pytest-exit "$code"
 }
 
+run_obs() {
+  # observability rehearsals: a real train run and real serve drains must
+  # produce a metrics snapshot + a Perfetto-loadable trace.  ONE function
+  # for local runs and the CI observability job, so they cannot diverge.
+  mkdir -p results/obs
+  python -m repro.launch.train --smoke --deq --steps 2 --batch 2 --seq 16 \
+    --metrics-out results/obs/train_metrics.json \
+    --trace-out results/obs/train_trace.json
+  python -m repro.launch.serve --deq --requests 6 --slots 2 \
+    --max-new-tokens 4 --carry-max-age 3 \
+    --metrics-out results/obs/serve_metrics.json \
+    --trace-out results/obs/serve_trace.json
+  # prefix-cache drain: overlapping prompts (6 shared tokens) through the
+  # cross-request prefix carry cache — the snapshot must record hits
+  python -m repro.launch.serve --deq --requests 6 --slots 2 \
+    --max-new-tokens 4 --prefix-cache --prefix-cache-slots 8 \
+    --shared-prefix 6 \
+    --metrics-out results/obs/serve_prefix_metrics.json \
+    --trace-out results/obs/serve_prefix_trace.json
+  python - <<'EOF'
+import json
+for p in ("results/obs/train_metrics.json", "results/obs/serve_metrics.json",
+          "results/obs/serve_prefix_metrics.json"):
+    snap = json.load(open(p))
+    assert snap["schema"] == "repro.obs.metrics/v1" and snap["metrics"], p
+for p in ("results/obs/train_trace.json", "results/obs/serve_trace.json",
+          "results/obs/serve_prefix_trace.json"):
+    tr = json.load(open(p))
+    assert tr["traceEvents"], p
+snap = json.load(open("results/obs/serve_prefix_metrics.json"))
+hits = sum(m["value"]
+           for m in snap["metrics"]
+           if m["name"] == "prefix_cache_lookups_total"
+           and m["labels"].get("outcome") in ("hit", "partial"))
+assert hits >= 1, "prefix-cache drain recorded no hits"
+print(f"obs: artifacts validated (results/obs/), prefix-cache hits={hits:.0f}")
+EOF
+}
+
 case "${1:-}" in
   "")
     run_gated results/junit/tier1.xml -q
     ;;
   kernels)
     shift
+    mkdir -p results/junit
     exec python -m pytest -q tests/test_kernels.py "$@"
+    ;;
+  obs)
+    shift
+    run_obs
     ;;
   ci)
     shift
@@ -61,26 +110,7 @@ case "${1:-}" in
     # half the f32 U/V bytes); report lands at
     # results/benchmarks/ROOFLINE_report.json (CI uploads it as an artifact)
     python -m benchmarks.roofline
-    # observability rehearsals: a real train run and a real serve drain
-    # must produce a metrics snapshot + a Perfetto-loadable trace
-    mkdir -p results/obs
-    python -m repro.launch.train --smoke --deq --steps 2 --batch 2 --seq 16 \
-      --metrics-out results/obs/train_metrics.json \
-      --trace-out results/obs/train_trace.json
-    python -m repro.launch.serve --deq --requests 6 --slots 2 \
-      --max-new-tokens 4 --carry-max-age 3 \
-      --metrics-out results/obs/serve_metrics.json \
-      --trace-out results/obs/serve_trace.json
-    python - <<'EOF'
-import json
-for p in ("results/obs/train_metrics.json", "results/obs/serve_metrics.json"):
-    snap = json.load(open(p))
-    assert snap["schema"] == "repro.obs.metrics/v1" and snap["metrics"], p
-for p in ("results/obs/train_trace.json", "results/obs/serve_trace.json"):
-    tr = json.load(open(p))
-    assert tr["traceEvents"], p
-print("ci: observability artifacts validated (results/obs/)")
-EOF
+    run_obs
     echo "ci: tier-1 + kernel sweep + bench gates + obs rehearsals all green"
     ;;
   lint)

@@ -1,0 +1,335 @@
+"""Cross-request prefix carry cache tests.
+
+Three layers, mirroring the feature's stack:
+
+  * index (``PrefixCarryIndex``): rolling-hash keying, longest-prefix-match
+    lookup, publish dedupe, ref-count/LRU/staleness eviction interplay;
+  * model (``lm.prefix_seed_carry`` + ``lm.prefill(prefix_carry=...)``):
+    the correctness bar — an exact hit reaches the cold fixed point within
+    solver tolerance in fewer Broyden iterations, a full miss is
+    BIT-FOR-BIT the cold path;
+  * loop (``ServeLoop(prefix_cache=True)``): drain determinism, iteration
+    savings vs the ``prefix_cache_slots=0`` cold accounting arm, and the
+    obs counters/gauges/series the CI rehearsal asserts on.
+
+The LM tests scale the DEQ block weights down (0.3x) so the random-init
+map is genuinely contractive: cold prefill then converges in ~19 Broyden
+steps at tol=1e-5, leaving room for warm starts to save iterations (at
+1.0x the smoke init is not contractive and every solve runs to max_steps,
+which would mask any warm-start effect).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import smoke_config
+from repro.implicit import PrefixCarryIndex, prefix_hashes
+from repro.models import lm
+from repro.obs import metrics as obs_metrics
+from repro.parallel.sharding import ShardCtx
+from repro.runtime.serving import Request, ServeLoop
+
+CTX = ShardCtx.for_mesh(None)
+
+
+# ---------------------------------------------------------------------------
+# index: hashing, matching, eviction
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_hashes_rolling_property():
+    toks = [5, 9, 2, 7, 7, 3]
+    h = prefix_hashes(toks)
+    assert len(h) == len(toks) + 1
+    for k in range(len(toks) + 1):
+        assert h[k] == prefix_hashes(toks[:k])[k]
+    # extending the prefix always moves the hash
+    assert len(set(h)) == len(h)
+    # a different token at the same position moves it too
+    assert prefix_hashes([5, 9, 1])[3] != h[3]
+
+
+def _snap(length, d=4):
+    return np.arange(length * d, dtype=np.float32).reshape(length, d)
+
+
+def test_lookup_prefers_longest_match_and_flags_exact():
+    idx = PrefixCarryIndex(slots=8, block=2)
+    toks = [3, 5, 7, 11, 13]
+    idx.publish(toks, _snap(5))  # stores boundaries {2, 4, 5}
+
+    exact = idx.lookup(toks)
+    assert exact is not None and exact.exact and exact.length == 5
+
+    # shares 4 tokens then diverges: the len-4 boundary wins over len-2
+    partial = idx.lookup([3, 5, 7, 11, 99])
+    assert partial is not None and not partial.exact and partial.length == 4
+    assert partial.entry.tokens == (3, 5, 7, 11)
+
+    assert idx.lookup([4, 5, 7]) is None  # diverges before any boundary
+    idx.release(exact)
+    idx.release(partial)
+    assert idx.stats()["hits"] == 2
+
+
+def test_publish_dedupes_shared_prefixes():
+    idx = PrefixCarryIndex(slots=16, block=2)
+    base = [3, 5, 7, 11]
+    created_first = idx.publish(base + [13, 17], _snap(6))   # {2, 4, 6}
+    # same base, different tail: boundaries 2 and 4 are already stored
+    created_second = idx.publish(base + [19, 23], _snap(6))
+    assert created_first == 3
+    assert created_second == 1
+    assert len(idx) == 4
+
+
+def test_lru_eviction_skips_leased_entries():
+    idx = PrefixCarryIndex(slots=2, block=8)
+    idx.publish([1, 2, 3], _snap(3))     # one boundary: full length only
+    lease = idx.lookup([1, 2, 3])
+    assert lease is not None
+    # two more single-entry publishes overflow the 2-slot index; the leased
+    # entry is untouchable, so the OTHER unleased entry is the LRU victim
+    idx.publish([4, 5, 6], _snap(3))
+    idx.publish([7, 8, 9], _snap(3))
+    assert idx.evictions_by_reason["lru"] >= 1
+    assert idx.lookup([1, 2, 3]) is not None  # survived while leased
+    reg = obs_metrics.default_registry()
+    assert reg.value("prefix_cache_evictions_total", {"reason": "lru"}) >= 1
+
+
+def test_stale_eviction_with_max_age():
+    idx = PrefixCarryIndex(slots=8, block=8, max_age=2)
+    idx.publish([1, 2, 3], _snap(3))
+    # every index operation advances the clock; after > max_age operations
+    # without republication the entry is swept
+    for _ in range(4):
+        assert idx.lookup([9, 9, 9]) is None
+    assert len(idx) == 0
+    assert idx.evictions_by_reason["stale"] >= 1
+    assert idx.lookup([1, 2, 3]) is None
+
+
+def test_release_without_lease_raises():
+    idx = PrefixCarryIndex(slots=4, block=4)
+    idx.publish([1, 2], _snap(2))
+    m = idx.lookup([1, 2])
+    idx.release(m)
+    with pytest.raises(ValueError):
+        idx.release(m)
+
+
+# ---------------------------------------------------------------------------
+# model: seeded prefill parity + savings
+# ---------------------------------------------------------------------------
+
+
+def _deq_cfg(tol=1e-5, max_steps=100):
+    cfg = smoke_config("minicpm-2b", deq=True)
+    return dataclasses.replace(
+        cfg, num_layers=2, d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+        vocab_size=128, head_dim=16, dtype="float32",
+        deq=dataclasses.replace(cfg.deq, max_steps=max_steps, tol=tol,
+                                memory=16))
+
+
+def _deq_params(cfg, scale=0.3, seed=0):
+    params = lm.init_params(cfg, jax.random.PRNGKey(seed))
+    params["deq_blocks"] = jax.tree_util.tree_map(
+        lambda a: a * scale, params["deq_blocks"])
+    return params
+
+
+def test_prefix_seed_carry_shapes_and_validation():
+    cfg = _deq_cfg()
+    z = np.ones((3, cfg.d_model), np.float32)
+    u = np.ones((cfg.deq.memory, 3, cfg.d_model), np.float32)
+    carry, plen = lm.prefix_seed_carry(
+        cfg, 2, 6, [None, (z, u, u, 40)])
+    assert carry.z.shape == (2, 6, cfg.d_model)
+    np.testing.assert_array_equal(np.asarray(carry.warm), [False, True])
+    np.testing.assert_array_equal(np.asarray(plen), [0, 3])
+    # ring count clips to the configured memory
+    assert int(carry.lowrank.count[1]) == cfg.deq.memory
+    assert int(carry.lowrank.count[0]) == 0
+    # suffix positions of the seeded row are zero (prefill overwrites them
+    # with the live x_emb inside the jitted program)
+    assert float(jnp.abs(carry.z[1, 3:]).max()) == 0.0
+
+    with pytest.raises(ValueError):  # prefix longer than the prompt
+        lm.prefix_seed_carry(cfg, 1, 2, [(z, None, None, 0)])
+    with pytest.raises(ValueError):  # ring memory mismatch
+        lm.prefix_seed_carry(cfg, 1, 6, [(z, u[:3], u[:3], 2)])
+    with pytest.raises(ValueError):  # one snapshot per row
+        lm.prefix_seed_carry(cfg, 2, 6, [None])
+
+
+def test_full_miss_is_bit_for_bit_the_cold_path():
+    """An all-miss seeded prefill must equal the legacy (carryless) prefill
+    EXACTLY — the prefix path may never perturb uncached traffic."""
+    cfg = _deq_cfg()
+    params = _deq_params(cfg)
+    toks = jnp.asarray(np.random.default_rng(1).integers(
+        2, cfg.vocab_size, size=(2, 8)), jnp.int32)
+
+    ref_logits, _, _ = lm.prefill(params, {"tokens": toks}, cfg, CTX, 16)
+    pc, pl = lm.prefix_seed_carry(cfg, 2, 8, [None, None])
+    logits, _, _, _pf, steps = lm.prefill(
+        params, {"tokens": toks}, cfg, CTX, 16, prefix_carry=pc,
+        prefix_len=pl)
+    np.testing.assert_array_equal(np.asarray(ref_logits), np.asarray(logits))
+    assert float(steps) > 0
+
+
+def _cold_and_snapshot(cfg, params, toks, seq):
+    """One all-cold prefix-path prefill; returns (logits, steps, snapshot)."""
+    pc, pl = lm.prefix_seed_carry(cfg, 1, seq, [None])
+    logits, _, _, pf, steps = lm.prefill(
+        params, {"tokens": toks}, cfg, CTX, 32, prefix_carry=pc,
+        prefix_len=pl)
+    snap = (np.asarray(pf.z[0]), np.asarray(pf.lowrank.u[:, 0]),
+            np.asarray(pf.lowrank.v[:, 0]), int(pf.lowrank.count[0]))
+    return logits, float(steps), snap
+
+
+def test_exact_hit_reaches_cold_fixed_point_with_fewer_iters():
+    cfg = _deq_cfg()
+    params = _deq_params(cfg)
+    toks = jnp.asarray(np.random.default_rng(1).integers(
+        2, cfg.vocab_size, size=(1, 12)), jnp.int32)
+    cold_logits, cold_steps, snap = _cold_and_snapshot(cfg, params, toks, 12)
+
+    pc, pl = lm.prefix_seed_carry(cfg, 1, 12, [snap])
+    hit_logits, _, _, _pf, hit_steps = lm.prefill(
+        params, {"tokens": toks}, cfg, CTX, 32, prefix_carry=pc,
+        prefix_len=pl)
+    assert float(hit_steps) < cold_steps
+    # parity within solver tolerance (measured: bit-for-bit — the seed IS
+    # the fixed point, so the solve exits before its first update)
+    np.testing.assert_allclose(np.asarray(hit_logits),
+                               np.asarray(cold_logits), atol=2e-4)
+
+
+def test_partial_hit_same_fixed_point_fewer_iters():
+    cfg = _deq_cfg()
+    params = _deq_params(cfg)
+    toks = jnp.asarray(np.random.default_rng(1).integers(
+        2, cfg.vocab_size, size=(1, 12)), jnp.int32)
+    cold_logits, cold_steps, snap = _cold_and_snapshot(cfg, params, toks, 12)
+    z, u, v, count = snap
+
+    # seed only the first 8 positions (a shorter-boundary match), ring
+    # restricted to the prefix subspace
+    pc, pl = lm.prefix_seed_carry(cfg, 1, 12, [(z[:8], u[:, :8], v[:, :8],
+                                                count)])
+    logits, _, _, _pf, steps = lm.prefill(
+        params, {"tokens": toks}, cfg, CTX, 32, prefix_carry=pc,
+        prefix_len=pl)
+    assert 0 < float(steps) < cold_steps
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(cold_logits),
+                               atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# loop: drain determinism, savings, observability
+# ---------------------------------------------------------------------------
+
+
+def _overlap_prompts(n=5, base_len=8, tail_len=4, vocab=128, seed=42):
+    rng = np.random.default_rng(seed)
+    base = rng.integers(2, vocab, size=base_len).tolist()
+    p0 = base + rng.integers(2, vocab, size=tail_len).tolist()
+    out = [p0, p0]
+    while len(out) < n:
+        out.append(base + rng.integers(2, vocab, size=tail_len).tolist())
+    return out
+
+
+def _drain(params, cfg, prompts, **kw):
+    loop = ServeLoop(params, cfg, CTX, slots=1, max_len=32, eos_id=-1, **kw)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=2)
+            for i, p in enumerate(prompts)]
+    loop.drain(reqs)
+    return loop, [r.out for r in reqs]
+
+
+def test_serve_drain_savings_and_determinism():
+    """Warm arm (cache on) vs the slots=0 cold accounting arm over an
+    overlapping-prefix stream: identical generated tokens, >= 1 exact hit,
+    and measurably fewer total prefill Broyden iterations."""
+    cfg = _deq_cfg()
+    params = _deq_params(cfg)
+    prompts = _overlap_prompts()
+
+    cold_loop, cold_out = _drain(params, cfg, prompts, prefix_cache=True,
+                                 prefix_cache_slots=0)
+    warm_loop, warm_out = _drain(params, cfg, prompts, prefix_cache=True,
+                                 prefix_cache_slots=16)
+    assert warm_out == cold_out
+    st = warm_loop.prefix.stats()
+    assert st["hits"] >= 1
+    assert cold_loop.prefix.stats()["hits"] == 0
+    assert warm_loop.prefill_iters < cold_loop.prefill_iters
+    assert warm_loop.saved_iters > 0
+
+
+def test_serve_cache_on_disjoint_prompts_matches_cache_off():
+    """All-miss traffic: the cache-on loop must emit exactly the cache-off
+    loop's tokens (the miss path is the cold path)."""
+    cfg = _deq_cfg()
+    params = _deq_params(cfg)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(2, cfg.vocab_size, size=6).tolist()
+               for _ in range(3)]
+
+    off_loop, off_out = _drain(params, cfg, prompts)
+    on_loop, on_out = _drain(params, cfg, prompts, prefix_cache=True,
+                             prefix_cache_slots=0)
+    assert on_out == off_out
+    assert on_loop.prefix.stats()["hits"] == 0
+
+
+def test_serve_prefix_cache_with_carry_max_age():
+    """The prefix index and the per-slot CarryCache staleness bound compose:
+    a drain with BOTH enabled still emits the cold arm's tokens."""
+    cfg = _deq_cfg()
+    params = _deq_params(cfg)
+    prompts = _overlap_prompts()
+
+    _, cold_out = _drain(params, cfg, prompts, prefix_cache=True,
+                         prefix_cache_slots=0, carry_max_age=2)
+    warm_loop, warm_out = _drain(params, cfg, prompts, prefix_cache=True,
+                                 prefix_cache_slots=16, carry_max_age=2,
+                                 prefix_max_age=50)
+    assert warm_out == cold_out
+    assert warm_loop.prefix.stats()["hits"] >= 1
+
+
+def test_serve_prefix_metrics_surface():
+    """The obs surface the CI rehearsal asserts on: lookup counters by
+    outcome, occupancy gauges matching the index, and a non-empty
+    saved-iters series."""
+    reg = obs_metrics.default_registry()
+
+    def lookups(outcome):
+        return reg.value("prefix_cache_lookups_total",
+                         {"outcome": outcome}, default=0.0)
+
+    before = {o: lookups(o) for o in ("hit", "partial", "miss")}
+    cfg = _deq_cfg()
+    params = _deq_params(cfg)
+    warm_loop, _ = _drain(params, cfg, _overlap_prompts(),
+                          prefix_cache=True, prefix_cache_slots=16)
+    after = {o: lookups(o) for o in ("hit", "partial", "miss")}
+    assert after["miss"] > before["miss"]
+    assert (after["hit"] + after["partial"]
+            > before["hit"] + before["partial"])
+    st = warm_loop.prefix.stats()
+    assert reg.value("prefix_cache_entries") == float(st["entries"])
+    assert reg.value("prefix_cache_tokens") == float(st["tokens"])
+    series = reg.get("prefix_cache_saved_iters")
+    assert series is not None and series.count >= 1
