@@ -204,6 +204,13 @@ def run() -> list[dict]:
 
     rows.extend(bench_prefix_cache.bench_rows())
 
+    # serving-pipeline row: async vs sync drain of the same shared-prefix
+    # stream — the throughput ratio and zero-host-sync invariant compare
+    # two arms on THIS host, so they gate directly (no hw calibration)
+    from benchmarks import bench_serve_pipeline
+
+    rows.extend(bench_serve_pipeline.bench_rows())
+
     # CSV to stdout only: the canonical persisted record is run.py's
     # BENCH_kernels.json (+ BENCH_metrics.json) — no stray kernels.json
     print_csv("kernels", rows)

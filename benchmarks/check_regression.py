@@ -14,6 +14,10 @@ fails (exit 1) when, for any (op, shape, impl) row present in the baseline:
     +1-iteration slack — the solver's iteration count on fixed seeds is
     deterministic like the byte model, so growth means the carried solve
     state stopped paying for itself, or
+  * a ``serve_pipeline[*]`` row's fresh ``throughput_ratio`` fell below
+    the 1.3x acceptance floor or its ``host_syncs`` count is nonzero —
+    both arms of that bench run on the SAME host, so these gate
+    absolutely with no baseline-host calibration, or
   * ``wall_ms`` exceeds ``ratio * host_scale * baseline + slack``.  Wall
     time IS hardware-dependent (the baseline is committed from one machine,
     CI re-measures on another), so the gate self-calibrates: with >= 3
@@ -62,7 +66,12 @@ ITER_SLACK = 1
 # the machine-readable record keeps the same fields benchmarks/run.py writes
 KEEP = ("op", "shape", "impl", "wall_ms", "bytes_moved", "unfused_bytes",
         "uv_traffic_ratio", "n_iters", "cold_iters", "iters_ratio",
-        "max_abs_err")
+        "sync_wall_ms", "tok_s", "sync_tok_s", "throughput_ratio",
+        "host_syncs", "max_abs_err")
+
+# serving-pipeline acceptance floor (ISSUE 9): async-vs-sync same-host
+# throughput ratio — hardware-independent of the baseline, gated directly
+MIN_TPUT_RATIO = 1.3
 
 
 def _key(row: dict) -> tuple:
@@ -124,6 +133,21 @@ def compare(base: list[dict], fresh: list[dict], *, wall_ratio: float,
             if f["n_iters"] > b["n_iters"] + ITER_SLACK:
                 print(f"FAIL {tag}: n_iters {b['n_iters']} -> {f['n_iters']} "
                       f"(warm-start regression; slack +{ITER_SLACK})")
+                bad += 1
+        # serving-pipeline rows: both arms ran on THIS host, so the ratio
+        # and the zero-blocking-sync invariant gate absolutely, with no
+        # baseline-host calibration
+        if (b.get("throughput_ratio") is not None
+                and f.get("throughput_ratio") is not None):
+            if f["throughput_ratio"] < MIN_TPUT_RATIO:
+                print(f"FAIL {tag}: throughput_ratio "
+                      f"{f['throughput_ratio']} < acceptance floor "
+                      f"{MIN_TPUT_RATIO} (baseline {b['throughput_ratio']})")
+                bad += 1
+        if b.get("host_syncs") is not None and f.get("host_syncs") is not None:
+            if f["host_syncs"] != 0:
+                print(f"FAIL {tag}: {f['host_syncs']} blocking host syncs "
+                      "recorded during the async drain (must be 0)")
                 bad += 1
         bw, fw = b.get("wall_ms"), f.get("wall_ms")
         if bw is not None and fw is not None:

@@ -22,7 +22,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: bilevel,opa,deq,spectral,"
-                         "nlls,kernels,warm_start,prefix_cache,roofline")
+                         "nlls,kernels,warm_start,prefix_cache,"
+                         "serve_pipeline,roofline")
     ap.add_argument("--fast", action="store_true",
                     help="reduced iteration counts")
     args = ap.parse_args()
@@ -77,6 +78,12 @@ def main() -> None:
         sections.append(
             ("prefix carry cache (cross-request prefill reuse)",
              bench_prefix_cache.run))
+    # ... and for the serving-pipeline async-vs-sync drain row
+    if want("serve_pipeline") and (only is not None and "kernels" not in only):
+        from benchmarks import bench_serve_pipeline
+        sections.append(
+            ("serving pipeline (async host-sync-free vs sync drain)",
+             bench_serve_pipeline.run))
     if want("roofline"):
         from benchmarks import roofline
         sections.append(("roofline (dry-run derived)", roofline.run))
@@ -102,7 +109,8 @@ def _write_bench_kernels(rows: list[dict]) -> None:
     wall-time, bytes-moved) so the perf trajectory is diffable across PRs."""
     keep = ("op", "shape", "impl", "wall_ms", "bytes_moved", "unfused_bytes",
             "uv_traffic_ratio", "n_iters", "cold_iters", "iters_ratio",
-            "max_abs_err")
+            "sync_wall_ms", "tok_s", "sync_tok_s", "throughput_ratio",
+            "host_syncs", "max_abs_err")
     out = [{k: r[k] for k in keep if k in r} for r in rows]
     path = Path("results/benchmarks/BENCH_kernels.json")
     path.parent.mkdir(parents=True, exist_ok=True)

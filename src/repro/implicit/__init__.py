@@ -43,12 +43,15 @@ from repro.core.solvers import (
 from repro.implicit.engine import (
     CarryCache,
     CoalescedBatch,
+    DevicePrefixStore,
+    DevPrefixMatch,
     PrefixCarryIndex,
     PrefixEntry,
     PrefixMatch,
     batched_solve,
     coalesce_states,
     prefix_hashes,
+    prefix_store_scatter,
     write_carry_rows,
     write_carry_slot,
 )
@@ -72,6 +75,8 @@ __all__ = [
     "BackwardConfig",
     "CarryCache",
     "CoalescedBatch",
+    "DevPrefixMatch",
+    "DevicePrefixStore",
     "ESTIMATORS",
     "EstimatorContext",
     "ForwardConfig",
@@ -98,6 +103,7 @@ __all__ = [
     "jfb_cotangent",
     "pack_state",
     "prefix_hashes",
+    "prefix_store_scatter",
     "ravel_state",
     "register_estimator",
     "register_solver",

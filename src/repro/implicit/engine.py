@@ -138,9 +138,11 @@ def write_carry_rows(dst: SolveCarry, src: SolveCarry,
     ``dst`` in ONE scatter per buffer (all SolveCarry fields; the qN ring
     buffers scatter along their batch axis 1).  Used to place a coalesced
     wave's seeded carries into the serving loop's slot layout — one call
-    per wave, not one full-buffer copy per request."""
-    sl = jnp.asarray(list(slots), jnp.int32)
-    rw = jnp.asarray(list(rows), jnp.int32)
+    per wave, not one full-buffer copy per request.  ``slots``/``rows``
+    may be traced index arrays, so the scatter can live inside a jitted
+    serving program."""
+    sl = jnp.asarray(slots, jnp.int32)
+    rw = jnp.asarray(rows, jnp.int32)
     lr_d, lr_s = dst.lowrank, src.lowrank
     return SolveCarry(
         z=dst.z.at[sl].set(src.z[rw].astype(dst.z.dtype)),
@@ -472,3 +474,269 @@ class PrefixCarryIndex:
         e.refs -= 1
         self._evict_lru()
         self._publish_gauges()
+
+
+# ---------------------------------------------------------------------------
+# Device-resident prefix carry store (the zero-host-sync serving cache)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DevEntry:
+    """Host bookkeeping for one stored prefix: WHICH device slot holds the
+    donor row and how many leading tokens of it this entry covers.  No
+    array data lives here — the equilibrium/ring snapshots stay on device."""
+
+    tokens: tuple[int, ...]
+    slot: int
+    born: int
+    last_used: int
+    hits: int = 0
+
+    @property
+    def length(self) -> int:
+        return len(self.tokens)
+
+
+class DevPrefixMatch(NamedTuple):
+    """A device-store lookup result: gather ``store.z[slot, :length]`` (and
+    the ring rows) inside the jitted prefill — the host only learns ints."""
+
+    slot: int
+    length: int
+    exact: bool
+
+
+class DevicePrefixStore:
+    """Cross-request prefix carry cache with DEVICE-RESIDENT entries.
+
+    The host-array :class:`PrefixCarryIndex` round-trips every snapshot
+    through ``device_get`` at publish and ``jnp.asarray`` at lookup — one
+    blocking host sync per wave each way, serializing dispatch.  This store
+    keeps the payload on device the whole time:
+
+      * **Layout** — preallocated slot arrays ``z: (slots+1, S, *F)``,
+        ``u/v: (m, slots+1, S, *F)``, ``count: (slots+1,)``.  Row ``slots``
+        is a scratch row: publishes the host decides to skip (dedup
+        refreshes) scatter there, so the jitted program's shape never
+        depends on the publish decision.
+      * **Publish** — an on-device scatter (``.at[slots].set``, lowered to
+        ``dynamic_update_slice``/scatter) INSIDE the jitted prefill: the
+        converged wave carry lands in its assigned rows without ever
+        materializing on host.  The host picks target slots *before* the
+        call (:meth:`plan_publish` — pure int bookkeeping).
+      * **Lookup** — a gather by traced slot id inside the same program.
+        Stale tail data past an entry's length is masked by the traced
+        ``prefix_len`` (``where(pos < L, ...)``), so one donor row serves
+        every block-boundary length at once — device-level dedup.
+      * **Ordering** — the slot arrays are threaded VALUES through every
+        jitted call (``arrays`` in, updated arrays out, :meth:`adopt`
+        back); XLA's data dependencies serialize producer and consumer
+        programs, so no leases are needed: a consumer dispatched before an
+        overwriting publish reads the old row by construction, and a
+        same-program lookup+publish gathers before it scatters.
+
+    Only the rolling-hash / longest-prefix-match / LRU bookkeeping stays on
+    host — dict ops over tiny ints, never device memory.  Eviction mirrors
+    :class:`PrefixCarryIndex`: LRU over slots when capacity is exceeded,
+    ``max_age`` staleness sweeps by the operation clock, per-reason counters
+    on ``prefix_cache_evictions_total`` and occupancy gauges.
+    """
+
+    def __init__(self, slots: int, seq: int, feat: tuple[int, ...] | int,
+                 memory: int, *, block: int = 4, max_age: int | None = None,
+                 dtype=jnp.float32, qn_dtype="bfloat16"):
+        if slots < 0:
+            raise ValueError(f"slots must be >= 0, got {slots}")
+        if seq < 1:
+            raise ValueError(f"seq must be >= 1, got {seq}")
+        if block < 1:
+            raise ValueError(f"block must be >= 1, got {block}")
+        if max_age is not None and max_age < 1:
+            raise ValueError(f"max_age must be >= 1, got {max_age}")
+        feat = (feat,) if isinstance(feat, int) else tuple(feat)
+        ring_dtype = jnp.dtype(qn_dtype) if qn_dtype is not None else dtype
+        self.slots, self.seq, self.block = slots, seq, block
+        self.memory = memory
+        self.max_age = max_age
+        self.scratch = slots  # the throw-away row
+        n = slots + 1
+        self.z = jnp.zeros((n, seq) + feat, dtype)
+        self.u = jnp.zeros((memory, n, seq) + feat, ring_dtype)
+        self.v = jnp.zeros((memory, n, seq) + feat, ring_dtype)
+        self.count = jnp.zeros((n,), jnp.int32)
+        # host bookkeeping: hash -> entry, per-slot reverse index + LRU clock
+        self._entries: dict[int, DevEntry] = {}
+        self._slot_keys: list[set[int]] = [set() for _ in range(slots)]
+        self._slot_used: list[int] = [0] * slots
+        self._free: list[int] = list(range(slots))
+        self._clock = 0
+        self.published = 0
+        self.lookups = 0
+        self.hits = 0
+        self.evictions_by_reason = {"lru": 0, "stale": 0}
+
+    # -- device side ----------------------------------------------------
+
+    @property
+    def arrays(self) -> tuple[Array, Array, Array, Array]:
+        """The slot arrays as a flat tuple — thread them through jit."""
+        return (self.z, self.u, self.v, self.count)
+
+    def adopt(self, arrays) -> None:
+        """Adopt the updated slot arrays a jitted publish returned."""
+        self.z, self.u, self.v, self.count = arrays
+
+    # -- bookkeeping ------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def tokens_held(self) -> int:
+        return sum(e.length for e in self._entries.values())
+
+    def stats(self) -> dict:
+        return {"entries": len(self), "tokens": self.tokens_held(),
+                "published": self.published, "lookups": self.lookups,
+                "hits": self.hits, "evictions": dict(self.evictions_by_reason)}
+
+    def _publish_gauges(self) -> None:
+        obs_metrics.record_prefix_occupancy(len(self), self.tokens_held())
+
+    def _drop_key(self, key: int, reason: str) -> None:
+        e = self._entries.pop(key)
+        self.evictions_by_reason[reason] += 1
+        obs_metrics.default_registry().counter(
+            "prefix_cache_evictions_total", {"reason": reason}).inc()
+        ks = self._slot_keys[e.slot]
+        ks.discard(key)
+        if not ks:
+            self._free.append(e.slot)
+
+    def _sweep_stale(self) -> None:
+        if self.max_age is None:
+            return
+        stale = [k for k, e in self._entries.items()
+                 if self._clock - e.born > self.max_age]
+        for k in stale:
+            self._drop_key(k, "stale")
+
+    def _take_slot(self) -> int:
+        """A free device row, evicting the LRU slot's entries if needed."""
+        if self._free:
+            return self._free.pop()
+        victim = min((u, s) for s, u in enumerate(self._slot_used)
+                     if self._slot_keys[s])[1]
+        for k in list(self._slot_keys[victim]):
+            self._drop_key(k, "lru")
+        return self._free.pop()
+
+    def _boundaries(self, n: int) -> list[int]:
+        return sorted({min(self.block * k, n)
+                       for k in range(1, n // self.block + 2)} | {n})
+
+    # -- the cache interface ----------------------------------------------
+
+    def peek(self, tokens: Sequence[int]) -> tuple[int, int] | None:
+        """Side-effect-free longest-prefix probe: ``(hash_key, length)`` of
+        the longest stored prefix, or None.  Used by admission reordering to
+        group requests without perturbing clocks or hit counters."""
+        toks = tuple(int(t) for t in tokens)
+        hashes = prefix_hashes(toks)
+        for L in sorted({e.length for e in self._entries.values()},
+                        reverse=True):
+            if L > len(toks):
+                continue
+            e = self._entries.get(hashes[L])
+            if e is not None and e.tokens == toks[:L]:
+                return hashes[L], L
+        return None
+
+    def lookup(self, tokens: Sequence[int]) -> DevPrefixMatch | None:
+        """Longest-prefix-match; returns the donor SLOT ID for a traced
+        gather.  No lease — program dispatch order protects in-flight
+        consumers (see class docstring)."""
+        self._clock += 1
+        self._sweep_stale()
+        self.lookups += 1
+        toks = tuple(int(t) for t in tokens)
+        hashes = prefix_hashes(toks)
+        for L in sorted({e.length for e in self._entries.values()},
+                        reverse=True):
+            if L > len(toks):
+                continue
+            e = self._entries.get(hashes[L])
+            if e is not None and e.tokens == toks[:L]:
+                e.hits += 1
+                e.last_used = self._clock
+                self._slot_used[e.slot] = self._clock
+                self.hits += 1
+                return DevPrefixMatch(slot=e.slot, length=L,
+                                      exact=L == len(toks))
+        return None
+
+    def plan_publish(self, tokens: Sequence[int]) -> int:
+        """Pick the device row the wave's jitted prefill will scatter this
+        prompt's converged carry into; creates/refreshes the host entries at
+        every block boundary.  Returns the scratch row when nothing new
+        needs storing (dedup refresh, empty/oversized prompt, no capacity).
+        """
+        self._clock += 1
+        self._sweep_stale()
+        n = len(tokens)
+        if n == 0 or n > self.seq or self.slots == 0:
+            return self.scratch
+        toks = tuple(int(t) for t in tokens)
+        hashes = prefix_hashes(toks)
+        full = self._entries.get(hashes[n])
+        if full is not None and full.tokens == toks:
+            # dedup: the whole prefix chain is already on device — refresh
+            # the host clocks, scatter to scratch (no device write needed)
+            for L in self._boundaries(n):
+                e = self._entries.get(hashes[L])
+                if e is not None and e.tokens == toks[:L]:
+                    e.born = e.last_used = self._clock
+                    self._slot_used[e.slot] = self._clock
+            self.published += 1
+            return self.scratch
+        slot = self._take_slot()
+        self._slot_used[slot] = self._clock
+        created = False
+        for L in self._boundaries(n):
+            key = hashes[L]
+            e = self._entries.get(key)
+            if e is not None and e.tokens == toks[:L]:
+                e.born = e.last_used = self._clock
+                continue
+            if e is not None:
+                # hash collision with different tokens: replace
+                self._drop_key(key, "lru")
+            self._entries[key] = DevEntry(tokens=toks[:L], slot=slot,
+                                          born=self._clock,
+                                          last_used=self._clock)
+            self._slot_keys[slot].add(key)
+            created = True
+        if not created:
+            # every boundary was already covered by other donors
+            self._free.append(slot)
+            slot = self.scratch
+        self.published += 1
+        self._publish_gauges()
+        return slot
+
+
+def prefix_store_scatter(arrays, carry: SolveCarry, slot_ids: Array):
+    """On-device publish-back: scatter a converged prefill wave's carry rows
+    into the store's slot arrays (one ``.at[].set`` per buffer — lowered to
+    a scatter/dynamic_update_slice inside the jitted prefill program).
+    ``slot_ids: (B,) int32`` may point rows at the scratch slot to skip
+    publication without changing the program shape."""
+    z_s, u_s, v_s, c_s = arrays
+    seq = carry.z.shape[1]
+    lr = carry.lowrank
+    return (
+        z_s.at[slot_ids, :seq].set(carry.z.astype(z_s.dtype)),
+        u_s.at[:, slot_ids, :seq].set(lr.u.astype(u_s.dtype)),
+        v_s.at[:, slot_ids, :seq].set(lr.v.astype(v_s.dtype)),
+        c_s.at[slot_ids].set(lr.count.astype(c_s.dtype)),
+    )

@@ -57,9 +57,31 @@ def main() -> None:
                     choices=("bfloat16", "float32"),
                     help="storage dtype of the quasi-Newton U/V ring "
                          "(default bf16; coefficients accumulate f32)")
+    ap.add_argument("--pipeline", default="async",
+                    choices=("async", "sync"),
+                    help="serving pipeline: 'async' (default) overlaps "
+                         "waves through the completion queue with "
+                         "device-resident caches and zero blocking host "
+                         "syncs in steady state; 'sync' is the blocking "
+                         "wave-at-a-time loop")
+    ap.add_argument("--async-depth", type=int, default=2,
+                    help="async pipeline: max in-flight waves before "
+                         "admission/dispatch waits for the oldest to land")
+    ap.add_argument("--reorder", action="store_true",
+                    help="prefix-aware admission: stable-sort queued "
+                         "requests by matched prefix key so prompts "
+                         "sharing a cached prefix land in one wave")
+    ap.add_argument("--reorder-age-bound", type=int, default=8,
+                    help="fairness bound for --reorder: a request passed "
+                         "over this many admission rounds is admitted "
+                         "FIFO ahead of any grouping")
     ap.add_argument("--metrics-out", default="",
                     help="write a metrics-registry JSON snapshot here after "
                          "the drain (enables the jit metrics bridge)")
+    ap.add_argument("--metrics-prom-out", default="",
+                    help="write (and periodically refresh, every 10s) a "
+                         "Prometheus text-format exposition of the metrics "
+                         "registry here (enables the jit metrics bridge)")
     ap.add_argument("--trace-out", default="",
                     help="write a Chrome-trace JSON of the drain here "
                          "(enables span tracing)")
@@ -83,10 +105,12 @@ def main() -> None:
     from repro.runtime.serving import Request, ServeLoop
 
     # trace-time gates: enable before the loop's first jit trace
-    if args.metrics_out:
+    if args.metrics_out or args.metrics_prom_out:
         obs_metrics.set_enabled(True)
     if args.trace_out:
         obs_tracing.set_enabled(True)
+    flusher = (obs_metrics.PromFlusher(args.metrics_prom_out).start()
+               if args.metrics_prom_out else None)
 
     if args.arch not in ARCHS:
         raise SystemExit(f"unknown arch {args.arch!r}; have {sorted(ARCHS)}")
@@ -114,7 +138,10 @@ def main() -> None:
                      prefix_cache=args.prefix_cache,
                      prefix_cache_slots=args.prefix_cache_slots,
                      prefix_block=args.prefix_block,
-                     prefix_max_age=args.prefix_max_age)
+                     prefix_max_age=args.prefix_max_age,
+                     pipeline=args.pipeline, async_depth=args.async_depth,
+                     reorder=args.reorder,
+                     reorder_age_bound=args.reorder_age_bound)
     rng = np.random.default_rng(args.seed)
     if args.shared_prefix:
         # overlapping-prefix stream: one shared base + fixed-length random
@@ -141,16 +168,26 @@ def main() -> None:
           f"in {dt:.2f}s ({tokens/dt:.1f} tok/s)")
     for r in reqs[:4]:
         print(f"  req {r.uid}: prompt[{len(r.prompt)}] -> {r.out}")
-    if loop.prefix is not None:
-        st = loop.prefix.stats()
+    cache = loop.prefix if loop.prefix is not None else loop.prefix_store
+    if cache is not None:
+        st = cache.stats()
         print(f"prefix cache: {st['hits']}/{st['lookups']} lookups hit, "
               f"{st['entries']} entries ({st['tokens']} tokens) held, "
               f"evictions={st['evictions']}; prefill iters "
               f"{loop.prefill_iters:.0f} total, {loop.saved_iters:.0f} saved")
+    if args.pipeline == "async":
+        syncs = sum(
+            m["value"]
+            for m in obs_metrics.default_registry().snapshot()["metrics"]
+            if m["name"] == "host_syncs_total")
+        print(f"async pipeline: {syncs:.0f} blocking host syncs recorded")
 
     if args.metrics_out:
         obs_metrics.default_registry().write_json(args.metrics_out)
         print(f"metrics snapshot -> {args.metrics_out}")
+    if flusher is not None:
+        flusher.stop()
+        print(f"prometheus exposition -> {args.metrics_prom_out}")
     if args.trace_out:
         obs_tracing.write(args.trace_out)
         print(f"chrome trace -> {args.trace_out}")

@@ -48,6 +48,10 @@ def main() -> None:
     ap.add_argument("--metrics-out", default="",
                     help="write a metrics-registry JSON snapshot here after "
                          "the run (enables the jit metrics bridge)")
+    ap.add_argument("--metrics-prom-out", default="",
+                    help="write (and periodically refresh, every 10s) a "
+                         "Prometheus text-format exposition of the metrics "
+                         "registry here (enables the jit metrics bridge)")
     ap.add_argument("--trace-out", default="",
                     help="write a Chrome-trace JSON of the run here "
                          "(enables span tracing)")
@@ -62,10 +66,12 @@ def main() -> None:
 
     # observability switches are trace-time gates: enable BEFORE the first
     # jit trace so the compiled programs carry the instrumentation
-    if args.metrics_out:
+    if args.metrics_out or args.metrics_prom_out:
         obs_metrics.set_enabled(True)
     if args.trace_out:
         obs_tracing.set_enabled(True)
+    flusher = (obs_metrics.PromFlusher(args.metrics_prom_out).start()
+               if args.metrics_prom_out else None)
 
     cfg = smoke_config(args.arch, deq=args.deq) if args.smoke \
         else get_config(args.arch, deq=args.deq)
@@ -108,6 +114,9 @@ def main() -> None:
     if args.metrics_out:
         obs_metrics.default_registry().write_json(args.metrics_out)
         print(f"metrics snapshot -> {args.metrics_out}")
+    if flusher is not None:
+        flusher.stop()
+        print(f"prometheus exposition -> {args.metrics_prom_out}")
     if args.trace_out:
         obs_tracing.write(args.trace_out)
         print(f"chrome trace -> {args.trace_out}")

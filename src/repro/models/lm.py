@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.lowrank import LowRank
 from repro.implicit import (
     ImplicitConfig,
     SolveCarry,
@@ -645,6 +646,53 @@ def prefix_seed_carry(cfg: ModelConfig, batch: int, seq: int,
     return carry, jnp.asarray(plen)
 
 
+def prefix_gather_carry(cfg: ModelConfig, batch: int, seq: int,
+                        arrays, slot_ids: Array,
+                        prefix_len: Array) -> tuple[SolveCarry, Array]:
+    """Assemble a PREFILL-shaped carry by GATHERING device-store rows.
+
+    The traced twin of :func:`prefix_seed_carry` for the device-resident
+    prefix cache (:class:`repro.implicit.DevicePrefixStore`): ``arrays``
+    are the store's slot arrays, ``slot_ids: (B,) int32`` the donor rows
+    and ``prefix_len: (B,) int32`` the matched lengths (0 = miss: the row
+    comes out cold, bit-identical to a carryless prefill).  Runs INSIDE
+    the jitted prefill program — no snapshot ever touches the host.
+
+    Positions past the matched length carry stale donor-tail data in the
+    store (one donor row serves every block-boundary length); they are
+    masked here exactly like the host assembly zero-pads: ``z`` to zero
+    (:func:`prefill` overwrites it with the live ``x_emb``) and the ring
+    pairs to zero (identity inverse on the suffix subspace).
+    """
+    if not cfg.deq.enabled:
+        raise ValueError("prefix_gather_carry requires cfg.deq.enabled")
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    z_s, u_s, v_s, c_s = arrays
+    if u_s.shape[0] != cfg.deq.memory:
+        raise ValueError(
+            f"store ring memory {u_s.shape[0]} != cfg {cfg.deq.memory}")
+    if z_s.shape[1] < seq:
+        raise ValueError(f"store seq {z_s.shape[1]} < prompt seq {seq}")
+    pmask = (jnp.arange(seq, dtype=jnp.int32)[None, :]
+             < prefix_len[:, None])[..., None]
+    zeros = jnp.zeros((), dtype)
+    z = jnp.where(pmask, z_s[slot_ids, :seq].astype(dtype), zeros)
+    u = jnp.where(pmask[None], u_s[:, slot_ids, :seq],
+                  jnp.zeros((), u_s.dtype))
+    v = jnp.where(pmask[None], v_s[:, slot_ids, :seq],
+                  jnp.zeros((), v_s.dtype))
+    warm = prefix_len > 0
+    count = jnp.where(warm, c_s[slot_ids], 0).astype(jnp.int32)
+    carry = SolveCarry(
+        z=z,
+        lowrank=LowRank(alpha=jnp.asarray(1.0, jnp.float32),
+                        u=u, v=v, count=count),
+        warm=warm,
+        age=jnp.zeros((batch,), jnp.int32),
+    )
+    return carry, prefix_len
+
+
 def prefill(params, batch: dict, cfg: ModelConfig, ctx: ShardCtx,
             max_len: int, carry: SolveCarry | None = None,
             prefix_carry: SolveCarry | None = None,
@@ -703,7 +751,7 @@ def prefill(params, batch: dict, cfg: ModelConfig, ctx: ShardCtx,
 
 def decode_step(params, caches, tokens: Array, cache_index: Array,
                 cfg: ModelConfig, ctx: ShardCtx, active: Array | None = None,
-                carry: SolveCarry | None = None):
+                carry: SolveCarry | None = None, return_steps: bool = False):
     """One decode step. tokens: (B,), cache_index: (B,). Returns
     (logits (B, V), new caches).  ``active: (B,) bool`` lets the serving
     loop freeze finished/empty slots inside the DEQ fixed-point solve.
@@ -712,6 +760,10 @@ def decode_step(params, caches, tokens: Array, cache_index: Array,
     quasi-Newton chain) at token *t* seeds token *t+1* — steady-state decode
     then converges in a fraction of the cold iteration count.  With a carry
     the return is ``(logits, caches, carry)``.
+
+    ``return_steps`` appends the solver's step count (``deq_steps``, 0.0
+    for non-DEQ models) so the serving pipeline can thread iteration
+    accounting through its completion queue instead of re-fetching aux.
     """
     batch = {"tokens": tokens[:, None]}
     x = embed_tokens(params["embed"], batch["tokens"], cfg, ctx)
@@ -722,6 +774,8 @@ def decode_step(params, caches, tokens: Array, cache_index: Array,
     )
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = lm_logits(params["embed"], x, cfg, ctx)
-    if carry is None:
-        return logits[:, 0], caches
-    return logits[:, 0], caches, aux.get("solve_carry", carry)
+    out = ((logits[:, 0], caches) if carry is None
+           else (logits[:, 0], caches, aux.get("solve_carry", carry)))
+    if return_steps:
+        out = out + (aux.get("deq_steps", jnp.float32(0.0)),)
+    return out

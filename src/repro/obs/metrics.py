@@ -39,8 +39,8 @@ from typing import Mapping
 import numpy as np
 
 __all__ = [
-    "MetricsRegistry", "default_registry", "set_enabled", "enabled",
-    "emit_scalar", "record_solve", "record_backward",
+    "MetricsRegistry", "PromFlusher", "default_registry", "set_enabled",
+    "enabled", "emit_scalar", "record_solve", "record_backward",
     "record_prefix_lookup", "record_prefix_occupancy",
     "record_prefix_saved_iters",
 ]
@@ -196,9 +196,124 @@ class MetricsRegistry:
             json.dump(snap, fh, indent=1, sort_keys=True)
         return snap
 
+    def to_prom(self) -> str:
+        """Render the registry in Prometheus text exposition format.
+
+        Counters and gauges map 1:1; histograms emit the standard
+        cumulative ``_bucket{le=...}`` series (a ``+Inf`` bucket is always
+        present) plus ``_sum``/``_count``; a :class:`Series` has no
+        Prometheus analogue, so only its record count is exported (as
+        ``<name>_records``).  Metric names are sanitized to the Prometheus
+        charset and label values escaped per the exposition format."""
+        with self._lock:
+            items = sorted(self._metrics.items())
+        groups: dict[str, list] = {}
+        for (name, lk), m in items:
+            groups.setdefault(name, []).append((lk, m))
+        lines: list[str] = []
+        for name, rows in groups.items():
+            kind = rows[0][1].kind
+            pname = _prom_name(name)
+            if kind == "series":
+                lines.append(f"# TYPE {pname}_records gauge")
+                for lk, m in rows:
+                    if m.kind != kind:
+                        continue
+                    lines.append(
+                        f"{pname}_records{_prom_labels(lk)} {m.count}")
+                continue
+            lines.append(f"# TYPE {pname} {kind}")
+            for lk, m in rows:
+                if m.kind != kind:
+                    continue
+                if kind == "histogram":
+                    cum = 0
+                    for b, c in zip(m.buckets, m.counts):
+                        cum += c
+                        le = "+Inf" if b == float("inf") else _prom_num(b)
+                        lines.append(
+                            f"{pname}_bucket"
+                            f"{_prom_labels(lk, ('le', le))} {cum}")
+                    if not m.buckets or m.buckets[-1] != float("inf"):
+                        lines.append(
+                            f"{pname}_bucket"
+                            f"{_prom_labels(lk, ('le', '+Inf'))} {m.count}")
+                    lines.append(
+                        f"{pname}_sum{_prom_labels(lk)} {_prom_num(m.sum)}")
+                    lines.append(
+                        f"{pname}_count{_prom_labels(lk)} {m.count}")
+                else:
+                    lines.append(
+                        f"{pname}{_prom_labels(lk)} {_prom_num(m.value)}")
+        return "\n".join(lines) + ("\n" if lines else "")
+
+    def write_prom(self, path: str) -> str:
+        """Write :meth:`to_prom` atomically (tmp + rename), so a concurrent
+        scrape of the file never sees a torn exposition."""
+        text = self.to_prom()
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as fh:
+            fh.write(text)
+        os.replace(tmp, path)
+        return text
+
     def reset(self) -> None:
         with self._lock:
             self._metrics.clear()
+
+
+def _prom_name(name: str) -> str:
+    out = "".join(c if c.isalnum() or c in "_:" else "_" for c in name)
+    return "_" + out if out[:1].isdigit() else out
+
+
+def _prom_num(v: float) -> str:
+    f = float(v)
+    return str(int(f)) if f == int(f) and abs(f) < 1e15 else repr(f)
+
+
+def _prom_labels(lk: _LabelsKey, *extra: tuple[str, str]) -> str:
+    pairs = list(lk) + list(extra)
+    if not pairs:
+        return ""
+    esc = {"\\": "\\\\", '"': '\\"', "\n": "\\n"}
+    body = ",".join(
+        f'{_prom_name(k)}="{"".join(esc.get(c, c) for c in str(v))}"'
+        for k, v in pairs)
+    return "{" + body + "}"
+
+
+class PromFlusher:
+    """Daemon thread that rewrites a Prometheus textfile every
+    ``interval_s`` seconds (node-exporter textfile-collector style) until
+    :meth:`stop` — which also performs one final flush, so short runs
+    always leave a complete exposition behind."""
+
+    def __init__(self, path: str, interval_s: float = 10.0,
+                 registry: "MetricsRegistry | None" = None):
+        self.path = path
+        self.interval_s = float(interval_s)
+        self.registry = registry or default_registry()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._run, name="prom-flusher", daemon=True)
+
+    def start(self) -> "PromFlusher":
+        self._thread.start()
+        return self
+
+    def _run(self) -> None:
+        while not self._stop.wait(self.interval_s):
+            self.registry.write_prom(self.path)
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread.is_alive():
+            self._thread.join(timeout=5.0)
+        self.registry.write_prom(self.path)
 
 
 _REGISTRY = MetricsRegistry()

@@ -25,12 +25,49 @@ Batched-engine behaviour (the sharded batched fixed-point engine):
     warm-starts from a stranger's state.
   * Under a mesh (``ctx.mesh``), the decode step and the solver's (U, V)
     memory run batch-sharded — see ``repro.implicit.engine``.
+
+Pipelines (``pipeline=``):
+
+  * ``"sync"`` — the classic loop: each wave/tick dispatches, then the
+    host BLOCKS fetching logits/steps/prefix snapshots before the next
+    dispatch.  Every blocking fetch of not-yet-ready device data counts
+    on ``host_syncs_total{site}``.
+  * ``"async"`` — the zero-host-sync hot path.  Per-slot lifecycle state
+    (current token, lengths, active mask, emitted counts) lives ON DEVICE
+    and the jitted tick updates it in-program (argmax, EOS/max-new mask,
+    carry staleness reset), so dispatching tick *t+1* never needs tick
+    *t*'s results.  Small per-tick outputs (next tokens, done mask, step
+    counts) queue on a completion deque drained when ``is_ready()`` —
+    steady-state draining issues ZERO blocking host syncs; when the
+    pipeline is ``async_depth`` deep the loop waits by cooperative
+    polling (surfaced as ``pipeline_wait`` spans), not a device fetch.
+    The cross-request prefix cache becomes a
+    :class:`repro.implicit.DevicePrefixStore`: lookup is a gather by
+    traced slot id and publish-back an in-program scatter, so prefix
+    snapshots never round-trip through host memory.  Per-request TTFT
+    stays exact via a WATCHER THREAD: each dispatched wave's token array
+    is handed to a daemon thread that blocks on it (off the dispatch
+    path — the engine thread never waits) and stamps the wall clock the
+    moment the tokens materialize; landing reads the stamp back.
+    (``jax.debug.callback`` would give the same timestamp in-program but
+    costs ~3ms per launch on the CPU backend — measured — which is more
+    than an entire dispatched tick.)
+
+Admission reordering (``reorder=True``): queued requests are stable-sorted
+so prompts sharing a cached prefix (matched store key, else the first
+hash-block of the prompt) land in one wave, compounding coalescing with
+prefix-cache hits.  A fairness age bound pins any request queued for more
+than ``reorder_age_bound`` admission rounds to the front (FIFO among the
+overdue), so reordering can never starve an unpopular prompt.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import itertools
 import queue
+import threading
 import time
 from typing import Any
 
@@ -39,7 +76,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.implicit import CarryCache, PrefixCarryIndex, write_carry_rows
+from repro.implicit import (
+    CarryCache,
+    DevicePrefixStore,
+    PrefixCarryIndex,
+    prefix_hashes,
+    prefix_store_scatter,
+    reset_carry_rows,
+    write_carry_rows,
+)
 from repro.models import lm
 from repro.obs import metrics as obs_metrics
 from repro.obs import tracing as obs_tracing
@@ -56,6 +101,20 @@ class Request:
     # wall time the request entered the queue (set by ServeLoop.submit);
     # TTFT = first-token time - t_submit
     t_submit: float = 0.0
+    # admission rounds spent queued (reorder fairness accounting)
+    wait_rounds: int = 0
+
+
+@dataclasses.dataclass
+class _Inflight:
+    """One dispatched-but-unfetched program on the completion queue."""
+
+    kind: str                             # "prefill" | "tick"
+    tag: int                              # stamp id (traced into the program)
+    group: list[tuple[int, Any]]          # (slot, Request) snapshot at dispatch
+    arrays: dict[str, jax.Array]          # small device outputs read at landing
+    t_dispatch: float
+    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
 class ServeLoop:
@@ -63,11 +122,28 @@ class ServeLoop:
                  slots: int = 4, max_len: int = 256, eos_id: int = 1,
                  greedy: bool = True, carry_max_age: int | None = None,
                  prefix_cache: bool = False, prefix_cache_slots: int = 32,
-                 prefix_block: int = 4, prefix_max_age: int | None = None):
+                 prefix_block: int = 4, prefix_max_age: int | None = None,
+                 pipeline: str = "sync", async_depth: int = 2,
+                 reorder: bool = False, reorder_age_bound: int = 8,
+                 record: bool = False):
+        if pipeline not in ("sync", "async"):
+            raise ValueError(f"pipeline must be sync|async, got {pipeline!r}")
+        if async_depth < 1:
+            raise ValueError(f"async_depth must be >= 1, got {async_depth}")
+        if reorder_age_bound < 1:
+            raise ValueError(
+                f"reorder_age_bound must be >= 1, got {reorder_age_bound}")
         self.params, self.cfg, self.ctx = params, cfg, ctx
         self.slots, self.max_len, self.eos = slots, max_len, eos_id
         self.greedy = greedy
+        self.pipeline = pipeline
+        self.async_depth = async_depth
+        self.reorder = reorder
+        self.reorder_age_bound = reorder_age_bound
         self.queue: "queue.Queue[Request]" = queue.Queue()
+        # admission staging list: the thread-safe queue drains here so the
+        # reorder policy can stable-sort without losing FIFO for fairness
+        self.pending: list[Request] = []
         self.active: list[Request | None] = [None] * slots
         self.caches = lm.init_cache(cfg, slots, max_len)
         self.lengths = jnp.zeros((slots,), jnp.int32)
@@ -78,6 +154,12 @@ class ServeLoop:
         self.prefill_calls = 0
         self.prefill_requests = 0
         self._metrics = obs_metrics.default_registry()
+        # debug/record mode (tests): keep per-request last-position logits
+        # and per-solve step counts so sync and async drains can be compared
+        # bit for bit
+        self._record = record
+        self.recorded_logits: dict[int, list[np.ndarray]] = {}
+        self.recorded_steps: dict[int, list[float]] = {}
         # persistent per-slot solve state (DEQ models only): token-to-token
         # warm starts, evicted when a slot is recycled; ``carry_max_age``
         # additionally bounds per-row staleness (see CarryCache)
@@ -85,17 +167,29 @@ class ServeLoop:
             lambda: lm.deq_solve_carry(cfg, slots, 1), slots,
             max_age=carry_max_age,
         ) if cfg.deq.enabled else None
-        # cross-request prefix carry cache (DEQ only): admission consults
-        # the index before each batched prefill, seeds hit rows from the
-        # stored carry snapshot, and publishes every completed prefill's
-        # carry back.  ``prefix_cache_slots=0`` is the cold accounting arm:
-        # every lookup misses (bit-identical to cache-off) but prefill
-        # iteration totals are still tracked, so warm/cold ratios compare
-        # like for like.  On non-DEQ models the flag is a no-op (there is
-        # no solve state to share).
-        self.prefix = PrefixCarryIndex(
-            prefix_cache_slots, block=prefix_block, max_age=prefix_max_age,
-        ) if (prefix_cache and cfg.deq.enabled) else None
+        # cross-request prefix carry cache (DEQ only).  Sync pipeline: the
+        # host-array PrefixCarryIndex (PR 8 — snapshots round-trip through
+        # device_get).  Async pipeline: the DevicePrefixStore — entries are
+        # preallocated device slot arrays, lookup/publish are in-program
+        # gather/scatter, only hash/LPM bookkeeping stays on host.
+        # ``prefix_cache_slots=0`` is the cold accounting arm: every lookup
+        # misses (bit-identical to cache-off) but prefill iteration totals
+        # are still tracked, so warm/cold ratios compare like for like.  On
+        # non-DEQ models the flag is a no-op (there is no solve state).
+        self.prefix: PrefixCarryIndex | None = None
+        self.prefix_store: DevicePrefixStore | None = None
+        if prefix_cache and cfg.deq.enabled:
+            if pipeline == "sync":
+                self.prefix = PrefixCarryIndex(
+                    prefix_cache_slots, block=prefix_block,
+                    max_age=prefix_max_age)
+            else:
+                dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+                self.prefix_store = DevicePrefixStore(
+                    prefix_cache_slots, max_len, (cfg.d_model,),
+                    cfg.deq.memory, block=prefix_block,
+                    max_age=prefix_max_age, dtype=dtype,
+                    qn_dtype=cfg.deq.qn_dtype)
         # total Broyden iterations spent in prefill solves (prefix path
         # only), plus the per-(plen, wave) cold reference used to credit
         # saved iterations on hit waves
@@ -105,13 +199,14 @@ class ServeLoop:
 
         if self.carries is None:
             self._decode = jax.jit(
-                lambda p, c, t, i, a: lm.decode_step(p, c, t, i, cfg, ctx,
-                                                     active=a)
+                lambda p, c, t, i, a: lm.decode_step(
+                    p, c, t, i, cfg, ctx, active=a, return_steps=record)
             )
         else:
             self._decode = jax.jit(
                 lambda p, c, t, i, a, cy: lm.decode_step(
-                    p, c, t, i, cfg, ctx, active=a, carry=cy)
+                    p, c, t, i, cfg, ctx, active=a, carry=cy,
+                    return_steps=record)
             )
         self._prefill_cache = {}
         # The batch axis of each cache leaf, probed once from shapes (batch
@@ -129,6 +224,63 @@ class ServeLoop:
             p1, p2,
         )
 
+        # -- async pipeline state -----------------------------------------
+        # device-resident slot lifecycle (the tick program updates these
+        # in-program, so dispatch never waits on the previous tick):
+        self._dev_active = jnp.zeros((slots,), bool)
+        self._ntok = jnp.zeros((slots,), jnp.int32)
+        self._max_new = jnp.zeros((slots,), jnp.int32)
+        # host mirror of the DISPATCHED token count per slot: max-new
+        # completion is host-predictable (unlike EOS), so the loop stops
+        # dispatching ticks for exhausted slots instead of paying frozen
+        # no-op solves while their done-landing is still in flight
+        self._planned = [0] * slots
+        self._inflight: collections.deque[_Inflight] = collections.deque()
+        self._tags = itertools.count()
+        self._stamps: dict[int, float] = {}
+        self._stamp_cv = threading.Condition()
+        self._last_tick_stamp: float | None = None
+        # exact-completion watcher: blocks on each wave's token array OFF
+        # the dispatch thread and stamps the materialization wall time
+        self._watch_q: "queue.Queue[tuple[int, jax.Array] | None]" = (
+            queue.Queue())
+        self._watcher: threading.Thread | None = None
+        self._tick_fn = self._make_tick() if pipeline == "async" else None
+
+    def _watch(self, tag: int, dep: Any) -> None:
+        """Hand ``dep`` (an array or pytree — a wave's WHOLE output dict,
+        so a stamp implies every leaf the landing will fetch is ready) to
+        the watcher thread: it blocks until the values materialize (single
+        device stream = FIFO completion, so one thread suffices) and
+        records the exact wall time under ``tag``."""
+        if self._watcher is None:
+            def run():
+                while True:
+                    item = self._watch_q.get()
+                    if item is None:
+                        return
+                    t, arr = item
+                    jax.block_until_ready(arr)
+                    with self._stamp_cv:
+                        self._stamps[t] = time.perf_counter()
+                        self._stamp_cv.notify_all()
+            self._watcher = threading.Thread(
+                target=run, name="serve-completion-watcher", daemon=True)
+            self._watcher.start()
+        self._watch_q.put((tag, dep))
+
+    # -- host-sync accounting --------------------------------------------
+
+    def _count_sync(self, site: str, tree: Any) -> None:
+        """Count a BLOCKING host sync: the caller is about to fetch ``tree``
+        and (at least one leaf of) it has not finished computing.  Fetches
+        of already-ready data are free and not counted — the async pipeline
+        lands entries only once ready, so its steady state records zero."""
+        leaves = [a for a in jax.tree_util.tree_leaves(tree)
+                  if isinstance(a, jax.Array)]
+        if any(not a.is_ready() for a in leaves):
+            self._metrics.counter("host_syncs_total", {"site": site}).inc()
+
     # -- admission -----------------------------------------------------
 
     def submit(self, req: Request) -> None:
@@ -136,11 +288,48 @@ class ServeLoop:
         self._metrics.counter("serve_requests_submitted").inc()
         self.queue.put(req)
 
+    def _group_key(self, req: Request) -> tuple:
+        """Sort key grouping requests that will share a prefill wave AND a
+        cached prefix: prompt length first (waves coalesce per length),
+        then the matched store key — or, before anything is published, the
+        prompt's first hash-block, which groups same-base prompts ahead of
+        their first publication."""
+        if self.prefix_store is not None:
+            pk = self.prefix_store.peek(req.prompt)
+            if pk is not None:
+                return (len(req.prompt), pk[0])
+        block = (self.prefix_store.block if self.prefix_store is not None
+                 else self.prefix.block if self.prefix is not None else 4)
+        h = prefix_hashes(req.prompt[:block])[-1] if req.prompt else 0
+        return (len(req.prompt), h)
+
+    def _admission_order(self, n: int) -> list[Request]:
+        """Pick the next ``n`` requests to admit.  FIFO unless ``reorder``;
+        with reorder, requests overdue past the fairness age bound go first
+        (FIFO among themselves) and the rest stable-sort by prefix group."""
+        for r in self.pending:
+            r.wait_rounds += 1
+        if not self.reorder:
+            take, self.pending = self.pending[:n], self.pending[n:]
+            return take
+        overdue = [r for r in self.pending
+                   if r.wait_rounds > self.reorder_age_bound]
+        rest = [r for r in self.pending
+                if r.wait_rounds <= self.reorder_age_bound]
+        rest.sort(key=self._group_key)  # stable: FIFO within a group
+        ordered = overdue + rest
+        take = ordered[:n]
+        self.pending = ordered[n:]
+        return take
+
     def _admit(self) -> None:
+        while not self.queue.empty():
+            self.pending.append(self.queue.get())
         free = [s for s in range(self.slots) if self.active[s] is None]
-        wave: list[tuple[int, Request]] = []
-        while free and not self.queue.empty():
-            wave.append((free.pop(0), self.queue.get()))
+        if not free or not self.pending:
+            return
+        wave = [(free.pop(0), req)
+                for req in self._admission_order(len(free))]
         if not wave:
             return
         with obs_tracing.span("admit", wave=len(wave)):
@@ -172,10 +361,12 @@ class ServeLoop:
     def _prefix_publish(self, group: list[tuple[int, Request]],
                         pf_carry, matches: list) -> None:
         """Publish the wave's converged prefill carries and drop leases."""
+        lr = pf_carry.lowrank
+        self._count_sync("prefix_publish", (pf_carry.z, lr.u, lr.v, lr.count))
         z_np = np.asarray(jax.device_get(pf_carry.z))
-        u_np = np.asarray(jax.device_get(pf_carry.lowrank.u))
-        v_np = np.asarray(jax.device_get(pf_carry.lowrank.v))
-        c_np = np.asarray(jax.device_get(pf_carry.lowrank.count))
+        u_np = np.asarray(jax.device_get(lr.u))
+        v_np = np.asarray(jax.device_get(lr.v))
+        c_np = np.asarray(jax.device_get(lr.count))
         for row, (_slot, req) in enumerate(group):
             self.prefix.publish(req.prompt, z_np[row], u_np[:, row],
                                 v_np[:, row], int(c_np[row]))
@@ -189,100 +380,487 @@ class ServeLoop:
         for slot, req in wave:
             by_len.setdefault(len(req.prompt), []).append((slot, req))
         for plen, group in by_len.items():
-            # the prefix-on program takes two extra traced args (the seed
-            # carry + per-row match lengths) — a distinct jit cache entry,
-            # but ONE program per (plen, wave) across all match lengths
-            key = (plen, len(group), self.prefix is not None)
-            if key not in self._prefill_cache:
-                if self.carries is None:
-                    self._prefill_cache[key] = jax.jit(
-                        lambda p, toks: lm.prefill(
-                            p, {"tokens": toks}, self.cfg, self.ctx,
-                            self.max_len
-                        )
+            if self.pipeline == "async":
+                self._prefill_group_async(plen, group)
+            else:
+                self._prefill_group_sync(plen, group)
+
+    def _prefill_group_sync(self, plen: int,
+                            group: list[tuple[int, Request]]) -> None:
+        # the prefix-on program takes two extra traced args (the seed
+        # carry + per-row match lengths) — a distinct jit cache entry,
+        # but ONE program per (plen, wave) across all match lengths
+        key = (plen, len(group), self.prefix is not None)
+        if key not in self._prefill_cache:
+            if self.carries is None:
+                self._prefill_cache[key] = jax.jit(
+                    lambda p, toks: lm.prefill(
+                        p, {"tokens": toks}, self.cfg, self.ctx,
+                        self.max_len
                     )
-                elif self.prefix is None:
-                    # wave-shaped cold carry: prefill seeds it with the last
-                    # token's equilibrium (token-to-token reuse from token 0)
-                    wave_carry = lm.deq_solve_carry(self.cfg, len(group), 1)
-                    self._prefill_cache[key] = jax.jit(
-                        lambda p, toks, _c=wave_carry: lm.prefill(
-                            p, {"tokens": toks}, self.cfg, self.ctx,
-                            self.max_len, carry=_c
-                        )
+                )
+            elif self.prefix is None:
+                # wave-shaped cold carry: prefill seeds it with the last
+                # token's equilibrium (token-to-token reuse from token 0)
+                wave_carry = lm.deq_solve_carry(self.cfg, len(group), 1)
+                self._prefill_cache[key] = jax.jit(
+                    lambda p, toks, _c=wave_carry: lm.prefill(
+                        p, {"tokens": toks}, self.cfg, self.ctx,
+                        self.max_len, carry=_c
                     )
-                else:
-                    wave_carry = lm.deq_solve_carry(self.cfg, len(group), 1)
-                    self._prefill_cache[key] = jax.jit(
-                        lambda p, toks, pc, pl, _c=wave_carry: lm.prefill(
-                            p, {"tokens": toks}, self.cfg, self.ctx,
-                            self.max_len, carry=_c, prefix_carry=pc,
-                            prefix_len=pl
-                        )
+                )
+            else:
+                wave_carry = lm.deq_solve_carry(self.cfg, len(group), 1)
+                self._prefill_cache[key] = jax.jit(
+                    lambda p, toks, pc, pl, _c=wave_carry: lm.prefill(
+                        p, {"tokens": toks}, self.cfg, self.ctx,
+                        self.max_len, carry=_c, prefix_carry=pc,
+                        prefix_len=pl
                     )
-            toks = jnp.asarray([req.prompt for _, req in group], jnp.int32)
-            matches = None
-            with obs_tracing.span("prefill", plen=plen, wave=len(group)):
-                if self.prefix is None:
-                    out = self._prefill_cache[key](self.params, toks)
-                else:
-                    matches, snapshots = self._prefix_lookup(plen, group)
-                    pc, pl = lm.prefix_seed_carry(
-                        self.cfg, len(group), plen, snapshots)
-                    out = self._prefill_cache[key](self.params, toks, pc, pl)
-                logits = jax.block_until_ready(out[0])
-            cache_new = out[1]
-            seeded = out[3] if self.carries is not None else None
-            if self.prefix is not None:
-                pf_carry, steps = out[4], float(jax.device_get(out[5]))
+                )
+        toks = jnp.asarray([req.prompt for _, req in group], jnp.int32)
+        matches = None
+        with obs_tracing.span("prefill", plen=plen, wave=len(group)):
+            if self.prefix is None:
+                out = self._prefill_cache[key](self.params, toks)
+            else:
+                matches, snapshots = self._prefix_lookup(plen, group)
+                pc, pl = lm.prefix_seed_carry(
+                    self.cfg, len(group), plen, snapshots)
+                out = self._prefill_cache[key](self.params, toks, pc, pl)
+            self._count_sync("prefill_block", out[0])
+            logits = jax.block_until_ready(out[0])
+        cache_new = out[1]
+        seeded = out[3] if self.carries is not None else None
+        steps = None
+        if self.prefix is not None:
+            self._count_sync("steps_fetch", out[5])
+            pf_carry, steps = out[4], float(jax.device_get(out[5]))
+            self.prefill_iters += steps
+            ck = (plen, len(group))
+            if any(m is not None for m in matches):
+                ref = self._cold_prefill_ref.get(ck)
+                if ref is not None:
+                    saved = max(0.0, ref - steps)
+                    self.saved_iters += saved
+                    obs_metrics.record_prefix_saved_iters([saved])
+            else:
+                # all-miss wave == the cold path bit-for-bit: its step
+                # count is the cold reference for this program shape
+                self._cold_prefill_ref.setdefault(ck, steps)
+            self._prefix_publish(group, pf_carry, matches)
+        self.prefill_calls += 1
+        self.prefill_requests += len(group)
+        self._metrics.counter("serve_prefill_calls").inc()
+        self._metrics.counter("serve_prefill_requests").inc(len(group))
+        if self.carries is not None:
+            # one batched scatter per wave: the scatter overwrites every
+            # field of the leased rows, so the lease skips its own
+            # device-side reset (ownership bookkeeping only)
+            for slot, req in group:
+                self.carries.lease(slot, req.uid, reset=False)
+            self.carries.update(write_carry_rows(
+                self.carries.carry, seeded,
+                [slot for slot, _ in group], list(range(len(group)))))
+        for row, (slot, req) in enumerate(group):
+            self.caches = jax.tree_util.tree_map(
+                lambda live, new, ax: _slot_write(live, new, slot, row, ax),
+                self.caches, cache_new, self._cache_batch_axis,
+            )
+            nxt = int(jnp.argmax(logits[row, -1]))
+            req.out.append(nxt)
+            # first token emitted here: one TTFT observation per request
+            self._metrics.histogram("serve_ttft_ms").observe(
+                (time.perf_counter() - req.t_submit) * 1e3)
+            if self._record:
+                self.recorded_logits.setdefault(req.uid, []).append(
+                    np.asarray(logits[row, -1]))
+                if steps is not None:
+                    self.recorded_steps.setdefault(req.uid, []).append(steps)
+            self.active[slot] = req
+            self.lengths = self.lengths.at[slot].set(plen)
+            self.cur_tok = self.cur_tok.at[slot].set(nxt)
+
+    # -- async pipeline ---------------------------------------------------
+
+    def _make_prefill_async(self, nrows: int):
+        """Build the jitted async prefill program for a wave of ``nrows``:
+        gather prefix carries from the device store, solve, scatter the
+        converged carry back, pick next tokens, AND integrate the wave into
+        the live slot state (KV caches, carry rows, lengths/cur_tok/active
+        masks) — all in ONE program.  Folding the slot scatters in-jit
+        matters: done eagerly they cost ~17 un-jitted dispatches per wave,
+        which dominated the drain's host time."""
+        cfg, ctx, max_len = self.cfg, self.ctx, self.max_len
+        record = self._record
+        cache_axes = self._cache_batch_axis
+
+        def integrate(slots_arr, mnt_vec, caches_live, caches_new, state,
+                      plen, nxt):
+            lengths, cur_tok, dev_active, ntok, max_new = state
+            caches2 = jax.tree_util.tree_map(
+                lambda live, new, ax: _slot_scatter_rows(
+                    live, new, slots_arr, ax),
+                caches_live, caches_new, cache_axes)
+            return caches2, (
+                lengths.at[slots_arr].set(plen),
+                cur_tok.at[slots_arr].set(nxt),
+                dev_active.at[slots_arr].set(True),
+                ntok.at[slots_arr].set(1),
+                max_new.at[slots_arr].set(mnt_vec),
+            )
+
+        if self.prefix_store is not None:
+            def fn(params, toks, store, slot_in, plen_vec, pub,
+                   slots_arr, mnt_vec, caches_live, carry_live, state):
+                wave_carry = lm.deq_solve_carry(cfg, nrows, 1)
+                pc, pl = lm.prefix_gather_carry(
+                    cfg, nrows, toks.shape[1], store, slot_in, plen_vec)
+                logits, caches, _lens, seeded, pf_carry, steps = lm.prefill(
+                    params, {"tokens": toks}, cfg, ctx, max_len,
+                    carry=wave_carry, prefix_carry=pc, prefix_len=pl)
+                new_store = prefix_store_scatter(store, pf_carry, pub)
+                nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+                caches2, state2 = integrate(
+                    slots_arr, mnt_vec, caches_live, caches, state,
+                    toks.shape[1], nxt)
+                carry2 = write_carry_rows(
+                    carry_live, seeded, slots_arr,
+                    jnp.arange(nrows, dtype=jnp.int32))
+                out = {"nxt": nxt, "steps": steps}
+                if record:
+                    out["logits"] = logits[:, -1]
+                return caches2, carry2, new_store, state2, out
+            # donate every piece of live slot state plus the store: the
+            # scatters then update buffers in place instead of
+            # copy-on-write of each full cache; the caller rebinds all
+            # returned arrays immediately
+            return jax.jit(fn, donate_argnums=(2, 8, 9, 10))
+
+        if self.carries is not None:
+            def fn(params, toks, slots_arr, mnt_vec, caches_live,
+                   carry_live, state):
+                wave_carry = lm.deq_solve_carry(cfg, nrows, 1)
+                logits, caches, _lens, seeded = lm.prefill(
+                    params, {"tokens": toks}, cfg, ctx, max_len,
+                    carry=wave_carry)
+                nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+                caches2, state2 = integrate(
+                    slots_arr, mnt_vec, caches_live, caches, state,
+                    toks.shape[1], nxt)
+                carry2 = write_carry_rows(
+                    carry_live, seeded, slots_arr,
+                    jnp.arange(nrows, dtype=jnp.int32))
+                out = {"nxt": nxt}
+                if record:
+                    out["logits"] = logits[:, -1]
+                return caches2, carry2, state2, out
+            return jax.jit(fn, donate_argnums=(4, 5, 6))
+
+        def fn(params, toks, slots_arr, mnt_vec, caches_live, state):
+            logits, caches, _lens = lm.prefill(
+                params, {"tokens": toks}, cfg, ctx, max_len)
+            nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+            caches2, state2 = integrate(
+                slots_arr, mnt_vec, caches_live, caches, state,
+                toks.shape[1], nxt)
+            out = {"nxt": nxt}
+            if record:
+                out["logits"] = logits[:, -1]
+            return caches2, state2, out
+        return jax.jit(fn, donate_argnums=(4, 5))
+
+    def _prefill_group_async(self, plen: int,
+                             group: list[tuple[int, Request]]) -> None:
+        key = ("async", plen, len(group), self.prefix_store is not None)
+        if key not in self._prefill_cache:
+            self._prefill_cache[key] = self._make_prefill_async(len(group))
+        fn = self._prefill_cache[key]
+        toks = jnp.asarray([req.prompt for _, req in group], jnp.int32)
+        tag = next(self._tags)
+        meta: dict[str, Any] = {"plen": plen}
+        slots_arr = jnp.asarray([s for s, _ in group], jnp.int32)
+        mnt_vec = jnp.asarray([req.max_new_tokens for _, req in group],
+                              jnp.int32)
+        state = (self.lengths, self.cur_tok, self._dev_active, self._ntok,
+                 self._max_new)
+        with obs_tracing.span("prefill_dispatch", plen=plen,
+                              wave=len(group)):
+            if self.prefix_store is not None:
+                # host bookkeeping only (tiny ints): longest-prefix-match
+                # slot ids, then publish planning — the payload stays on
+                # device end to end
+                slot_in, plen_vec = [], []
+                for _slot, req in group:
+                    m = self.prefix_store.lookup(req.prompt)
+                    if m is None:
+                        slot_in.append(self.prefix_store.scratch)
+                        plen_vec.append(0)
+                        obs_metrics.record_prefix_lookup(
+                            "miss", prompt_tokens=plen)
+                    else:
+                        slot_in.append(m.slot)
+                        plen_vec.append(m.length)
+                        obs_metrics.record_prefix_lookup(
+                            "hit" if m.exact else "partial",
+                            matched_tokens=m.length, prompt_tokens=plen)
+                pub = [self.prefix_store.plan_publish(req.prompt)
+                       for _slot, req in group]
+                meta["hit"] = any(p > 0 for p in plen_vec)
+                self.caches, carry, new_store, state, out = fn(
+                    self.params, toks, self.prefix_store.arrays,
+                    jnp.asarray(slot_in, jnp.int32),
+                    jnp.asarray(plen_vec, jnp.int32),
+                    jnp.asarray(pub, jnp.int32),
+                    slots_arr, mnt_vec, self.caches, self.carries.carry,
+                    state)
+                self.carries.carry = carry
+                self.prefix_store.adopt(new_store)
+            elif self.carries is not None:
+                self.caches, carry, state, out = fn(
+                    self.params, toks, slots_arr, mnt_vec, self.caches,
+                    self.carries.carry, state)
+                self.carries.carry = carry
+            else:
+                self.caches, state, out = fn(
+                    self.params, toks, slots_arr, mnt_vec, self.caches,
+                    state)
+            (self.lengths, self.cur_tok, self._dev_active, self._ntok,
+             self._max_new) = state
+            for slot, req in group:
+                self.active[slot] = req
+                self._planned[slot] = 1
+            if self.carries is not None:
+                for slot, req in group:
+                    self.carries.lease(slot, req.uid, reset=False)
+        self.prefill_calls += 1
+        self.prefill_requests += len(group)
+        self._metrics.counter("serve_prefill_calls").inc()
+        self._metrics.counter("serve_prefill_requests").inc(len(group))
+        self._watch(tag, out)
+        self._push(_Inflight("prefill", tag, list(group), out,
+                             time.perf_counter(), meta))
+
+    def _make_tick(self):
+        """The jitted async decode tick: solve, pick tokens, and advance the
+        ENTIRE slot lifecycle (lengths, emitted counts, EOS/max-new done
+        mask, carry staleness reset) on device — the host only receives the
+        small outputs dict, later, through the completion queue."""
+        cfg, ctx, eos = self.cfg, self.ctx, self.eos
+        record = self._record
+        max_age = self.carries.max_age if self.carries is not None else None
+
+        def advance(logits, cur_tok, lengths, active, ntok, max_new):
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+            nxt = jnp.where(active, nxt, cur_tok)
+            act_i = active.astype(jnp.int32)
+            ntok2 = ntok + act_i
+            done_now = active & ((nxt == eos) | (ntok2 >= max_new))
+            return nxt, lengths + act_i, active & ~done_now, ntok2, done_now
+
+        if self.carries is not None:
+            def tick(params, caches, cur_tok, lengths, active, ntok,
+                     max_new, carry):
+                logits, caches, carry, steps = lm.decode_step(
+                    params, caches, cur_tok, lengths, cfg, ctx,
+                    active=active, carry=carry, return_steps=True)
+                nxt, lengths2, active2, ntok2, done_now = advance(
+                    logits, cur_tok, lengths, active, ntok, max_new)
+                n_stale = jnp.int32(0)
+                if max_age is not None:
+                    stale = carry.age > max_age
+                    n_stale = jnp.sum(stale.astype(jnp.int32))
+                    carry = reset_carry_rows(carry, stale)
+                out = {"nxt": nxt, "emitted": active, "done": done_now,
+                       "steps": steps, "n_stale": n_stale}
+                if record:
+                    out["logits"] = logits
+                return caches, carry, nxt, lengths2, active2, ntok2, out
+            # donate caches + carry (the only large per-tick state): the
+            # in-place cache append / carry update skips a full buffer
+            # copy every tick; ``_dispatch_tick`` rebinds both outputs
+            # immediately so the stale inputs are never touched again
+            return jax.jit(tick, donate_argnums=(1, 7))
+
+        def tick(params, caches, cur_tok, lengths, active, ntok,
+                 max_new):
+            logits, caches, steps = lm.decode_step(
+                params, caches, cur_tok, lengths, cfg, ctx, active=active,
+                return_steps=True)
+            nxt, lengths2, active2, ntok2, done_now = advance(
+                logits, cur_tok, lengths, active, ntok, max_new)
+            out = {"nxt": nxt, "emitted": active, "done": done_now,
+                   "steps": steps, "n_stale": jnp.int32(0)}
+            if record:
+                out["logits"] = logits
+            return caches, nxt, lengths2, active2, ntok2, out
+        return jax.jit(tick, donate_argnums=(1,))
+
+    def _tickable(self) -> bool:
+        """True if some slot still has host-predicted tokens to generate
+        (EOS may finish a slot earlier on device; the host learns at that
+        tick's landing, so at most ``async_depth`` frozen ticks follow)."""
+        return any(r is not None and not r.done
+                   and self._planned[s] < r.max_new_tokens
+                   for s, r in enumerate(self.active))
+
+    def _dispatch_tick(self) -> None:
+        tag = next(self._tags)
+        group = [(s, r) for s, r in enumerate(self.active)
+                 if r is not None and not r.done]
+        for s, r in group:
+            if self._planned[s] < r.max_new_tokens:
+                self._planned[s] += 1
+        with obs_tracing.span("decode_dispatch", active=len(group)):
+            if self.carries is not None:
+                (self.caches, carry, self.cur_tok, self.lengths,
+                 self._dev_active, self._ntok, out) = self._tick_fn(
+                    self.params, self.caches, self.cur_tok, self.lengths,
+                    self._dev_active, self._ntok, self._max_new,
+                    self.carries.carry)
+                self.carries.carry = carry
+            else:
+                (self.caches, self.cur_tok, self.lengths,
+                 self._dev_active, self._ntok, out) = self._tick_fn(
+                    self.params, self.caches, self.cur_tok, self.lengths,
+                    self._dev_active, self._ntok, self._max_new)
+        self._watch(tag, out)
+        self._push(_Inflight("tick", tag, group, out, time.perf_counter()))
+
+    def _push(self, entry: _Inflight) -> None:
+        self._inflight.append(entry)
+        self._metrics.gauge("serve_pipeline_inflight").set(
+            len(self._inflight))
+
+    def _pop_stamp(self, tag: int) -> float:
+        # the watcher thread is blocked on this entry's (or an earlier)
+        # token array, which is ready by landing time — its stamp can lag
+        # by a scheduling quantum at most, so wait briefly and fall back
+        # to the landing wall clock rather than stall the pipeline
+        with self._stamp_cv:
+            t = self._stamps.pop(tag, None)
+            if t is None:
+                self._stamp_cv.wait(timeout=2e-3)
+                t = self._stamps.pop(tag, None)
+        return t if t is not None else time.perf_counter()
+
+    def _entry_ready(self, e: _Inflight) -> bool:
+        return all(a.is_ready()
+                   for a in jax.tree_util.tree_leaves(e.arrays))
+
+    def _drain_ready(self, force: bool = False) -> int:
+        """Land every completion-queue entry whose arrays are ready; with
+        ``force``, cooperatively poll (no blocking device fetch) until at
+        least the oldest entry lands."""
+        landed = 0
+        while self._inflight:
+            e = self._inflight[0]
+            if not self._entry_ready(e):
+                if not force:
+                    break
+                with obs_tracing.span("pipeline_wait", kind=e.kind):
+                    # sleep until the watcher thread stamps this entry's
+                    # token array, NOT a blocking device fetch and not a
+                    # spin (which would steal cycles from XLA's compute
+                    # pool); the device keeps working through its queue
+                    # of already-dispatched programs the whole wait
+                    with self._stamp_cv:
+                        while (e.tag not in self._stamps
+                               and not self._entry_ready(e)):
+                            self._stamp_cv.wait(timeout=5e-3)
+            self._inflight.popleft()
+            self._land(e)
+            landed += 1
+            force = False
+        self._metrics.gauge("serve_pipeline_inflight").set(
+            len(self._inflight))
+        return landed
+
+    def _land(self, e: _Inflight) -> None:
+        # arrays are ready (checked/polled above): this fetch cannot block,
+        # so the steady-state drain records zero host_syncs_total
+        self._count_sync(f"{e.kind}_land", e.arrays)
+        out = {k: np.asarray(jax.device_get(v)) for k, v in e.arrays.items()}
+        t_land = self._pop_stamp(e.tag)
+        if e.kind == "prefill":
+            nxt = out["nxt"]
+            for row, (_slot, req) in enumerate(e.group):
+                req.out.append(int(nxt[row]))
+                self._metrics.histogram("serve_ttft_ms").observe(
+                    (t_land - req.t_submit) * 1e3)
+                if self._record and "logits" in out:
+                    self.recorded_logits.setdefault(req.uid, []).append(
+                        out["logits"][row])
+            if "steps" in out:
+                steps = float(out["steps"])
                 self.prefill_iters += steps
-                ck = (plen, len(group))
-                if any(m is not None for m in matches):
+                ck = (e.meta["plen"], len(e.group))
+                if e.meta.get("hit"):
                     ref = self._cold_prefill_ref.get(ck)
                     if ref is not None:
                         saved = max(0.0, ref - steps)
                         self.saved_iters += saved
                         obs_metrics.record_prefix_saved_iters([saved])
                 else:
-                    # all-miss wave == the cold path bit-for-bit: its step
-                    # count is the cold reference for this program shape
                     self._cold_prefill_ref.setdefault(ck, steps)
-                self._prefix_publish(group, pf_carry, matches)
-            self.prefill_calls += 1
-            self.prefill_requests += len(group)
-            self._metrics.counter("serve_prefill_calls").inc()
-            self._metrics.counter("serve_prefill_requests").inc(len(group))
-            if self.carries is not None:
-                # one batched scatter per wave: the scatter overwrites every
-                # field of the leased rows, so the lease skips its own
-                # device-side reset (ownership bookkeeping only)
-                for slot, req in group:
-                    self.carries.lease(slot, req.uid, reset=False)
-                self.carries.update(write_carry_rows(
-                    self.carries.carry, seeded,
-                    [slot for slot, _ in group], list(range(len(group)))))
-            for row, (slot, req) in enumerate(group):
-                self.caches = jax.tree_util.tree_map(
-                    lambda live, new, ax: _slot_write(live, new, slot, row, ax),
-                    self.caches, cache_new, self._cache_batch_axis,
-                )
-                nxt = int(jnp.argmax(logits[row, -1]))
-                req.out.append(nxt)
-                # first token emitted here: one TTFT observation per request
-                self._metrics.histogram("serve_ttft_ms").observe(
-                    (time.perf_counter() - req.t_submit) * 1e3)
-                self.active[slot] = req
-                self.lengths = self.lengths.at[slot].set(plen)
-                self.cur_tok = self.cur_tok.at[slot].set(nxt)
+                if self._record:
+                    for _slot, req in e.group:
+                        self.recorded_steps.setdefault(req.uid, []).append(
+                            steps)
+            return
+        # decode tick: append emitted tokens, retire done requests
+        nxt, emitted, done = out["nxt"], out["emitted"], out["done"]
+        prev = self._last_tick_stamp
+        self._last_tick_stamp = t_land
+        tok_ms = (t_land - (prev if prev is not None else e.t_dispatch)) * 1e3
+        for slot, req in e.group:
+            if emitted[slot]:
+                req.out.append(int(nxt[slot]))
+                self._metrics.histogram("serve_token_ms").observe(tok_ms)
+                self._metrics.counter("serve_tokens_total").inc()
+                if self._record:
+                    if "logits" in out:
+                        self.recorded_logits.setdefault(req.uid, []).append(
+                            out["logits"][slot])
+                    self.recorded_steps.setdefault(req.uid, []).append(
+                        float(out["steps"]))
+            if done[slot] and not req.done:
+                req.done = True
+                if self.active[slot] is req:
+                    self.active[slot] = None
+                self._metrics.counter("serve_requests_completed").inc()
+                if self.carries is not None:
+                    self.carries.release(slot)
+        n_stale = int(out.get("n_stale", 0))
+        if n_stale and self.carries is not None:
+            self.carries._count("stale", n_stale)
 
     # -- engine tick -----------------------------------------------------
 
     def step(self) -> int:
-        """One decode tick for all active slots; returns #active."""
+        """One engine iteration.  Sync: admit + one blocking decode tick
+        (returns #active).  Async: land ready completions, admit, and
+        dispatch the next tick without waiting for the previous one."""
+        if self.pipeline == "async":
+            return self._step_async()
         with obs_tracing.span("serve_tick"):
-            return self._step()
+            return self._step_sync()
 
-    def _step(self) -> int:
+    def _step_async(self) -> int:
+        self._drain_ready()
+        if len(self._inflight) >= self.async_depth:
+            self._drain_ready(force=True)
+        self._admit()
+        while len(self._inflight) >= self.async_depth:
+            self._drain_ready(force=True)
+        if self._tickable():
+            self._dispatch_tick()
+            return len(self._inflight)
+        if self._inflight:
+            self._drain_ready(force=True)
+        return len(self._inflight)
+
+    def _step_sync(self) -> int:
         self._admit()
         mask = np.array([r is not None and not r.done for r in self.active])
         if not mask.any():
@@ -290,21 +868,28 @@ class ServeLoop:
         t0 = time.perf_counter()
         with obs_tracing.span("decode", active=int(mask.sum())):
             if self.carries is None:
-                logits, self.caches = self._decode(
+                out = self._decode(
                     self.params, self.caches, self.cur_tok, self.lengths,
                     jnp.asarray(mask),
                 )
+                logits, self.caches = out[0], out[1]
             else:
-                logits, self.caches, new_carry = self._decode(
+                out = self._decode(
                     self.params, self.caches, self.cur_tok, self.lengths,
                     jnp.asarray(mask), self.carries.carry,
                 )
+                logits, self.caches, new_carry = out[0], out[1], out[2]
+                if self.carries.max_age is not None:
+                    self._count_sync("carry_stale", new_carry.age)
                 self.carries.update(new_carry)
+            steps = float(out[-1]) if self._record else None
+            self._count_sync("decode_fetch", logits)
             nxt = np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))
         tok_ms = (time.perf_counter() - t0) * 1e3
         self.lengths = self.lengths + jnp.asarray(mask, jnp.int32)
         self.cur_tok = jnp.where(jnp.asarray(mask), jnp.asarray(nxt),
                                  self.cur_tok)
+        logits_np = np.asarray(logits) if self._record else None
         for s, req in enumerate(self.active):
             if req is None or req.done:
                 continue
@@ -313,6 +898,10 @@ class ServeLoop:
             # the tick's decode wall, once per token generated this tick
             self._metrics.histogram("serve_token_ms").observe(tok_ms)
             self._metrics.counter("serve_tokens_total").inc()
+            if self._record:
+                self.recorded_logits.setdefault(req.uid, []).append(
+                    logits_np[s])
+                self.recorded_steps.setdefault(req.uid, []).append(steps)
             if tok == self.eos or len(req.out) >= req.max_new_tokens:
                 req.done = True
                 self.active[s] = None
@@ -327,10 +916,14 @@ class ServeLoop:
                 self.submit(r)
             ticks = 0
             while (not self.queue.empty()
+                   or self.pending
                    or any(a is not None for a in self.active)
+                   or self._inflight
                    ) and ticks < max_ticks:
                 self.step()
                 ticks += 1
+            if self._inflight:
+                self._drain_ready(force=True)
         return reqs
 
 
@@ -346,3 +939,16 @@ def _slot_write(live: jax.Array, new: jax.Array, slot: int, row: int,
     piece = new[tuple(idx)]
     idx[batch_axis] = slice(slot, slot + 1)
     return live.at[tuple(idx)].set(piece)
+
+
+def _slot_scatter_rows(live: jax.Array, new: jax.Array, slots_arr: jax.Array,
+                       batch_axis: int) -> jax.Array:
+    """Vectorized :func:`_slot_write`: scatter ALL batch rows of ``new``
+    into slots ``slots_arr`` of ``live`` in one op, with traced slot ids so
+    the whole wave integration can live inside a jitted program."""
+    if batch_axis < 0:
+        return live
+    live_m = jnp.moveaxis(live, batch_axis, 0)
+    new_m = jnp.moveaxis(new, batch_axis, 0)
+    out = live_m.at[slots_arr].set(new_m.astype(live_m.dtype))
+    return jnp.moveaxis(out, 0, batch_axis)

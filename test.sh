@@ -65,6 +65,14 @@ run_obs() {
     --shared-prefix 6 \
     --metrics-out results/obs/serve_prefix_metrics.json \
     --trace-out results/obs/serve_prefix_trace.json
+  # async-pipeline drain: device-resident caches + wave overlap + reorder;
+  # the validator asserts host_syncs_total == 0 (the steady state never
+  # blocks on unready device data) and a parseable Prometheus exposition
+  python -m repro.launch.serve --deq --requests 8 --slots 2 \
+    --max-new-tokens 4 --pipeline async --prefix-cache \
+    --prefix-cache-slots 8 --shared-prefix 6 --reorder \
+    --metrics-out results/obs/serve_async_metrics.json \
+    --metrics-prom-out results/obs/serve_async_metrics.prom
   python - <<'EOF'
 import json
 for p in ("results/obs/train_metrics.json", "results/obs/serve_metrics.json",
@@ -81,7 +89,17 @@ hits = sum(m["value"]
            if m["name"] == "prefix_cache_lookups_total"
            and m["labels"].get("outcome") in ("hit", "partial"))
 assert hits >= 1, "prefix-cache drain recorded no hits"
-print(f"obs: artifacts validated (results/obs/), prefix-cache hits={hits:.0f}")
+asnap = json.load(open("results/obs/serve_async_metrics.json"))
+syncs = sum(m["value"] for m in asnap["metrics"]
+            if m["name"] == "host_syncs_total")
+assert syncs == 0, f"async drain recorded {syncs} blocking host syncs"
+assert any(m["name"] == "serve_ttft_ms" and m["count"]
+           for m in asnap["metrics"]), "async drain recorded no TTFT"
+prom = open("results/obs/serve_async_metrics.prom").read()
+assert "# TYPE serve_ttft_ms histogram" in prom, "prom exposition broken"
+assert 'serve_ttft_ms_bucket{le="+Inf"}' in prom, "prom +Inf bucket missing"
+print(f"obs: artifacts validated (results/obs/), prefix-cache hits={hits:.0f},"
+      f" async host_syncs=0")
 EOF
 }
 

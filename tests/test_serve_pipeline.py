@@ -1,0 +1,345 @@
+"""Device-resident async serving pipeline tests.
+
+Four layers, mirroring the feature's stack:
+
+  * store (``DevicePrefixStore``): host bookkeeping for the device-resident
+    prefix cache — side-effect-free ``peek``, longest-prefix ``lookup`` by
+    slot id, ``plan_publish`` boundary creation / dedup-to-scratch, LRU and
+    staleness eviction;
+  * loop (``ServeLoop(pipeline="async")``): the correctness bar — an
+    async-overlapped drain emits BIT-identical logits and identical
+    per-request Broyden step sequences vs the synchronous PR 8 loop, while
+    recording zero blocking host syncs (``host_syncs_total``) in steady
+    state;
+  * admission (``reorder=True``): prefix grouping is a stable sort and the
+    fairness age bound turns overdue requests back into FIFO traffic, so
+    an unpopular prompt can never starve behind popular prefix groups;
+  * exporter (``MetricsRegistry.to_prom``): the Prometheus text exposition
+    the CI obs rehearsal scrapes — TYPE lines, cumulative ``_bucket``
+    series with a guaranteed ``+Inf``, label escaping, atomic writes, and
+    the flusher's final flush on ``stop()``.
+
+The loop tests reuse the contractive smoke setup from
+``test_prefix_cache.py`` (DEQ block weights scaled 0.3x) so prefill solves
+converge well inside ``max_steps`` and warm starts are observable.
+"""
+
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import smoke_config
+from repro.implicit import DevicePrefixStore
+from repro.models import lm
+from repro.obs import metrics as obs_metrics
+from repro.parallel.sharding import ShardCtx
+from repro.runtime.serving import Request, ServeLoop
+
+CTX = ShardCtx.for_mesh(None)
+
+
+def _deq_cfg(tol=1e-5, max_steps=100):
+    cfg = smoke_config("minicpm-2b", deq=True)
+    return dataclasses.replace(
+        cfg, num_layers=2, d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+        vocab_size=128, head_dim=16, dtype="float32",
+        deq=dataclasses.replace(cfg.deq, max_steps=max_steps, tol=tol,
+                                memory=16))
+
+
+def _deq_params(cfg, scale=0.3, seed=0):
+    params = lm.init_params(cfg, jax.random.PRNGKey(seed))
+    params["deq_blocks"] = jax.tree_util.tree_map(
+        lambda a: a * scale, params["deq_blocks"])
+    return params
+
+
+def _overlap_prompts(n=6, base_len=8, tail_len=4, vocab=128, seed=7):
+    rng = np.random.default_rng(seed)
+    base = rng.integers(2, vocab, size=base_len).tolist()
+    return [base + rng.integers(2, vocab, size=tail_len).tolist()
+            for _ in range(n)]
+
+
+def _host_syncs():
+    return sum(m["value"]
+               for m in obs_metrics.default_registry().snapshot()["metrics"]
+               if m["name"] == "host_syncs_total")
+
+
+def _drain(params, cfg, prompts, pipeline, max_new=3, **kw):
+    loop = ServeLoop(params, cfg, CTX, slots=3, max_len=64, eos_id=-1,
+                     pipeline=pipeline, prefix_cache=True,
+                     prefix_cache_slots=16, record=True, **kw)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+    loop.drain(reqs)
+    return loop, [r.out for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# store: host bookkeeping for the device-resident prefix cache
+# ---------------------------------------------------------------------------
+
+
+def _store(slots=4, seq=16, **kw):
+    return DevicePrefixStore(slots, seq, feat=4, memory=2, block=2, **kw)
+
+
+def test_store_plan_publish_creates_boundaries_then_dedupes():
+    st = _store()
+    toks = [3, 5, 7, 11, 13]
+    slot = st.plan_publish(toks)  # boundaries {2, 4, 5}
+    assert 0 <= slot < st.slots
+    assert len(st) == 3 and st.tokens_held() == 2 + 4 + 5
+    # the whole chain is already on device: republish is a refresh that
+    # scatters to the throw-away scratch row, consuming no capacity
+    assert st.plan_publish(toks) == st.scratch
+    assert len(st) == 3
+    # a shared base with a new tail only needs the new boundary's slot
+    created_before = len(st)
+    slot2 = st.plan_publish([3, 5, 7, 11, 99])
+    assert slot2 != st.scratch and len(st) == created_before + 1
+
+
+def test_store_lookup_prefers_longest_match_and_flags_exact():
+    st = _store()
+    toks = [3, 5, 7, 11, 13]
+    slot = st.plan_publish(toks)
+
+    exact = st.lookup(toks)
+    assert exact is not None and exact.exact
+    assert exact.slot == slot and exact.length == 5
+
+    partial = st.lookup([3, 5, 7, 11, 99])  # len-4 boundary wins over len-2
+    assert partial is not None and not partial.exact and partial.length == 4
+    assert st.lookup([4, 5, 7]) is None
+    assert st.stats()["hits"] == 2
+
+
+def test_store_peek_is_side_effect_free():
+    st = _store()
+    st.plan_publish([3, 5, 7, 11])
+    before = (st._clock, st.hits, st.lookups)
+    pk = st.peek([3, 5, 7, 11, 99])
+    assert pk is not None and pk[1] == 4
+    assert st.peek([9, 9]) is None
+    assert (st._clock, st.hits, st.lookups) == before
+
+
+def test_store_degenerate_publishes_go_to_scratch():
+    st = _store(slots=2, seq=8)
+    assert st.plan_publish([]) == st.scratch               # empty prompt
+    assert st.plan_publish(list(range(9))) == st.scratch   # > seq
+    zero = _store(slots=0)
+    assert zero.plan_publish([1, 2, 3]) == zero.scratch    # no capacity
+    assert zero.lookup([1, 2, 3]) is None
+
+
+def test_store_lru_evicts_oldest_slot_when_full():
+    st = _store(slots=2, seq=8, max_age=None)
+    st.plan_publish([1, 2])
+    st.plan_publish([3, 4])
+    st.lookup([1, 2])  # refresh slot A; slot B is now the LRU victim
+    st.plan_publish([5, 6])
+    assert st.evictions_by_reason["lru"] >= 1
+    assert st.lookup([1, 2]) is not None
+    assert st.lookup([3, 4]) is None
+
+
+def test_store_stale_sweep_with_max_age():
+    st = _store(max_age=2)
+    st.plan_publish([1, 2, 3])
+    for _ in range(4):  # every op advances the clock past max_age
+        assert st.lookup([9, 9, 9]) is None
+    assert len(st) == 0
+    assert st.evictions_by_reason["stale"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# loop: async vs sync parity + zero blocking host syncs
+# ---------------------------------------------------------------------------
+
+
+def test_async_drain_bit_identical_to_sync_with_zero_host_syncs():
+    """The acceptance bar for the pipeline rebuild: over an
+    overlapping-prefix stream through the device prefix store, the
+    async-overlapped drain must emit the sync loop's tokens, BIT-identical
+    last-position logits, identical per-request Broyden step sequences —
+    and never block on not-yet-ready device data (host_syncs_total delta
+    of exactly zero)."""
+    cfg = _deq_cfg()
+    params = _deq_params(cfg)
+    prompts = _overlap_prompts()
+
+    loop_s, out_s = _drain(params, cfg, prompts, "sync")
+    before = _host_syncs()
+    loop_a, out_a = _drain(params, cfg, prompts, "async", async_depth=2)
+    assert _host_syncs() - before == 0
+    assert out_a == out_s
+    assert all(out for out in out_s)
+
+    assert loop_a.recorded_steps == loop_s.recorded_steps
+    assert set(loop_a.recorded_logits) == set(loop_s.recorded_logits)
+    for uid, logits_s in loop_s.recorded_logits.items():
+        logits_a = loop_a.recorded_logits[uid]
+        assert len(logits_a) == len(logits_s)
+        for a, s in zip(logits_a, logits_s):
+            np.testing.assert_array_equal(a, s)
+    # both arms used the prefix store, and warm starts actually saved work
+    assert loop_a.prefix_store.stats()["hits"] >= 1
+    assert loop_a.saved_iters > 0
+
+
+def test_async_reorder_drain_matches_sync_tokens():
+    """Reordering changes WHEN a request is admitted, never WHAT it
+    generates: a reorder-on async drain emits exactly the sync loop's
+    per-request tokens, and every request completes (no starvation under a
+    real drain)."""
+    cfg = _deq_cfg()
+    params = _deq_params(cfg)
+    rng = np.random.default_rng(11)
+    # two prefix families + one loner that grouping would deprioritize
+    fam_a = _overlap_prompts(n=3, seed=1)
+    fam_b = _overlap_prompts(n=3, seed=2)
+    loner = [rng.integers(2, cfg.vocab_size, size=12).tolist()]
+    prompts = [fam_a[0], fam_b[0], loner[0], fam_a[1], fam_b[1],
+               fam_a[2], fam_b[2]]
+
+    _, out_s = _drain(params, cfg, prompts, "sync")
+    _, out_a = _drain(params, cfg, prompts, "async",
+                      reorder=True, reorder_age_bound=2)
+    assert out_a == out_s
+    assert all(out for out in out_a)
+
+
+# ---------------------------------------------------------------------------
+# admission: reorder policy + fairness age bound (no starvation)
+# ---------------------------------------------------------------------------
+
+
+def _policy_loop(**kw):
+    """A ServeLoop used ONLY for its _admission_order policy — tiny config,
+    nothing jitted, no drain."""
+    cfg = _deq_cfg()
+    params = _deq_params(cfg)
+    return ServeLoop(params, cfg, CTX, slots=2, max_len=32, eos_id=-1,
+                     prefix_cache=True, prefix_cache_slots=8, **kw)
+
+
+def _req(uid, prompt, rounds=0):
+    r = Request(uid=uid, prompt=prompt, max_new_tokens=1)
+    r.wait_rounds = rounds
+    return r
+
+
+def test_admission_fifo_without_reorder():
+    loop = _policy_loop(reorder=False)
+    loop.pending = [_req(i, [9 - i, i]) for i in range(4)]
+    take = loop._admission_order(3)
+    assert [r.uid for r in take] == [0, 1, 2]
+    assert [r.uid for r in loop.pending] == [3]
+
+
+def test_reorder_groups_shared_prefixes_stably():
+    loop = _policy_loop(reorder=True, reorder_age_bound=8)
+    base_a, base_b = [3, 5, 7, 11], [2, 4, 6, 8]
+    loop.pending = [
+        _req(0, base_a + [50, 51]),
+        _req(1, base_b + [60, 61]),
+        _req(2, base_a + [52, 53]),
+        _req(3, base_b + [62, 63]),
+    ]
+    order = [r.uid for r in loop._admission_order(4)]
+    # same-base prompts are adjacent, FIFO within each group (stable sort),
+    # and the first-submitted group leads
+    assert order == [0, 2, 1, 3]
+
+
+def test_reorder_age_bound_restores_fifo_for_overdue_requests():
+    """The no-starvation guarantee: once a request has been passed over
+    more than ``reorder_age_bound`` rounds, it is admitted FIFO ahead of
+    ANY prefix grouping — even when the sort would bury it."""
+    loop = _policy_loop(reorder=True, reorder_age_bound=3)
+    base = [3, 5, 7, 11]
+    # the loner sorts after the popular group (longer prompt, no shared
+    # base) and has already waited past the bound; _admission_order adds
+    # one more round, tipping it over
+    loner = _req(99, [120, 121, 122, 123, 124, 125], rounds=3)
+    loop.pending = [_req(0, base + [50]), _req(1, base + [51]), loner,
+                    _req(2, base + [52])]
+    take = loop._admission_order(2)
+    assert take[0].uid == 99
+    # fresh requests were not starved either: the remainder keeps grouping
+    assert {r.uid for r in take[1:]} | {r.uid for r in loop.pending} \
+        == {0, 1, 2}
+
+
+def test_reorder_age_bound_validation():
+    with pytest.raises(ValueError):
+        _policy_loop(reorder=True, reorder_age_bound=0)
+
+
+# ---------------------------------------------------------------------------
+# exporter: Prometheus text exposition
+# ---------------------------------------------------------------------------
+
+
+def test_prom_counters_and_gauges_render_with_type_lines():
+    reg = obs_metrics.MetricsRegistry()
+    reg.counter("reqs_total", {"outcome": "ok"}).inc(3)
+    reg.counter("reqs_total", {"outcome": "err"}).inc()
+    reg.gauge("inflight").set(2.5)
+    text = reg.to_prom()
+    assert "# TYPE reqs_total counter" in text
+    assert text.count("# TYPE reqs_total") == 1  # one TYPE line per family
+    assert 'reqs_total{outcome="ok"} 3\n' in text
+    assert 'reqs_total{outcome="err"} 1\n' in text
+    assert "# TYPE inflight gauge" in text
+    assert "inflight 2.5" in text
+    assert text.endswith("\n")
+
+
+def test_prom_histogram_buckets_are_cumulative_with_inf():
+    reg = obs_metrics.MetricsRegistry()
+    h = reg.histogram("lat_ms", buckets=(1.0, 10.0, float("inf")))
+    for v in (0.5, 0.6, 5.0, 100.0):
+        h.observe(v)
+    text = reg.to_prom()
+    assert "# TYPE lat_ms histogram" in text
+    assert 'lat_ms_bucket{le="1"} 2' in text
+    assert 'lat_ms_bucket{le="10"} 3' in text      # cumulative, not per-bin
+    assert 'lat_ms_bucket{le="+Inf"} 4' in text    # always present
+    assert "lat_ms_count 4" in text
+    assert "lat_ms_sum 106.1" in text
+
+
+def test_prom_name_and_label_escaping():
+    reg = obs_metrics.MetricsRegistry()
+    reg.counter("serve.tokens-total", {"site": 'a"b\\c\nd'}).inc()
+    reg.gauge("0weird").set(1)
+    text = reg.to_prom()
+    assert "serve_tokens_total" in text            # charset sanitized
+    assert '{site="a\\"b\\\\c\\nd"}' in text       # exposition escaping
+    assert "_0weird 1" in text                     # leading digit prefixed
+
+
+def test_write_prom_is_atomic_and_flusher_final_flushes(tmp_path):
+    reg = obs_metrics.MetricsRegistry()
+    reg.counter("c_total").inc(2)
+    path = str(tmp_path / "metrics.prom")
+    text = reg.write_prom(path)
+    assert open(path).read() == text
+    assert not [f for f in os.listdir(tmp_path) if ".tmp." in f]
+
+    # a flusher with a long interval still leaves a complete exposition
+    # behind: stop() performs one final flush
+    path2 = str(tmp_path / "flushed.prom")
+    flusher = obs_metrics.PromFlusher(path2, interval_s=3600.0,
+                                      registry=reg).start()
+    reg.counter("c_total").inc()
+    flusher.stop()
+    assert "c_total 3" in open(path2).read()
