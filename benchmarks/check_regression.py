@@ -45,6 +45,13 @@ the min pair still sees it, while a host contention burst would have to
 contaminate every pair to fake a failure.  This keeps "telemetry is
 ~free" an enforced invariant, not a hope.  ``--skip-obs-overhead``
 disables it; ``--obs-overhead`` runs ONLY it.
+
+Live mode also runs the **guard-overhead gate** with the identical
+methodology: the same probe compiled with the numerical-fault guards off
+(``ForwardConfig.guard=False`` — the pre-guard program) and on, gated at
+``--guard-ratio`` (default 1.05, the ISSUE's <= 5% wall budget) plus
+slack.  ``--skip-guard-overhead`` disables it; ``--guard-overhead`` runs
+ONLY it.
 """
 
 from __future__ import annotations
@@ -259,6 +266,89 @@ def check_obs_overhead(*, ratio: float, slack_ms: float, reps: int) -> int:
     return 0 if ok else 1
 
 
+def measure_guard_overhead(reps: int = 5) -> dict:
+    """Paired wall times of one jitted implicit solve+grad, fault guards
+    off vs on (``ForwardConfig.guard`` — a trace-time gate, exactly like
+    the obs switches: guard=False lowers the pre-guard program).
+
+    Same methodology as :func:`measure_obs_overhead`: pinned work
+    (tol=0 -> full max_steps both modes), fresh jit closures per mode,
+    interleaved off/on pairs gated on the cleanest pairwise delta.  The
+    guard's steady-state cost is a few elementwise selects + one fused
+    reduction per iteration riding an already-bandwidth-bound loop, so
+    the ISSUE's <= 5% wall budget is enforced here, not assumed."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.implicit import (BackwardConfig, ForwardConfig, ImplicitConfig,
+                                implicit_fixed_point)
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import tracing as obs_tracing
+
+    B, D = 8, 2048
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(rng.normal(size=(D, D)) / (2 * np.sqrt(D)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(B, D)), jnp.float32)
+
+    def f(params, xx, z):
+        return jnp.tanh(xx + z @ params)
+
+    def compiled(guard: bool):
+        cfg = ImplicitConfig(
+            forward=ForwardConfig(max_steps=30, tol=0.0, guard=guard),
+            backward=BackwardConfig(estimator="shine"),
+            memory=8,
+        )
+
+        def loss(params, xx):
+            z, _ = implicit_fixed_point(f, params, xx, jnp.zeros_like(xx), cfg)
+            return jnp.sum(z * z)
+
+        g = jax.jit(jax.grad(loss))
+        jax.block_until_ready(g(W, x))  # compile outside the timing
+        return g
+
+    def once(g) -> float:
+        t0 = time.perf_counter()
+        jax.block_until_ready(g(W, x))
+        return (time.perf_counter() - t0) * 1e3
+
+    # isolate the guard delta: the obs bridge must not ride either arm
+    was_m, was_t = obs_metrics.enabled(), obs_tracing.enabled()
+    obs_metrics.set_enabled(False)
+    obs_tracing.set_enabled(False)
+    try:
+        g_off = compiled(False)
+        g_on = compiled(True)
+        for _ in range(2):
+            once(g_off), once(g_on)
+        offs, deltas = [], []
+        for _ in range(reps):
+            off = once(g_off)
+            on = once(g_on)
+            offs.append(off)
+            deltas.append(on - off)
+    finally:
+        obs_metrics.set_enabled(was_m)
+        obs_tracing.set_enabled(was_t)
+    base = min(offs)
+    return {"baseline_ms": base,
+            "guarded_ms": base + max(min(deltas), 0.0)}
+
+
+def check_guard_overhead(*, ratio: float, slack_ms: float, reps: int) -> int:
+    m = measure_guard_overhead(reps=reps)
+    limit = ratio * m["baseline_ms"] + slack_ms
+    ok = m["guarded_ms"] <= limit
+    print(f"guard-overhead: unguarded {m['baseline_ms']:.2f}ms, "
+          f"guarded {m['guarded_ms']:.2f}ms, limit {limit:.2f}ms "
+          f"({ratio}x + {slack_ms}ms) -> {'ok' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
 class _Tee(io.TextIOBase):
     """Mirror writes to several text streams (stdout + the report buffer)."""
 
@@ -299,6 +389,13 @@ def main() -> int:
     ap.add_argument("--obs-ratio", type=float, default=1.05)
     ap.add_argument("--obs-slack-ms", type=float, default=2.0)
     ap.add_argument("--obs-reps", type=int, default=5)
+    ap.add_argument("--guard-overhead", action="store_true",
+                    help="run ONLY the fault-guard-overhead gate")
+    ap.add_argument("--skip-guard-overhead", action="store_true",
+                    help="skip the guard-overhead gate in live mode")
+    ap.add_argument("--guard-ratio", type=float, default=1.05)
+    ap.add_argument("--guard-slack-ms", type=float, default=2.0)
+    ap.add_argument("--guard-reps", type=int, default=5)
     ap.add_argument("--summary", type=Path, default=None,
                     help="append a markdown PASS/FAIL report of the gate's "
                          "output to this file (point it at "
@@ -319,6 +416,10 @@ def _run(args) -> int:
         return check_obs_overhead(ratio=args.obs_ratio,
                                   slack_ms=args.obs_slack_ms,
                                   reps=args.obs_reps)
+    if args.guard_overhead:
+        return check_guard_overhead(ratio=args.guard_ratio,
+                                    slack_ms=args.guard_slack_ms,
+                                    reps=args.guard_reps)
 
     if not args.baseline.exists():
         print(f"check_regression: baseline {args.baseline} missing -> FAIL "
@@ -347,6 +448,10 @@ def _run(args) -> int:
         bad |= check_obs_overhead(ratio=args.obs_ratio,
                                   slack_ms=args.obs_slack_ms,
                                   reps=args.obs_reps)
+    if live and not args.skip_guard_overhead:
+        bad |= check_guard_overhead(ratio=args.guard_ratio,
+                                    slack_ms=args.guard_slack_ms,
+                                    reps=args.guard_reps)
     return bad
 
 

@@ -32,6 +32,12 @@ from repro.obs import metrics as obs_metrics
 Pytree = Any
 
 
+class CheckpointCorruptionError(RuntimeError):
+    """A checkpoint directory failed integrity verification on restore
+    (unreadable/unparseable manifest, unloadable arrays, or an
+    arrays-vs-manifest key mismatch)."""
+
+
 def _flatten(tree: Pytree) -> dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
@@ -130,6 +136,30 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def _read_step(self, step: int) -> tuple[dict, dict[str, np.ndarray]]:
+        """Read + VERIFY one checkpoint: the manifest must parse, every
+        array named in it must decompress, and the stored key set must
+        match the manifest's — a truncated npz or a half-written/bit-rotted
+        directory raises :class:`CheckpointCorruptionError` instead of
+        restoring garbage parameters."""
+        base = os.path.join(self.dir, f"step_{step}")
+        try:
+            with open(os.path.join(base, "manifest.json")) as f:
+                manifest = json.load(f)
+            with np.load(os.path.join(base, "arrays.npz")) as data:
+                arrays = {k: data[k] for k in data.files}  # force full reads
+        except CheckpointCorruptionError:
+            raise
+        except Exception as e:
+            raise CheckpointCorruptionError(
+                f"checkpoint step_{step} unreadable: {e!r}") from e
+        if sorted(arrays) != list(manifest.get("keys", [])):
+            raise CheckpointCorruptionError(
+                f"checkpoint step_{step} corrupt: stored arrays do not match "
+                f"the manifest key list ({len(arrays)} stored vs "
+                f"{len(manifest.get('keys', []))} declared)")
+        return manifest, arrays
+
     def restore(
         self,
         template: Pytree,
@@ -147,15 +177,35 @@ class CheckpointManager:
         have — e.g. the ``.carry`` solve state restoring from a pre-carry
         checkpoint, where all-zeros IS the cold carry).  Any other missing
         key still raises: silently zeroing parameters would be catastrophic.
+
+        Integrity: each candidate checkpoint is verified before use (see
+        :meth:`_read_step`).  With ``step=None`` a corrupt latest checkpoint
+        falls back LOUDLY to the previous intact one (counted under the
+        ``checkpoint_corruptions_total`` metric); an explicitly requested
+        ``step`` raises :class:`CheckpointCorruptionError` instead.
         """
         self.wait()
-        step = step if step is not None else self.latest_step()
-        if step is None:
+        if step is None and not self.all_steps():
             raise FileNotFoundError(f"no checkpoints under {self.dir}")
-        base = os.path.join(self.dir, f"step_{step}")
-        with open(os.path.join(base, "manifest.json")) as f:
-            manifest = json.load(f)
-        data = np.load(os.path.join(base, "arrays.npz"))
+        if step is not None:
+            manifest, data = self._read_step(step)
+        else:
+            manifest = data = None
+            candidates = sorted(self.all_steps(), reverse=True)
+            for s in candidates:
+                try:
+                    manifest, data = self._read_step(s)
+                    step = s
+                    break
+                except CheckpointCorruptionError as e:
+                    obs_metrics.default_registry().counter(
+                        "checkpoint_corruptions_total").inc()
+                    print(f"checkpoint restore: {e} — falling back to the "
+                          f"previous checkpoint")
+            if data is None:
+                raise CheckpointCorruptionError(
+                    f"every checkpoint under {self.dir} failed verification "
+                    f"({candidates})")
 
         paths, treedef = jax.tree_util.tree_flatten_with_path(template)
         if shardings is None:
@@ -168,7 +218,7 @@ class CheckpointManager:
         filled = []
         for (path, tmpl), sh in zip(paths, shard_leaves):
             key = jax.tree_util.keystr(path)
-            if key not in data.files and any(
+            if key not in data and any(
                     key.startswith(p) for p in fill_missing_prefixes):
                 arr = np.zeros(tuple(tmpl.shape), tmpl.dtype)
                 filled.append(key)

@@ -32,6 +32,10 @@ class DEQSettings:
     # storage dtype of the quasi-Newton U/V ring (f32 accumulate regardless);
     # "float32" opts back into full-precision storage
     qn_dtype: str = "bfloat16"
+    # in-loop numerical-fault containment (per-sample detect / restart /
+    # freeze inside the solver; see core.SolverConfig). guard=False compiles
+    # the exact pre-guard program.
+    guard: bool = True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -249,3 +253,9 @@ class TrainConfig:
     # storage dtype of the quasi-Newton ring for DEQ solves launched by the
     # trainer; mirrored into DEQSettings.qn_dtype by the launch flag
     qn_dtype: str = "bfloat16"
+    # graceful degradation under numerical faults (ISSUE 10): a non-finite
+    # loss/grad-norm skips the parameter update with a traced where-select
+    # (no host sync on the hot path); past skip_budget CONSECUTIVE skipped
+    # steps the trainer rolls back to the last checkpoint
+    skip_nonfinite: bool = True
+    skip_budget: int = 5

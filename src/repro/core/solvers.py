@@ -38,6 +38,151 @@ Array = jax.Array
 
 
 # ---------------------------------------------------------------------------
+# Solve-health status codes (ISSUE 10): every solver reports a per-sample
+# int32 code on SolveResult/LBFGSResult.status.  With SolverConfig.guard on,
+# DIVERGED/NONFINITE/STALLED are detected INSIDE the while_loop (the sample
+# freezes and stops consuming iterations, after bounded in-jit recovery);
+# with guard off only CONVERGED/MAX_ITERS are derived at exit.
+# ---------------------------------------------------------------------------
+
+STATUS_CONVERGED = 0
+STATUS_MAX_ITERS = 1
+STATUS_DIVERGED = 2
+STATUS_NONFINITE = 3
+STATUS_STALLED = 4
+
+STATUS_NAMES = {
+    STATUS_CONVERGED: "converged",
+    STATUS_MAX_ITERS: "max_iters",
+    STATUS_DIVERGED: "diverged",
+    STATUS_NONFINITE: "nonfinite",
+    STATUS_STALLED: "stalled",
+}
+
+# Armed by repro.runtime.faultinject (chaos testing): when set, every batched
+# solver perturbs its post-step iterate through this hook.  None = zero
+# compiled residue (trace-time gate, same discipline as repro.obs).
+_FAULT_HOOK = None
+
+
+class _GuardState(NamedTuple):
+    """Per-sample fault-containment state riding a guarded solver loop."""
+
+    sick: Array       # (B,) bool — faulted rows frozen out of the loop
+    status: Array     # (B,) int32 — sticky STATUS_* (MAX_ITERS while live)
+    stall: Array      # (B,) int32 — consecutive zero-step count
+    restarts: Array   # (B,) int32 — recovery rounds consumed
+    stepscale: Array  # (B,) f32 — damping multiplier (1.0 until a restart)
+
+
+def _guard_init(bsz: int | None) -> _GuardState:
+    shape = () if bsz is None else (bsz,)
+    return _GuardState(
+        sick=jnp.zeros(shape, bool),
+        status=jnp.full(shape, STATUS_MAX_ITERS, jnp.int32),
+        stall=jnp.zeros(shape, jnp.int32),
+        restarts=jnp.zeros(shape, jnp.int32),
+        stepscale=jnp.ones(shape, jnp.float32),
+    )
+
+
+def _guard_detect(gs: _GuardState, cfg: "SolverConfig", active: Array,
+                  res: Array, step_norm: Array, div_ref: Array):
+    """One iteration of per-sample fault detection and recovery bookkeeping.
+
+    A non-finite residual, a residual past ``divergence_ratio x`` the
+    divergence reference (``max(res0, ||z0||)`` — the iterate norm supplies
+    the problem scale for warm starts, whose post-carry entry residual is
+    near zero and would otherwise flag the normal qN chain-rebuild
+    overshoot), or ``stall_patience`` consecutive zero-length steps marks
+    the sample faulted.  Faulted samples within ``restart_budget`` get a
+    recovery round (``do_restart``: the caller resets its state for those
+    rows); past the budget they freeze (``sick``) with a sticky status.
+
+    Returns ``(gs', do_restart, code, res_safe)``; ``res_safe`` replaces
+    non-finite residuals with +inf — bit-identical for finite rows — so
+    best-iterate min/compare logic can't be NaN-poisoned.
+    """
+    finite = jnp.isfinite(res)
+    nonfin = active & ~finite
+    div = active & finite & (
+        res > cfg.divergence_ratio * jnp.maximum(div_ref, cfg.eps))
+    stall_hit = active & finite & (step_norm <= cfg.stall_tol)
+    stall = jnp.where(stall_hit, gs.stall + 1, 0)
+    stalled = stall_hit & (stall >= cfg.stall_patience)
+    fault = nonfin | div | stalled
+    code = jnp.where(nonfin, STATUS_NONFINITE,
+                     jnp.where(div, STATUS_DIVERGED,
+                               STATUS_STALLED)).astype(jnp.int32)
+    can_restart = gs.restarts < cfg.restart_budget
+    do_restart = fault & can_restart
+    freeze = fault & ~can_restart
+    gs2 = _GuardState(
+        sick=gs.sick | freeze,
+        # STICKY on any fault (not only on freeze): a row that recovers
+        # in-jit still reports what happened — the backward escalation and
+        # the serving retry/eviction paths need the signal even when the
+        # iterate healed
+        status=jnp.where(fault, code, gs.status),
+        stall=jnp.where(fault, 0, stall),
+        restarts=gs.restarts + do_restart.astype(jnp.int32),
+        stepscale=jnp.where(do_restart, gs.stepscale * cfg.restart_damping,
+                            gs.stepscale),
+    )
+    res_safe = jnp.where(finite, res, jnp.inf)
+    return gs2, do_restart, code, res_safe
+
+
+def _damped(p: Array, gs: _GuardState) -> Array:
+    """Apply the per-sample restart damping to a step direction.  Healthy
+    rows (stepscale == 1.0) select the ORIGINAL array — bit-identical to
+    the unguarded program regardless of dtype rounding."""
+    damped = gs.stepscale < 1.0
+    return jnp.where(_expand(damped, p), _expand(gs.stepscale, p) * p, p)
+
+
+def _exit_status(conv: Array, gs: _GuardState | None) -> Array:
+    """Final per-sample status.  Fault codes are STICKY: a row that faulted
+    and then recovered in-jit still reports the fault code (callers decide
+    whether to escalate / retry / evict the state that caused it);
+    CONVERGED wins only over the pending MAX_ITERS code."""
+    if gs is None:
+        return jnp.where(conv, STATUS_CONVERGED,
+                         STATUS_MAX_ITERS).astype(jnp.int32)
+    faulted = gs.status >= STATUS_DIVERGED
+    return jnp.where(faulted, gs.status,
+                     jnp.where(conv, STATUS_CONVERGED,
+                               gs.status)).astype(jnp.int32)
+
+
+def _guard_entry(cfg: "SolverConfig", carry, z0: Array, z_cold: Array):
+    """Pre-loop containment for a POISONED WARM START: rows whose carried
+    iterate is non-finite re-enter at the cold start with one recovery
+    round consumed and a sticky NONFINITE status.  Without this the very
+    first residual is NaN and poisons the stop threshold, the divergence
+    reference, and best-iterate tracking for the whole solve (NaN
+    comparisons are all False: the loop would run to max_steps and return
+    the NaN entry iterate as "best").  Returns ``(z0, gs0, bad)``;
+    ``bad=None`` when nothing was checked (unguarded, or no carry so the
+    entry iterate is the caller's own z0)."""
+    if not cfg.guard:
+        return z0, None, None
+    bsz = z0.shape[0]
+    gs0 = _guard_init(bsz)
+    if carry is None:
+        return z0, gs0, None
+    bad = ~jnp.all(jnp.isfinite(z0.reshape(bsz, -1)), axis=-1)
+    z0 = jnp.where(_expand(bad, z0), z_cold, z0)
+    gs0 = gs0._replace(
+        status=jnp.where(bad, STATUS_NONFINITE, gs0.status),
+        restarts=bad.astype(jnp.int32),
+        stepscale=jnp.where(bad, cfg.restart_damping * gs0.stepscale,
+                            gs0.stepscale),
+    )
+    return z0, gs0, bad
+
+
+# ---------------------------------------------------------------------------
 # Persistent solve state: the carry threaded across outer iterations
 # ---------------------------------------------------------------------------
 
@@ -263,6 +408,32 @@ class SolverConfig:
     # always accumulate in f32 (API.md "Precision policy"); bf16 halves the
     # per-iteration HBM stream at unchanged accumulate precision.
     qn_dtype: str = "bfloat16"
+    # -- numerical-fault guards (API.md "Failure semantics"). guard=False
+    # compiles detection out entirely: loop state and lowered HLO are the
+    # pre-guard program — the baseline arm of the guard-overhead bench gate.
+    # On the healthy path guard=True is bit-identical: detection only ever
+    # selects already-computed values, restart damping multiplies by 1.0
+    # until a fault fires, and the recovery work hides behind a lax.cond.
+    guard: bool = True
+    # residual > divergence_ratio * max(res0, ||z0||, eps) => DIVERGED
+    # (finite blow-up; non-finite residuals are caught separately)
+    divergence_ratio: float = 1e4
+    # consecutive steps of norm <= stall_tol before a sample is STALLED.
+    # Disabled by default (negative tol never fires): warm-started rows
+    # sitting at the f32 floor legitimately take bit-zero steps, and a
+    # restart there would burn the warm start for a benign plateau that
+    # best-iterate tracking already handles.  Chaos tests and diagnostics
+    # opt in with stall_tol=0.0 (fires only on exactly-zero steps).
+    stall_patience: int = 3
+    stall_tol: float = -1.0
+    # faulted samples get this many in-jit recovery rounds (qN ring scrub +
+    # restart from the caller's z0) before freezing with a status.  The
+    # restart step scale is multiplied by restart_damping per restart;
+    # default 1.0 (no damping): the fused Broyden update is only stable at
+    # its full step — under-relaxation is an opt-in knob for the
+    # Picard/Anderson mixing, not a qN safety net.
+    restart_budget: int = 1
+    restart_damping: float = 1.0
 
 
 class SolveResult(NamedTuple):
@@ -280,6 +451,10 @@ class SolveResult(NamedTuple):
     # residual norm, step size, qN-ring occupancy. Rides the solver loop
     # state; frozen samples' rows keep their init values bit-for-bit.
     tape: SolveTape | None = None
+    # (B,) int32 per-sample STATUS_* code.  Guarded solves (cfg.guard) can
+    # report DIVERGED/NONFINITE/STALLED from in-loop detection; unguarded
+    # solves derive CONVERGED/MAX_ITERS at exit.
+    status: Array | None = None
 
 
 def _entry_frozen(freeze_mask: Array | None, bsz: int) -> Array:
@@ -346,6 +521,7 @@ def broyden_solve(
     """
     bsz, feat = z0.shape[0], z0.shape[1:]
     sh = sharding or NO_SHARDING
+    z_cold = sh.state(z0)  # pre-carry start: the guard's restart target
     z0, carry_H = _carry_start(carry, z0, cfg.memory)
     z0 = sh.state(z0)
     H0 = init_lowrank if init_lowrank is not None else carry_H
@@ -354,24 +530,43 @@ def broyden_solve(
                               dtype=jnp.dtype(cfg.qn_dtype))
     H0 = H0.constrain(sh.memory)
 
+    z0, gs0, bad0 = _guard_entry(cfg, carry, z0, z_cold)
+    if bad0 is not None:
+        # the poisoned rows' carried ring goes with the iterate: a NaN
+        # slot would NaN every masked matvec (0 * NaN)
+        bm = _expand(bad0, z0)[None]
+        H0 = LowRank(alpha=H0.alpha,
+                     u=jnp.where(bm, 0.0, H0.u).astype(H0.u.dtype),
+                     v=jnp.where(bm, 0.0, H0.v).astype(H0.v.dtype),
+                     count=jnp.where(bad0, 0, H0.count))
+
     g0 = g(z0)
     res0 = bnorm(g0)
     thresh = _stop_threshold(res0, bnorm(z0), cfg)
+    div_ref = jnp.maximum(res0, bnorm(z0))  # warm-start-safe scale
     Hg0 = sh.state(H0.matvec(g0.astype(jnp.float32)))
 
     trace0 = jnp.full((max(cfg.max_steps, 1), bsz), jnp.inf, jnp.float32)
     tape0 = empty_tape(cfg.max_steps, bsz)
 
     def cond(state):
-        k, _, _, _, _, conv, _, _, _, _ = state
-        return (k < cfg.max_steps) & ~jnp.all(conv)
+        k, conv = state[0], state[5]
+        done = (conv | state[10].sick) if cfg.guard else conv
+        return (k < cfg.max_steps) & ~jnp.all(done)
 
     def body(state):
-        k, z, gz, H, Hg, conv, best_z, best_res, trace, tape = state
+        k, z, gz, H, Hg, conv, best_z, best_res, trace, tape = state[:10]
+        gs = state[10] if cfg.guard else None
         p = -Hg
-        active = ~conv
+        if cfg.guard:
+            p = _damped(p, gs)
+            active = ~(conv | gs.sick)
+        else:
+            active = ~conv
         am = _expand(active, z)
         z_new = sh.state(jnp.where(am, z + cfg.step_size * p.astype(z.dtype), z))
+        if _FAULT_HOOK is not None:
+            z_new = _FAULT_HOOK(z_new, k, z)
         gz_new = jnp.where(am, g(z_new), gz)
 
         s = (z_new - z).astype(jnp.float32)
@@ -398,14 +593,44 @@ def broyden_solve(
         Hg = Hg_new + _expand(upd.astype(jnp.float32), s) * (gain - loss)
 
         res = bnorm(gz_new)
+        if cfg.guard:
+            gs, do_rs, code, res = _guard_detect(
+                gs, cfg, active, res, bnorm(s), div_ref)
+            # recovery round — runtime no-op unless a fault fired this
+            # iteration: scrub the restarted rows' qN ring (a non-finite
+            # slot would NaN every masked matvec: 0 * NaN), re-evaluate the
+            # cold residual, and put the rows back at the caller's z0 with
+            # a damped step scale.
+            any_rs = jnp.any(do_rs)
+            rm = _expand(do_rs, z)
+            rmu = rm[None]
+            u2, v2 = jax.lax.cond(
+                any_rs,
+                lambda uv: (jnp.where(rmu, 0.0, uv[0]),
+                            jnp.where(rmu, 0.0, uv[1])),
+                lambda uv: uv, (H.u, H.v))
+            H = LowRank(alpha=H.alpha, u=u2, v=v2,
+                        count=jnp.where(do_rs, 0, H.count))
+            if carry is None:
+                gz_cold = g0  # cold start == entry point: reuse g(z0)
+            else:
+                gz_cold = jax.lax.cond(
+                    any_rs, lambda t: g(z_cold), lambda t: t, gz)
+            z_new = jnp.where(rm, z_cold, z_new)
+            gz_new = jnp.where(rm, gz_cold, gz_new)
+            Hg = jnp.where(rm, H.alpha * gz_cold.astype(jnp.float32), Hg)
+            res = jnp.where(do_rs, bnorm(gz_cold), res)
         improved = res < best_res
         best_z = jnp.where(_expand(improved, z_new), z_new, best_z)
         best_res = jnp.minimum(res, best_res)
         conv = conv | (res < thresh)
         trace = trace.at[k].set(jnp.where(active, res, trace[k]))
-        tape = tape_record(tape, k, active, res, bnorm(s), H.count)
-        return (k + 1, z_new, gz_new, H, Hg, conv, best_z, best_res, trace,
-                tape)
+        status_k = None if gs is None else jnp.where(do_rs, code, gs.status)
+        tape = tape_record(tape, k, active, res, bnorm(s), H.count,
+                           status=status_k)
+        out = (k + 1, z_new, gz_new, H, Hg, conv, best_z, best_res, trace,
+               tape)
+        return out + (gs,) if cfg.guard else out
 
     conv0 = res0 < thresh
     if freeze_mask is not None:
@@ -414,17 +639,25 @@ def broyden_solve(
         jnp.int32(0), z0, g0, H0, Hg0,
         conv0, z0, res0, trace0, tape0,
     )
+    if cfg.guard:
+        state0 = state0 + (gs0,)
     if cfg.unroll:
         state = state0
         for _ in range(cfg.max_steps):
             state = body(state)
-        k, z, gz, H, _Hg, conv, best_z, best_res, trace, tape = state
     else:
-        (k, z, gz, H, _Hg, conv, best_z, best_res, trace,
-         tape) = jax.lax.while_loop(cond, body, state0)
+        state = jax.lax.while_loop(cond, body, state0)
+    k, _z, _gz, H, _Hg, conv, best_z, best_res, trace, tape = state[:10]
+    gs = state[10] if cfg.guard else None
+    status = _exit_status(conv, gs)
+    aux = {} if gs is None else {"restarts": gs.restarts, "sick": gs.sick}
     carry_out = _carry_out(carry, best_z, H, _entry_frozen(freeze_mask, bsz))
-    return SolveResult(best_z, H, best_res, k, conv, trace, {}, carry_out,
-                       tape)
+    if gs is not None and carry_out is not None:
+        # sick rows hand the NEXT solve a cold start, not a faulted state
+        # (healthy path: all-False evict mask selects every field bitwise)
+        carry_out = reset_carry_rows(carry_out, gs.sick)
+    return SolveResult(best_z, H, best_res, k, conv, trace, aux, carry_out,
+                       tape, status)
 
 
 # ---------------------------------------------------------------------------
@@ -450,46 +683,77 @@ def fixed_point_solve(
     """
     bsz = z0.shape[0]
     sh = sharding or NO_SHARDING
+    z_cold = sh.state(z0)  # pre-carry start: the guard's restart target
     if carry is not None:
         z0, _ = _carry_start(carry, z0, carry.memory)  # validates shapes
     z0 = sh.state(z0)
+    z0, gs0, _bad0 = _guard_entry(cfg, carry, z0, z_cold)
     H = LowRank.identity(bsz, 1, 1, alpha=1.0)  # placeholder (JFB shares I)
     res0 = bnorm(f(z0) - z0)
     thresh = _stop_threshold(res0, bnorm(z0), cfg)
+    div_ref = jnp.maximum(res0, bnorm(z0))  # warm-start-safe scale
     trace0 = jnp.full((max(cfg.max_steps, 1), bsz), jnp.inf, jnp.float32)
     tape0 = empty_tape(cfg.max_steps, bsz)
     no_qn = jnp.zeros((bsz,), jnp.int32)  # Picard keeps no qN chain
 
     def cond(state):
-        k, _, conv, _, _, _ = state
-        return (k < cfg.max_steps) & ~jnp.all(conv)
+        k, conv = state[0], state[2]
+        done = (conv | state[6].sick) if cfg.guard else conv
+        return (k < cfg.max_steps) & ~jnp.all(done)
 
     def body(state):
-        k, z, conv, best_res, trace, tape = state
+        k, z, conv, best_res, trace, tape = state[:6]
+        gs = state[6] if cfg.guard else None
         fz = f(z)
-        z_new = sh.state(
-            jnp.where(_expand(conv, z), z, (1 - damping) * z + damping * fz))
+        z_pic = (1 - damping) * z + damping * fz
+        if cfg.guard:
+            live = conv | gs.sick
+            # restart damping scales the Picard mixing factor per sample;
+            # healthy rows select the original mixing expression bitwise
+            d2 = _expand(damping * gs.stepscale, z)
+            z_dampd = (1 - d2) * z + d2 * fz
+            z_pic = jnp.where(_expand(gs.stepscale < 1.0, z), z_dampd, z_pic)
+        else:
+            live = conv
+        z_new = sh.state(jnp.where(_expand(live, z), z, z_pic))
+        if _FAULT_HOOK is not None:
+            z_new = _FAULT_HOOK(z_new, k, z)
         res = bnorm(fz - z)
-        trace = trace.at[k].set(jnp.where(conv, trace[k], res))
-        tape = tape_record(tape, k, ~conv, res, bnorm(z_new - z), no_qn)
+        step_n = bnorm(z_new - z)
+        if cfg.guard:
+            gs, do_rs, code, res = _guard_detect(
+                gs, cfg, ~live, res, step_n, div_ref)
+            z_new = jnp.where(_expand(do_rs, z), z_cold, z_new)
+        trace = trace.at[k].set(jnp.where(live, trace[k], res))
+        status_k = None if gs is None else jnp.where(do_rs, code, gs.status)
+        tape = tape_record(tape, k, ~live, res, step_n, no_qn,
+                           status=status_k)
         best_res = jnp.minimum(best_res, res)
         conv = conv | (res < thresh)
-        return (k + 1, z_new, conv, best_res, trace, tape)
+        out = (k + 1, z_new, conv, best_res, trace, tape)
+        return out + (gs,) if cfg.guard else out
 
     conv0 = res0 < thresh
     if freeze_mask is not None:
         conv0 = conv0 | freeze_mask
     state0 = (jnp.int32(0), z0, conv0, res0, trace0, tape0)
+    if cfg.guard:
+        state0 = state0 + (gs0,)
     if cfg.unroll:
         state = state0
         for _ in range(cfg.max_steps):
             state = body(state)
-        k, z, conv, best_res, trace, tape = state
     else:
-        k, z, conv, best_res, trace, tape = jax.lax.while_loop(
-            cond, body, state0)
+        state = jax.lax.while_loop(cond, body, state0)
+    k, z, conv, best_res, trace, tape = state[:6]
+    gs = state[6] if cfg.guard else None
     carry_out = _carry_out(carry, z, None, _entry_frozen(freeze_mask, bsz))
-    return SolveResult(z, H, best_res, k, conv, trace, {}, carry_out, tape)
+    if gs is not None and carry_out is not None:
+        carry_out = reset_carry_rows(carry_out, gs.sick)
+    return SolveResult(z, H, best_res, k, conv, trace,
+                       {} if gs is None else {"restarts": gs.restarts,
+                                              "sick": gs.sick},
+                       carry_out, tape, _exit_status(conv, gs))
 
 
 def anderson_solve(
@@ -512,11 +776,14 @@ def anderson_solve(
     bsz, feat = z0.shape[0], z0.shape[1:]
     m = min(cfg.memory, 8)
     sh = sharding or NO_SHARDING
+    z_cold = sh.state(z0)  # pre-carry start: the guard's restart target
     if carry is not None:
         z0, _ = _carry_start(carry, z0, carry.memory)  # validates shapes
     z0 = sh.state(z0)
+    z0, gs0, _bad0 = _guard_entry(cfg, carry, z0, z_cold)
     res0 = bnorm(f(z0) - z0)
     thresh = _stop_threshold(res0, bnorm(z0), cfg)
+    div_ref = jnp.maximum(res0, bnorm(z0))  # warm-start-safe scale
     trace0 = jnp.full((max(cfg.max_steps, 1), bsz), jnp.inf, jnp.float32)
 
     # history buffers share the qN-memory layout: (m, B, *F), batch-sharded
@@ -526,11 +793,14 @@ def anderson_solve(
     tape0 = empty_tape(cfg.max_steps, bsz)
 
     def cond(state):
-        k, *_, conv, _t, _tp = state
-        return (k < cfg.max_steps) & ~jnp.all(conv)
+        k, conv = state[0], state[4]
+        done = (conv | state[7].sick) if cfg.guard else conv
+        return (k < cfg.max_steps) & ~jnp.all(done)
 
     def body(state):
-        k, z, Z, F, conv, trace, tape = state
+        k, z, Z, F, conv, trace, tape = state[:7]
+        gs = state[7] if cfg.guard else None
+        live = (conv | gs.sick) if cfg.guard else conv
         fz = f(z)
         r = fz - z
         slot = k % m
@@ -547,26 +817,80 @@ def anderson_solve(
         w = w * valid[None, :]
         w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-12)
         z_and = jnp.einsum("bi,ib...->b...", w, Z.astype(jnp.float32)).astype(z.dtype)
-        z_new = sh.state(
-            jnp.where(_expand(conv, z), z, (1 - mixing) * z + mixing * z_and))
+        z_mix = (1 - mixing) * z + mixing * z_and
+        if cfg.guard:
+            # restart damping scales the Anderson mixing per sample;
+            # healthy rows select the original expression bitwise
+            mx = _expand(mixing * gs.stepscale, z)
+            z_dampd = (1 - mx) * z + mx * z_and
+            z_mix = jnp.where(_expand(gs.stepscale < 1.0, z), z_dampd, z_mix)
+            # a rank-deficient window NaNs the per-sample weight solve
+            # (e.g. right after a restart scrub, when the z_cold mixture
+            # reproduces itself and consecutive slots hold DUPLICATE
+            # residual columns — identical columns sit beyond the f32
+            # reach of the ridge).  Those rows take the plain Picard step
+            # until the window regains diversity; healthy rows select
+            # their own already-computed mixing result bit-identically.
+            mix_ok = jnp.all(jnp.isfinite(z_mix.reshape(bsz, -1)), axis=-1)
+            z_mix = jnp.where(_expand(mix_ok, z), z_mix, fz)
+        z_new = sh.state(jnp.where(_expand(live, z), z, z_mix))
+        if _FAULT_HOOK is not None:
+            z_new = _FAULT_HOOK(z_new, k, z)
         res = bnorm(r)
-        trace = trace.at[k].set(jnp.where(conv, trace[k], res))
+        step_n = bnorm(z_new - z)
+        if cfg.guard:
+            gs, do_rs, code, res = _guard_detect(
+                gs, cfg, ~live, res, step_n, div_ref)
+            # restart: put the row back at the cold start AND scrub its
+            # history window — a poisoned F row would otherwise NaN the
+            # per-sample mixing solve for up to m more iterations.  The
+            # scrubbed slots get Z=z_cold, F=0: identical nonzero sentinels
+            # would make the Gram matrix rank-deficient beyond f32's reach
+            # of the ridge (the mixing solve then returns garbage and the
+            # row re-faults, burning the restart budget), while F=0 reduces
+            # those slots to exactly ridge*I — well-conditioned, and the
+            # mixture of z_cold entries they select is the restart iterate
+            # itself until fresh residuals overwrite the window.
+            rm = _expand(do_rs, z)
+            rmu = rm[None]
+            Z, F = jax.lax.cond(
+                jnp.any(do_rs),
+                lambda t: (jnp.where(rmu, z_cold[None].astype(t[0].dtype),
+                                     t[0]),
+                           jnp.where(rmu, jnp.asarray(0.0, t[1].dtype),
+                                     t[1])),
+                lambda t: t, (Z, F))
+            z_new = jnp.where(rm, z_cold, z_new)
+        trace = trace.at[k].set(jnp.where(live, trace[k], res))
         # qn_count reports the Anderson window fill (per-sample once live)
-        tape = tape_record(tape, k, ~conv, res, bnorm(z_new - z),
-                           jnp.broadcast_to(nk, (bsz,)))
+        status_k = None if gs is None else jnp.where(do_rs, code, gs.status)
+        tape = tape_record(tape, k, ~live, res, step_n,
+                           jnp.broadcast_to(nk, (bsz,)), status=status_k)
         conv = conv | (res < thresh)
-        return (k + 1, z_new, Z, F, conv, trace, tape)
+        out = (k + 1, z_new, Z, F, conv, trace, tape)
+        return out + (gs,) if cfg.guard else out
 
     conv0 = res0 < thresh
     if freeze_mask is not None:
         conv0 = conv0 | freeze_mask
-    k, z, Z, F, conv, trace, tape = jax.lax.while_loop(
-        cond, body, (jnp.int32(0), z0, Z, F, conv0, trace0, tape0)
-    )
+    state0 = (jnp.int32(0), z0, Z, F, conv0, trace0, tape0)
+    if cfg.guard:
+        state0 = state0 + (gs0,)
+    state = jax.lax.while_loop(cond, body, state0)
+    k, z, Z, F, conv, trace, tape = state[:7]
+    gs = state[7] if cfg.guard else None
     H = LowRank.identity(bsz, 1, 1, alpha=1.0)
+    final_res = bnorm(f(z) - z)
+    if cfg.guard:
+        # a sick row's iterate may be non-finite; report +inf, not NaN
+        final_res = jnp.where(gs.sick, jnp.inf, final_res)
     carry_out = _carry_out(carry, z, None, _entry_frozen(freeze_mask, bsz))
-    return SolveResult(z, H, bnorm(f(z) - z), k, conv, trace, {}, carry_out,
-                       tape)
+    if gs is not None and carry_out is not None:
+        carry_out = reset_carry_rows(carry_out, gs.sick)
+    return SolveResult(z, H, final_res, k, conv, trace,
+                       {} if gs is None else {"restarts": gs.restarts,
+                                              "sick": gs.sick},
+                       carry_out, tape, _exit_status(conv, gs))
 
 
 # ---------------------------------------------------------------------------
@@ -603,8 +927,10 @@ def adjoint_broyden_solve(
     """
     bsz, feat = z0.shape[0], z0.shape[1:]
     sh = sharding or NO_SHARDING
+    z_cold = sh.state(z0)  # pre-carry start: the guard's restart target
     z0, _ = _carry_start(carry, z0, cfg.memory)  # validates; H not reused
     z0 = sh.state(z0)
+    z0, gs0, _bad0 = _guard_entry(cfg, carry, z0, z_cold)
     B = LowRank.identity(bsz, feat, cfg.memory, alpha=1.0, dtype=jnp.float32)
     H = LowRank.identity(bsz, feat, cfg.memory, alpha=1.0, dtype=jnp.float32)
     B, H = B.constrain(sh.memory), H.constrain(sh.memory)
@@ -612,6 +938,7 @@ def adjoint_broyden_solve(
     g0 = g(z0)
     res0 = bnorm(g0)
     thresh = _stop_threshold(res0, bnorm(z0), cfg)
+    div_ref = jnp.maximum(res0, bnorm(z0))  # warm-start-safe scale
     trace0 = jnp.full((max(cfg.max_steps, 1), bsz), jnp.inf, jnp.float32)
     tape0 = empty_tape(cfg.max_steps, bsz)
 
@@ -634,15 +961,21 @@ def adjoint_broyden_solve(
         return B, H
 
     def cond(state):
-        k, *_rest, conv, _t, _tp = state
-        return (k < cfg.max_steps) & ~jnp.all(conv)
+        k, conv = state[0], state[5]
+        done = (conv | state[8].sick) if cfg.guard else conv
+        return (k < cfg.max_steps) & ~jnp.all(done)
 
     def body(state):
-        k, z, gz, B, H, conv, trace, tape = state
-        active = ~conv
+        k, z, gz, B, H, conv, trace, tape = state[:8]
+        gs = state[8] if cfg.guard else None
+        active = ~(conv | gs.sick) if cfg.guard else ~conv
         am = _expand(active, z)
         p = -H.matvec(gz.astype(jnp.float32))
+        if cfg.guard:
+            p = _damped(p, gs)
         z_new = sh.state(jnp.where(am, z + cfg.step_size * p.astype(z.dtype), z))
+        if _FAULT_HOOK is not None:
+            z_new = _FAULT_HOOK(z_new, k, z)
         gz_new = jnp.where(am, g(z_new), gz)
 
         if sigma_from_step:
@@ -663,19 +996,64 @@ def adjoint_broyden_solve(
             )
 
         res = bnorm(gz_new)
+        if cfg.guard:
+            gs, do_rs, code, res = _guard_detect(
+                gs, cfg, active, res, bnorm(z_new - z), div_ref)
+            # recovery round (runtime no-op unless a fault fired): scrub
+            # BOTH chains for the restarted rows — the H = B^{-1} invariant
+            # only holds if they reset together — and go back to the cold
+            # start with a damped step scale.
+            any_rs = jnp.any(do_rs)
+            rm = _expand(do_rs, z)
+            rmu = rm[None]
+            (bu, bv), (hu, hv) = jax.lax.cond(
+                any_rs,
+                lambda t: (
+                    (jnp.where(rmu, 0.0, t[0][0]),
+                     jnp.where(rmu, 0.0, t[0][1])),
+                    (jnp.where(rmu, 0.0, t[1][0]),
+                     jnp.where(rmu, 0.0, t[1][1]))),
+                lambda t: t, ((B2.u, B2.v), (H2.u, H2.v)))
+            B2 = LowRank(alpha=B2.alpha, u=bu, v=bv,
+                         count=jnp.where(do_rs, 0, B2.count))
+            H2 = LowRank(alpha=H2.alpha, u=hu, v=hv,
+                         count=jnp.where(do_rs, 0, H2.count))
+            if carry is None:
+                gz_cold = g0  # cold start == entry point: reuse g(z0)
+            else:
+                gz_cold = jax.lax.cond(
+                    any_rs, lambda t: g(z_cold), lambda t: t, gz)
+            z_new = jnp.where(rm, z_cold, z_new)
+            gz_new = jnp.where(rm, gz_cold, gz_new)
+            res = jnp.where(do_rs, bnorm(gz_cold), res)
         trace = trace.at[k].set(jnp.where(active, res, trace[k]))
-        tape = tape_record(tape, k, active, res, bnorm(z_new - z), H2.count)
+        status_k = None if gs is None else jnp.where(do_rs, code, gs.status)
+        tape = tape_record(tape, k, active, res, bnorm(z_new - z), H2.count,
+                           status=status_k)
         conv = conv | (res < thresh)
-        return (k + 1, z_new, gz_new, B2, H2, conv, trace, tape)
+        out = (k + 1, z_new, gz_new, B2, H2, conv, trace, tape)
+        return out + (gs,) if cfg.guard else out
 
     conv0 = res0 < thresh
     if freeze_mask is not None:
         conv0 = conv0 | freeze_mask
     state0 = (jnp.int32(0), z0, g0, B, H, conv0, trace0, tape0)
-    k, z, gz, B, H, conv, trace, tape = jax.lax.while_loop(cond, body, state0)
+    if cfg.guard:
+        state0 = state0 + (gs0,)
+    state = jax.lax.while_loop(cond, body, state0)
+    k, z, gz, B, H, conv, trace, tape = state[:8]
+    gs = state[8] if cfg.guard else None
+    final_res = bnorm(gz)
+    if cfg.guard:
+        final_res = jnp.where(gs.sick, jnp.inf, final_res)
+    aux = {"B": B}
+    if gs is not None:
+        aux.update(restarts=gs.restarts, sick=gs.sick)
     carry_out = _carry_out(carry, z, H, _entry_frozen(freeze_mask, bsz))
-    return SolveResult(z, H, bnorm(gz), k, conv, trace, {"B": B}, carry_out,
-                       tape)
+    if gs is not None and carry_out is not None:
+        carry_out = reset_carry_rows(carry_out, gs.sick)
+    return SolveResult(z, H, final_res, k, conv, trace, aux, carry_out,
+                       tape, _exit_status(conv, gs))
 
 
 # ---------------------------------------------------------------------------
@@ -767,6 +1145,8 @@ class LBFGSResult(NamedTuple):
     trace: Array
     # (max_steps,) scalar-problem convergence tape (repro.obs.tape)
     tape: SolveTape | None = None
+    # () int32 STATUS_* code (scalar problem: one status for the solve)
+    status: Array | None = None
 
 
 def lbfgs_solve(
@@ -814,7 +1194,9 @@ def lbfgs_solve(
     tape0 = empty_tape(cfg.max_steps, batch=None)
 
     def cond(state):
-        k, _, _, _, _, done, _, _ = state
+        k, done = state[0], state[5]
+        if cfg.guard:
+            done = done | state[8].sick
         return (k < cfg.max_steps) & ~done
 
     def line_search(z, p, gz, fz):
@@ -835,7 +1217,8 @@ def lbfgs_solve(
         return alpha
 
     def body(state):
-        k, z, gz, mem, t_prev, done, trace, tape = state
+        k, z, gz, mem, t_prev, done, trace, tape = state[:8]
+        gs = state[8] if cfg.guard else None
         gamma = _lbfgs_gamma(mem)
         p = -lbfgs_two_loop(mem, gz, gamma)
         if value_fn is not None:
@@ -843,6 +1226,8 @@ def lbfgs_solve(
             alpha = line_search(z, p, gz, fz)
         else:
             alpha = jnp.float32(cfg.step_size)
+        if cfg.guard:
+            alpha = jnp.where(gs.stepscale < 1.0, gs.stepscale * alpha, alpha)
         z_new = z + alpha * p
         g_new = grad_fn(z_new)
         s = (z_new - z).astype(jnp.float32)
@@ -861,18 +1246,42 @@ def lbfgs_solve(
             )
 
         gn = jnp.linalg.norm(g_new)
+        if cfg.guard:
+            # scalar problem: the body only runs while live, so the sample
+            # is unconditionally "active" for detection purposes
+            gs, do_rs, code, gn = _guard_detect(
+                gs, cfg, jnp.bool_(True), gn, jnp.linalg.norm(s), gn0)
+            mem = jax.lax.cond(
+                do_rs,
+                lambda mm: LBFGSMemory(jnp.zeros_like(mm.s),
+                                       jnp.zeros_like(mm.y),
+                                       jnp.zeros_like(mm.rho),
+                                       jnp.int32(0)),
+                lambda mm: mm, mem)
+            z_new = jnp.where(do_rs, z0.astype(jnp.float32), z_new)
+            g_new = jnp.where(do_rs, g0.astype(jnp.float32), g_new)
+            gn = jnp.where(do_rs, gn0, gn)
         trace = trace.at[k].set(gn)
+        status_k = None if gs is None else jnp.where(do_rs, code, gs.status)
         tape = tape_record(tape, k, jnp.bool_(True), gn, jnp.linalg.norm(s),
-                           jnp.minimum(mem.count, m))
+                           jnp.minimum(mem.count, m), status=status_k)
         done = gn < cfg.tol
-        return (k + 1, z_new, g_new, mem, jnp.linalg.norm(s), done, trace,
-                tape)
+        out = (k + 1, z_new, g_new, mem, jnp.linalg.norm(s), done, trace,
+               tape)
+        return out + (gs,) if cfg.guard else out
 
     state0 = (jnp.int32(0), z0.astype(jnp.float32), g0.astype(jnp.float32),
               mem0, jnp.float32(cfg.opa_t0), gn0 < cfg.tol, trace0, tape0)
-    k, z, gz, mem, _, done, trace, tape = jax.lax.while_loop(
-        cond, body, state0)
-    return LBFGSResult(z, mem, jnp.linalg.norm(gz), k, done, trace, tape)
+    if cfg.guard:
+        state0 = state0 + (_guard_init(None),)
+    state = jax.lax.while_loop(cond, body, state0)
+    k, z, gz, mem, _, done, trace, tape = state[:8]
+    gs = state[8] if cfg.guard else None
+    final_gn = jnp.linalg.norm(gz)
+    if cfg.guard:
+        final_gn = jnp.where(gs.sick, jnp.inf, final_gn)
+    return LBFGSResult(z, mem, final_gn, k, done, trace, tape,
+                       _exit_status(done, gs))
 
 
 def _lbfgs_gamma(mem: LBFGSMemory) -> Array:

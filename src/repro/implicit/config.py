@@ -36,6 +36,14 @@ class ForwardConfig:
     # adjoint-Broyden OPA extra updates every M steps (0 = off); requires
     # an outer_grad fn passed to implicit_fixed_point
     opa_freq: int = 0
+    # in-loop fault containment (ISSUE 10) — see core.SolverConfig for the
+    # semantics of each knob; guard=False compiles the pre-guard program
+    guard: bool = True
+    divergence_ratio: float = 1e4
+    stall_patience: int = 3
+    stall_tol: float = -1.0
+    restart_budget: int = 1
+    restart_damping: float = 1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,12 +75,23 @@ class ImplicitConfig:
             max_steps=f.max_steps, tol=f.tol, memory=self.memory,
             step_size=f.step_size, opa_freq=f.opa_freq, unroll=self.unroll,
             qn_dtype=self.qn_dtype,
+            guard=f.guard, divergence_ratio=f.divergence_ratio,
+            stall_patience=f.stall_patience, stall_tol=f.stall_tol,
+            restart_budget=f.restart_budget,
+            restart_damping=f.restart_damping,
         )
 
     def adjoint_cfg(self, steps: int) -> SolverConfig:
+        # the adjoint refine/full solves inherit the forward guard knobs —
+        # a diverging backward linear solve is contained the same way
+        f = self.forward
         return SolverConfig(
             max_steps=steps, tol=self.backward.tol, memory=self.memory,
             relative=False, unroll=self.unroll, qn_dtype=self.qn_dtype,
+            guard=f.guard, divergence_ratio=f.divergence_ratio,
+            stall_patience=f.stall_patience, stall_tol=f.stall_tol,
+            restart_budget=f.restart_budget,
+            restart_damping=f.restart_damping,
         )
 
     # -- legacy-string shim --------------------------------------------------
@@ -94,12 +113,13 @@ class ImplicitConfig:
         fallback_ratio: float = 1.3,
         unroll: bool = False,
         qn_dtype: str = "bfloat16",
+        guard: bool = True,
     ) -> "ImplicitConfig":
         """Build from the legacy flat ``DEQConfig`` field names."""
         return cls(
             forward=ForwardConfig(
                 solver=solver, max_steps=max_steps, tol=tol,
-                step_size=step_size, opa_freq=opa_freq,
+                step_size=step_size, opa_freq=opa_freq, guard=guard,
             ),
             backward=BackwardConfig(
                 estimator=backward, max_steps=backward_max_steps,

@@ -120,7 +120,7 @@ def batched_solve(
         mask = valid.reshape(valid.shape + (1,) * (z.ndim - 1))
         z = jnp.where(mask, z, z0_flat)
     stats = ImplicitStats(res.residual, res.n_steps, res.converged, res.trace,
-                          res.tape)
+                          res.tape, res.status)
     obs_metrics.record_solve("serve", res, carry=carry)
     if carry is None:
         return unravel(z), stats
@@ -358,7 +358,7 @@ class PrefixCarryIndex:
         self.published = 0
         self.lookups = 0
         self.hits = 0
-        self.evictions_by_reason = {"lru": 0, "stale": 0}
+        self.evictions_by_reason = {"lru": 0, "stale": 0, "poisoned": 0}
 
     # -- bookkeeping ---------------------------------------------------
 
@@ -475,6 +475,27 @@ class PrefixCarryIndex:
         self._evict_lru()
         self._publish_gauges()
 
+    def evict_poisoned(self, tokens: Sequence[int]) -> int:
+        """Drop every cached entry on ``tokens``'s prefix chain — the
+        containment response when a solve seeded from this prompt's prefix
+        diverged or went non-finite.  Counts under
+        ``prefix_cache_evictions_total{reason="poisoned"}``; returns the
+        number of entries dropped.  Live leases do not protect an entry:
+        the poison verdict outranks in-flight readers (their own guard
+        layer contains the fault per sample)."""
+        toks = tuple(int(t) for t in tokens)
+        hashes = prefix_hashes(toks)
+        dropped = 0
+        for L in sorted({e.length for e in self._entries.values()}):
+            if L > len(toks):
+                continue
+            e = self._entries.get(hashes[L])
+            if e is not None and e.tokens == toks[:L]:
+                self._evict(hashes[L], "poisoned")
+                dropped += 1
+        self._publish_gauges()
+        return dropped
+
 
 # ---------------------------------------------------------------------------
 # Device-resident prefix carry store (the zero-host-sync serving cache)
@@ -574,7 +595,7 @@ class DevicePrefixStore:
         self.published = 0
         self.lookups = 0
         self.hits = 0
-        self.evictions_by_reason = {"lru": 0, "stale": 0}
+        self.evictions_by_reason = {"lru": 0, "stale": 0, "poisoned": 0}
 
     # -- device side ----------------------------------------------------
 
@@ -723,6 +744,25 @@ class DevicePrefixStore:
         self.published += 1
         self._publish_gauges()
         return slot
+
+    def evict_poisoned(self, tokens: Sequence[int]) -> int:
+        """Drop every host entry on ``tokens``'s prefix chain (the device
+        rows become unreachable and are recycled through ``_take_slot``).
+        Containment response to a solve that diverged after seeding from
+        this prefix; counts under
+        ``prefix_cache_evictions_total{reason="poisoned"}``."""
+        toks = tuple(int(t) for t in tokens)
+        hashes = prefix_hashes(toks)
+        dropped = 0
+        for L in sorted({e.length for e in self._entries.values()}):
+            if L > len(toks):
+                continue
+            e = self._entries.get(hashes[L])
+            if e is not None and e.tokens == toks[:L]:
+                self._drop_key(hashes[L], "poisoned")
+                dropped += 1
+        self._publish_gauges()
+        return dropped
 
 
 def prefix_store_scatter(arrays, carry: SolveCarry, slot_ids: Array):

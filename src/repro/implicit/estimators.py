@@ -20,6 +20,13 @@ Registered estimators (each returns an ``AdjointResult`` with ``u``):
                         shine estimate, warm-started with the forward qN
                         chain (paper §2.1 "refine strategy").
   * ``jfb_refine``      the same correction initialized at the JFB estimate.
+  * ``shine_cascade``   status-driven escalation (ISSUE 10): healthy
+                        samples pay exactly the shine price; samples the
+                        forward guard flagged (or whose shine estimate
+                        fails the fallback norm test / is non-finite)
+                        escalate to a refine solve restricted to them via
+                        the freeze mask — an all-healthy batch exits the
+                        refine loop in 0 iterations.
 
 The estimators are written once against an ``EstimatorContext`` and serve
 BOTH problem classes: the DEQ adjoint (batched Broyden on
@@ -45,6 +52,7 @@ import jax.numpy as jnp
 
 from repro.core.lowrank import LowRank, _expand, bnorm
 from repro.core.solvers import (
+    STATUS_DIVERGED,
     LBFGSMemory,
     SolveResult,
     SolverConfig,
@@ -74,23 +82,31 @@ class EstimatorContext:
 
     ``apply_inverse``  the SHINE operation: apply the shared (transposed)
                        inverse estimate to a cotangent.
-    ``solve``          ``(b, u0, steps, warm) -> (u, residual, n_steps)``:
-                       iteratively solve the adjoint system ``A u = b``
-                       starting at ``u0`` (``None`` = the solver's default
-                       start); ``warm=True`` additionally warm-starts the
-                       solver with the forward chain where supported.
+    ``solve``          ``(b, u0, steps, warm, freeze_mask=None) ->
+                       (u, residual, n_steps)``: iteratively solve the
+                       adjoint system ``A u = b`` starting at ``u0``
+                       (``None`` = the solver's default start);
+                       ``warm=True`` additionally warm-starts the solver
+                       with the forward chain where supported;
+                       ``freeze_mask`` (where supported) pins those
+                       samples at ``u0``, so an escalation solve only
+                       iterates the flagged rows.
     ``norm``/``select`` per-sample norm and masked select, shaped for the
                        problem class ((B,)-batched for DEQ, scalar for
                        bi-level).
+    ``forward_status`` per-sample STATUS_* codes of the forward solve
+                       (None when the caller has none) — the escalation
+                       trigger for ``shine_cascade``.
     """
 
     w: Array
     apply_inverse: Callable[[Array], Array]
-    solve: Callable[[Array, Array | None, int, bool], tuple[Array, Array, Array]]
+    solve: Callable[..., tuple[Array, Array, Array]]
     norm: Callable[[Array], Array]
     select: Callable[[Array, Array, Array], Array]
     no_fallback: Array
     nan_residual: Array
+    forward_status: Array | None = None
 
 
 # ---------------------------------------------------------------------------
@@ -154,12 +170,16 @@ def solve_adjoint(
     u0: Array | None = None,
     init_lowrank: LowRank | None = None,
     sharding=None,
+    freeze_mask: Array | None = None,
 ) -> SolveResult:
-    """Iteratively solve the adjoint system with Broyden (original backward)."""
+    """Iteratively solve the adjoint system with Broyden (original backward).
+
+    ``freeze_mask: (B,) bool`` pins those samples at ``u0`` — the
+    escalation path solves only the flagged rows of a batch."""
     psi = adjoint_system(vjp_z, w)
     u0 = w if u0 is None else u0
     return broyden_solve(psi, u0, cfg, init_lowrank=init_lowrank,
-                         sharding=sharding)
+                         sharding=sharding, freeze_mask=freeze_mask)
 
 
 # ---------------------------------------------------------------------------
@@ -210,9 +230,46 @@ def _full(cfg: "ImplicitConfig", ctx: EstimatorContext) -> AdjointResult:
     return AdjointResult(u, residual, n, ctx.no_fallback)
 
 
+@register_estimator("shine_cascade")
+def _shine_cascade(cfg: "ImplicitConfig", ctx: EstimatorContext) -> AdjointResult:
+    """Status-driven escalation ladder (ISSUE 10): shine → JFB start →
+    refine solve restricted to the flagged samples.
+
+    A sample escalates when (a) the forward guard froze it with a fault
+    status, (b) its shine estimate fails the paper's fallback norm test, or
+    (c) its shine estimate is non-finite (poisoned chain).  Escalated rows
+    refine from the JFB start (never from a bad shine estimate); healthy
+    rows are frozen at their shine estimate, so a clean batch leaves the
+    refine loop after 0 iterations and keeps the exact shine cotangent."""
+    u_shine = ctx.apply_inverse(ctx.w)
+    n_shine = ctx.norm(u_shine)
+    flagged = (n_shine > cfg.backward.fallback_ratio * ctx.norm(ctx.w)) \
+        | ~jnp.isfinite(n_shine)
+    if ctx.forward_status is not None:
+        flagged = flagged | (ctx.forward_status >= STATUS_DIVERGED)
+    u0 = ctx.select(flagged, jfb_cotangent(ctx.w), u_shine)
+    u, residual, n = ctx.solve(ctx.w, u0, cfg.backward.refine_steps, True,
+                               freeze_mask=~flagged)
+    return AdjointResult(u, residual, n, flagged)
+
+
 # ---------------------------------------------------------------------------
 # Context builders for the two problem classes
 # ---------------------------------------------------------------------------
+
+
+def _scrub_lowrank_rows(H: LowRank, rows: Array) -> LowRank:
+    """Reset ``rows``' ring slots to the identity inverse (zeroed u/v,
+    count 0).  An escalated row's chain is exactly the thing that failed —
+    a warm start from it would re-enter the poison (and a non-finite slot
+    NaNs the masked matvec outright: 0 * NaN)."""
+    rm = _expand(rows, H.u[0])[None]
+    return LowRank(
+        alpha=H.alpha,
+        u=jnp.where(rm, jnp.zeros((), H.u.dtype), H.u),
+        v=jnp.where(rm, jnp.zeros((), H.v.dtype), H.v),
+        count=jnp.where(rows, 0, H.count),
+    )
 
 
 def deq_context(
@@ -221,17 +278,22 @@ def deq_context(
     w: Array,
     H: LowRank,
     sharding=None,
+    forward_status: Array | None = None,
 ) -> EstimatorContext:
     """DEQ adjoint: batched Broyden on ``(I - J_f)^T u = w``; the shared
     inverse is the forward Broyden chain (transposed for warm starts).
     ``sharding`` pins the refine/full solves to the forward solve's layout."""
     bsz = w.shape[0]
 
-    def solve(b, u0, steps, warm):
+    def solve(b, u0, steps, warm, freeze_mask=None):
+        init = H.transpose() if warm else None
+        if init is not None and freeze_mask is not None:
+            # escalation solve: the rows being solved start from identity
+            init = _scrub_lowrank_rows(init, ~freeze_mask)
         res = solve_adjoint(
             vjp_z, b, cfg.adjoint_cfg(steps),
-            u0=u0, init_lowrank=(H.transpose() if warm else None),
-            sharding=sharding,
+            u0=u0, init_lowrank=init,
+            sharding=sharding, freeze_mask=freeze_mask,
         )
         # the refine/full adjoint solve gets the same per-iteration
         # telemetry as the forward pass (phase-labelled "backward")
@@ -246,6 +308,7 @@ def deq_context(
         select=lambda mask, a, b: jnp.where(_expand(mask, a), a, b),
         no_fallback=jnp.zeros((bsz,), bool),
         nan_residual=jnp.full((bsz,), jnp.nan, jnp.float32),
+        forward_status=forward_status,
     )
 
 
@@ -260,7 +323,8 @@ def bilevel_context(
     symmetric, so apply == apply-transpose).  ``n_steps`` counts HVP calls."""
     gamma = _lbfgs_gamma(mem)
 
-    def solve(b, u0, steps, warm):
+    def solve(b, u0, steps, warm, freeze_mask=None):
+        # scalar problem: freeze_mask has no per-sample meaning here
         x0 = jnp.zeros_like(b) if u0 is None else u0
         q, k = _cg(hvp, b, x0, steps, cfg.backward.tol)
         return q, jnp.float32(jnp.nan), k
@@ -313,10 +377,15 @@ def estimate_cotangent(
     w: Array,
     H: LowRank,
     sharding=None,
+    forward_status: Array | None = None,
 ) -> AdjointResult:
-    """Run the configured estimator on the DEQ adjoint problem."""
+    """Run the configured estimator on the DEQ adjoint problem.
+
+    ``forward_status`` (per-sample STATUS_* of the forward solve) drives
+    the ``shine_cascade`` escalation; other estimators ignore it."""
     estimator = ESTIMATORS.get(cfg.backward.estimator)
-    return estimator(cfg, deq_context(cfg, vjp_z, w, H, sharding=sharding))
+    return estimator(cfg, deq_context(cfg, vjp_z, w, H, sharding=sharding,
+                                      forward_status=forward_status))
 
 
 def estimate_hypergrad_cotangent(

@@ -49,6 +49,9 @@ class ImplicitStats(NamedTuple):
     # full per-iteration convergence tape of the forward solve (residual,
     # step size, qN occupancy); see repro.obs.tape
     tape: SolveTape | None = None
+    # per-sample solve-health code (core.solvers.STATUS_*) of the forward
+    # solve — the containment signal serving/training route on
+    status: Array | None = None
 
 
 def solve_sharding(ctx, state_axes) -> SolveSharding | None:
@@ -135,7 +138,7 @@ def _implicit(f, cfg: ImplicitConfig, outer_grad, sharding, params, x, z0,
                          _bind_outer(outer_grad, params, x), sharding,
                          carry=carry)
     stats = ImplicitStats(res.residual, res.n_steps, res.converged, res.trace,
-                          res.tape)
+                          res.tape, res.status)
     obs_metrics.record_solve("forward", res, carry=carry)
     obs_tracing.phase_done("forward_solve", res.n_steps)
     return res.z, stats, res.carry
@@ -151,26 +154,37 @@ def _implicit_fwd(f, cfg: ImplicitConfig, outer_grad, sharding, params, x, z0,
                          _bind_outer(outer_grad, params, x), sharding,
                          carry=carry)
     stats = ImplicitStats(res.residual, res.n_steps, res.converged, res.trace,
-                          res.tape)
+                          res.tape, res.status)
     obs_metrics.record_solve("forward", res, carry=carry)
     obs_tracing.phase_done("forward_solve", res.n_steps)
     return (res.z, stats, res.carry), (params, x, res.z, res.lowrank,
-                                       _shape_structs(carry))
+                                       res.status, _shape_structs(carry))
 
 
 def _implicit_bwd(f, cfg: ImplicitConfig, outer_grad, sharding, saved,
                   cotangents):
-    params, x, z_star, H, carry = saved  # carry: shape structs only
+    params, x, z_star, H, status, carry = saved  # carry: shape structs only
     w, _stats_bar, _carry_bar = cotangents  # stats/carry carry no gradient
 
     # One VJP of f at the fixed point (recompute — O(1) memory).
     _, vjp = jax.vjp(lambda p, xx, z: f(p, xx, z), params, x, z_star)
     vjp_z = lambda u: vjp(u.astype(z_star.dtype))[2]
 
-    adj = estimate_cotangent(cfg, vjp_z, w, H, sharding=sharding)
+    adj = estimate_cotangent(cfg, vjp_z, w, H, sharding=sharding,
+                             forward_status=status)
     obs_metrics.record_backward(cfg.backward.estimator, adj)
     obs_tracing.phase_done("implicit_backward", adj.n_steps)
-    p_bar, x_bar, _ = vjp(adj.u.astype(z_star.dtype))
+    # Per-sample containment: a non-finite cotangent row (poisoned chain,
+    # upstream NaN loss, faulted solve) skips its gradient contribution
+    # instead of NaN-poisoning the whole batch's parameter gradient.
+    u = adj.u
+    row_ok = jnp.isfinite(u).reshape(u.shape[0], -1).all(axis=1)
+    u = jnp.where(row_ok.reshape((-1,) + (1,) * (u.ndim - 1)), u,
+                  jnp.zeros((), u.dtype))
+    obs_metrics.emit_scalar(
+        "backward_cotangents_zeroed_total",
+        (~row_ok).sum().astype(jnp.float32), kind="counter")
+    p_bar, x_bar, _ = vjp(u.astype(z_star.dtype))
     z0_bar = jnp.zeros_like(z_star)  # init point does not influence z*
     return p_bar, x_bar, z0_bar, _zeros_cotangent(carry)
 

@@ -57,6 +57,11 @@ def main() -> None:
                     choices=("bfloat16", "float32"),
                     help="storage dtype of the quasi-Newton U/V ring "
                          "(default bf16; coefficients accumulate f32)")
+    ap.add_argument("--no-guard", action="store_true",
+                    help="compile the numerical-fault guards out of the "
+                         "DEQ solves (disables per-request fault "
+                         "detection / cold retry; see API.md 'Failure "
+                         "semantics')")
     ap.add_argument("--pipeline", default="async",
                     choices=("async", "sync"),
                     help="serving pipeline: 'async' (default) overlaps "
@@ -115,10 +120,14 @@ def main() -> None:
     if args.arch not in ARCHS:
         raise SystemExit(f"unknown arch {args.arch!r}; have {sorted(ARCHS)}")
     cfg = smoke_config(args.arch, deq=args.deq)
-    if args.qn_dtype:
+    if args.qn_dtype or args.no_guard:
         import dataclasses
-        cfg = dataclasses.replace(
-            cfg, deq=dataclasses.replace(cfg.deq, qn_dtype=args.qn_dtype))
+        deq = cfg.deq
+        if args.qn_dtype:
+            deq = dataclasses.replace(deq, qn_dtype=args.qn_dtype)
+        if args.no_guard:
+            deq = dataclasses.replace(deq, guard=False)
+        cfg = dataclasses.replace(cfg, deq=deq)
     if cfg.family == "audio":
         raise SystemExit("encoder-only arch: no autoregressive serving")
     if args.mesh:

@@ -27,6 +27,7 @@ from repro.configs.base import ModelConfig, TrainConfig
 from repro.core.lowrank import LowRank
 from repro.core.solvers import SolveCarry, carry_state_only
 from repro.models import lm
+from repro.obs import metrics as obs_metrics
 from repro.obs import tracing as obs_tracing
 from repro.optim.optimizers import (
     OptState,
@@ -57,6 +58,10 @@ class TrainState(NamedTuple):
     # persistent solve state (DEQ models; None otherwise) — the warm-start
     # carry threaded across train steps
     carry: SolveCarry | None = None
+    # consecutive non-finite-update skips (None when skip_nonfinite is off);
+    # the trainer reads it at the per-interval metrics fetch and rolls back
+    # to the last checkpoint once it passes tcfg.skip_budget
+    skips: jax.Array | None = None
 
 
 def train_carry_enabled(cfg: ModelConfig, tcfg: TrainConfig) -> bool:
@@ -138,6 +143,7 @@ def state_shardings(cfg: ModelConfig, tcfg: TrainConfig, ctx: ShardCtx):
                      nu=jax.tree_util.tree_map(lambda s: s, oshard)),
         carry=(carry_shardings(cfg, ctx)
                if train_carry_enabled(cfg, tcfg) else None),
+        skips=(scalar if tcfg.skip_nonfinite else None),
     )
 
 
@@ -186,7 +192,8 @@ def train_state_structs(cfg: ModelConfig, tcfg: TrainConfig, ctx: ShardCtx) -> T
             age=vec(jnp.int32),
         )
     return TrainState(scalar(jnp.int32), params,
-                      OptState(scalar(jnp.int32), mu, nu), carry)
+                      OptState(scalar(jnp.int32), mu, nu), carry,
+                      scalar(jnp.int32) if tcfg.skip_nonfinite else None)
 
 
 # ---------------------------------------------------------------------------
@@ -268,11 +275,37 @@ def build_train_step(
         metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
         if isinstance(aux, dict):
             metrics.update({k: v for k, v in aux.items() if jnp.ndim(v) == 0})
+        new_state = TrainState(state.step + 1, new_params, opt, new_carry,
+                               state.skips)
+        if tcfg.skip_nonfinite:
+            # graceful degradation: a non-finite loss or gradient norm
+            # rejects the WHOLE update (params / optimizer state / solve
+            # carry keep their pre-step values) via a traced select — no
+            # host sync on the hot path.  The consecutive-skip count rides
+            # the state; the trainer reads it at its once-per-interval
+            # metrics fetch and rolls back to the last checkpoint once it
+            # passes tcfg.skip_budget.
+            ok = jnp.isfinite(loss) & jnp.isfinite(gnorm)
+            keep = lambda new, old: jax.tree_util.tree_map(
+                lambda n, o: jnp.where(ok, n, o), new, old)
+            prev_skips = state.skips if state.skips is not None \
+                else jnp.zeros((), jnp.int32)
+            new_state = TrainState(
+                state.step + 1,
+                keep(new_params, params),
+                keep(opt, state.opt),
+                keep(new_carry, state.carry) if new_carry is not None else None,
+                jnp.where(ok, 0, prev_skips + 1).astype(jnp.int32),
+            )
+            metrics["update_skipped"] = (~ok).astype(jnp.float32)
+            metrics["consec_skips"] = new_state.skips.astype(jnp.float32)
+            obs_metrics.emit_scalar("train_update_skips_total",
+                                    (~ok).astype(jnp.float32), kind="counter")
         # span-tracing phase mark: the optimizer phase closes when the new
         # opt state is materialized (forward_solve / implicit_backward marks
         # fire from inside the implicit fixed point)
         obs_tracing.phase_done("optimizer", opt.step)
-        return TrainState(state.step + 1, new_params, opt, new_carry), metrics
+        return new_state, metrics
 
     return train_step
 
@@ -286,8 +319,9 @@ def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, ctx: ShardCtx,
         params = lm.init_params(cfg, key)
         carry = (lm.deq_solve_carry(cfg, tcfg.global_batch, tcfg.seq_len)
                  if with_carry else None)
+        skips = jnp.zeros((), jnp.int32) if tcfg.skip_nonfinite else None
         return TrainState(jnp.zeros((), jnp.int32), params,
-                          adamw_init(params), carry)
+                          adamw_init(params), carry, skips)
 
     key = jax.random.PRNGKey(seed)
     shard = state_shardings(cfg, tcfg, ctx)

@@ -62,6 +62,13 @@ def main() -> None:
                     choices=("bfloat16", "float32"),
                     help="storage dtype of the quasi-Newton U/V ring "
                          "(default bf16; coefficients accumulate f32)")
+    ap.add_argument("--no-guard", action="store_true",
+                    help="compile the numerical-fault guards out of the "
+                         "solvers (the pre-guard program; see API.md "
+                         "'Failure semantics')")
+    ap.add_argument("--skip-budget", type=int, default=None,
+                    help="consecutive non-finite-update skips tolerated "
+                         "before rolling back to the last checkpoint")
     args = ap.parse_args()
 
     # observability switches are trace-time gates: enable BEFORE the first
@@ -75,7 +82,7 @@ def main() -> None:
 
     cfg = smoke_config(args.arch, deq=args.deq) if args.smoke \
         else get_config(args.arch, deq=args.deq)
-    if args.backward or args.solver or args.qn_dtype:
+    if args.backward or args.solver or args.qn_dtype or args.no_guard:
         deq = cfg.deq
         if args.backward:
             deq = dataclasses.replace(deq, backward=args.backward)
@@ -83,6 +90,8 @@ def main() -> None:
             deq = dataclasses.replace(deq, solver=args.solver)
         if args.qn_dtype:
             deq = dataclasses.replace(deq, qn_dtype=args.qn_dtype)
+        if args.no_guard:
+            deq = dataclasses.replace(deq, guard=False)
         cfg = dataclasses.replace(cfg, deq=deq)
 
     if args.mesh == "none":
@@ -100,6 +109,8 @@ def main() -> None:
         checkpoint_lean=args.checkpoint_lean,
         qn_dtype=args.qn_dtype or cfg.deq.qn_dtype,
         zero1=(ctx.mesh is not None),
+        **({"skip_budget": args.skip_budget}
+           if args.skip_budget is not None else {}),
     )
 
     print(f"arch={cfg.name} params={cfg.num_params()/1e6:.1f}M "

@@ -419,7 +419,7 @@ def _apply_deq(params, x_emb, cfg, ctx, positions, caches, cache_index, train,
         solver=d.solver, max_steps=d.max_steps, tol=d.tol, memory=d.memory,
         backward=d.backward, refine_steps=d.refine_steps,
         backward_max_steps=d.backward_max_steps, unroll=d.unroll,
-        qn_dtype=d.qn_dtype,
+        qn_dtype=d.qn_dtype, guard=d.guard,
     )
 
     # IMPORTANT: everything traced must flow through the custom_vjp's
@@ -451,6 +451,8 @@ def _apply_deq(params, x_emb, cfg, ctx, positions, caches, cache_index, train,
         aux = {"moe_aux": jnp.float32(0.0), "moe_z": jnp.float32(0.0),
                "deq_residual": jnp.mean(stats.residual),
                "deq_steps": stats.n_steps.astype(jnp.float32)}
+        if stats.status is not None:
+            aux["deq_status"] = stats.status  # (B,) solve-health codes
         if carry is not None:
             aux["solve_carry"] = out[2]
         return z_star, None, aux
@@ -496,6 +498,8 @@ def _apply_deq(params, x_emb, cfg, ctx, positions, caches, cache_index, train,
     aux = {"moe_aux": jnp.float32(0.0), "moe_z": jnp.float32(0.0),
            "deq_residual": jnp.mean(stats.residual),
            "deq_steps": stats.n_steps.astype(jnp.float32)}
+    if stats.status is not None:
+        aux["deq_status"] = stats.status  # (B,) solve-health codes
     if carry is not None:
         aux["solve_carry"] = out[2]
     return z_star, new_caches, aux
@@ -696,7 +700,8 @@ def prefix_gather_carry(cfg: ModelConfig, batch: int, seq: int,
 def prefill(params, batch: dict, cfg: ModelConfig, ctx: ShardCtx,
             max_len: int, carry: SolveCarry | None = None,
             prefix_carry: SolveCarry | None = None,
-            prefix_len: Array | None = None):
+            prefix_len: Array | None = None,
+            return_status: bool = False):
     """Encode a prompt; returns (logits, caches, lengths).
 
     ``carry`` must be a DECODE-shaped carry (``deq_solve_carry(cfg, B, 1)``):
@@ -714,6 +719,12 @@ def prefill(params, batch: dict, cfg: ModelConfig, ctx: ShardCtx,
     length.  The return gains ``(solve_carry, deq_steps)`` — the converged
     prefill carry (for publication back to the index) and the solver's
     step count (iteration accounting).
+
+    ``return_status`` appends the forward solve's per-sample health codes
+    (``deq_status: (B,) int32``, ``core.solvers.STATUS_*``; all-zeros when
+    the model is not a guarded DEQ) — the serving loop's containment
+    signal for per-request error status / cold retry / poisoned-prefix
+    eviction.
     """
     x, pos = _input_embedding(params, batch, cfg, ctx)
     b = x.shape[0]
@@ -746,12 +757,15 @@ def prefill(params, batch: dict, cfg: ModelConfig, ctx: ShardCtx,
         out = out + (seed_carry(carry, z_last),)
     if prefix_carry is not None:
         out = out + (aux["solve_carry"], aux["deq_steps"])
+    if return_status:
+        out = out + (aux.get("deq_status", jnp.zeros((b,), jnp.int32)),)
     return out
 
 
 def decode_step(params, caches, tokens: Array, cache_index: Array,
                 cfg: ModelConfig, ctx: ShardCtx, active: Array | None = None,
-                carry: SolveCarry | None = None, return_steps: bool = False):
+                carry: SolveCarry | None = None, return_steps: bool = False,
+                return_status: bool = False):
     """One decode step. tokens: (B,), cache_index: (B,). Returns
     (logits (B, V), new caches).  ``active: (B,) bool`` lets the serving
     loop freeze finished/empty slots inside the DEQ fixed-point solve.
@@ -764,6 +778,8 @@ def decode_step(params, caches, tokens: Array, cache_index: Array,
     ``return_steps`` appends the solver's step count (``deq_steps``, 0.0
     for non-DEQ models) so the serving pipeline can thread iteration
     accounting through its completion queue instead of re-fetching aux.
+    ``return_status`` then appends the per-sample solve-health codes
+    (``deq_status: (B,) int32``; zeros for non-DEQ/unguarded models).
     """
     batch = {"tokens": tokens[:, None]}
     x = embed_tokens(params["embed"], batch["tokens"], cfg, ctx)
@@ -778,4 +794,7 @@ def decode_step(params, caches, tokens: Array, cache_index: Array,
            else (logits[:, 0], caches, aux.get("solve_carry", carry)))
     if return_steps:
         out = out + (aux.get("deq_steps", jnp.float32(0.0)),)
+    if return_status:
+        out = out + (aux.get("deq_status",
+                             jnp.zeros((tokens.shape[0],), jnp.int32)),)
     return out

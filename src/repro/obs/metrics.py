@@ -364,20 +364,34 @@ def emit_scalar(name: str, value, *, labels=None, kind: str = "gauge") -> None:
     jax.debug.callback(cb, value)
 
 
-def _solve_cb(phase: str, has_warm: bool, has_tape: bool):
+def _solve_cb(phase: str, has_warm: bool, has_tape: bool,
+              has_status: bool):
     """Host side of record_solve; argument layout fixed at trace time."""
 
     def cb(n_steps, residual, *rest):
         rest = list(rest)
-        warm = age = tape_res = None
+        warm = age = tape_res = status = None
         if has_warm:
             warm, age = rest[0], rest[1]
             rest = rest[2:]
         if has_tape:
             tape_res = rest[0]
+            rest = rest[1:]
+        if has_status:
+            status = rest[0]
         reg = _REGISTRY
         pl = {"phase": phase}
         reg.counter("solves_total", pl).inc()
+        if status is not None:
+            from repro.core.solvers import STATUS_CONVERGED, STATUS_NAMES
+            codes = np.asarray(status).reshape(-1)
+            for code in np.unique(codes):
+                if int(code) == STATUS_CONVERGED:
+                    continue
+                reg.counter("solve_failures_total", {
+                    "phase": phase,
+                    "status": STATUS_NAMES.get(int(code), str(int(code))),
+                }).inc(float((codes == code).sum()))
         n = float(np.asarray(n_steps).reshape(-1)[0])
         wl = "cold"
         if warm is not None:
@@ -428,7 +442,12 @@ def record_solve(phase: str, result, *, carry=None) -> None:
     has_tape = tape is not None
     if has_tape:
         args.append(tape.residual)
-    jax.debug.callback(_solve_cb(phase, has_warm, has_tape), *args)
+    status = getattr(result, "status", None)
+    has_status = status is not None
+    if has_status:
+        args.append(status)
+    jax.debug.callback(_solve_cb(phase, has_warm, has_tape, has_status),
+                       *args)
 
 
 def record_backward(estimator: str, adj) -> None:

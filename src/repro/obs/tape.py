@@ -45,6 +45,9 @@ class SolveTape(NamedTuple):
     residual: Array   # f32, inf-padded
     step_norm: Array  # f32, 0-padded
     qn_count: Array   # int32, 0-padded
+    # per-iteration solver health code (core.solvers.STATUS_*), recorded
+    # only by guarded solvers (SolverConfig.guard); -1 = unrecorded
+    status: Array | None = None
 
 
 def empty_tape(max_steps: int, batch: int | None = None) -> SolveTape:
@@ -55,13 +58,21 @@ def empty_tape(max_steps: int, batch: int | None = None) -> SolveTape:
         residual=jnp.full(shape, jnp.inf, jnp.float32),
         step_norm=jnp.zeros(shape, jnp.float32),
         qn_count=jnp.zeros(shape, jnp.int32),
+        status=jnp.full(shape, -1, jnp.int32),
     )
 
 
 def tape_record(tape: SolveTape, k: Array, active: Array, residual: Array,
-                step_norm: Array, qn_count: Array) -> SolveTape:
+                step_norm: Array, qn_count: Array,
+                status: Array | None = None) -> SolveTape:
     """Record iteration ``k`` for samples where ``active``; frozen samples
-    keep their cells bit-for-bit (the freeze-mask guarantee)."""
+    keep their cells bit-for-bit (the freeze-mask guarantee).  ``status``
+    is recorded only when given (guarded solvers); unguarded solves leave
+    the status plane at its -1 init."""
+    st = tape.status
+    if status is not None and st is not None:
+        st = st.at[k].set(
+            jnp.where(active, status.astype(jnp.int32), st[k]))
     return SolveTape(
         residual=tape.residual.at[k].set(
             jnp.where(active, residual, tape.residual[k])),
@@ -70,6 +81,7 @@ def tape_record(tape: SolveTape, k: Array, active: Array, residual: Array,
                       tape.step_norm[k])),
         qn_count=tape.qn_count.at[k].set(
             jnp.where(active, qn_count.astype(jnp.int32), tape.qn_count[k])),
+        status=st,
     )
 
 

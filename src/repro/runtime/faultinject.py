@@ -1,0 +1,160 @@
+"""Deterministic numerical-fault injection for chaos testing.
+
+Every containment path in the stack (in-solver detection + restart, the
+backward escalation cascade, trainer update-skipping, serving retry /
+poisoned-prefix eviction) is exercised by injecting faults at known
+(sample, iteration) coordinates:
+
+  * **In-solver faults** — :func:`arm` installs a trace-time hook into
+    ``core/solvers.py`` (``solvers._FAULT_HOOK``): while a :class:`FaultPlan`
+    is armed, every batched solver perturbs its iterate at the planned
+    coordinates.  Unarmed, the hook is ``None`` and the compiled programs
+    carry ZERO injection residue — the same trace-time gating discipline as
+    the observability switches.  Arming/disarming therefore changes the jit
+    cache key implicitly: solves traced while armed must not be reused
+    unarmed (tests re-jit per plan).
+  * **Host-state corruption** — :func:`corrupt_carry_ring` poisons a
+    ``SolveCarry`` quasi-Newton ring with NaNs (the corrupted-ring class);
+    :func:`poison_prefix_entry` / :func:`poison_prefix_store_slot` overwrite
+    a prefix-cache entry's equilibrium snapshot so the next seeded prefill
+    consumes it (the poisoned-cache class).  These are duck-typed mutators:
+    they import nothing from the layers they poison.
+
+Determinism: a plan names exact (sample, step) coordinates; there is no
+randomness anywhere in this module.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+_KINDS = ("nonfinite", "stall", "diverge")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """One deterministic in-solver fault.
+
+    ``kind``      "nonfinite" (iterate row becomes NaN), "stall" (the row's
+                  step is forced to exactly zero), or "diverge" (the row is
+                  scaled by ``scale`` so its residual blows past the
+                  divergence ratio while staying finite).
+    ``sample``    batch row to corrupt.
+    ``step``      first solver iteration (0-based) at which the fault fires.
+    ``duration``  consecutive iterations the fault persists ("stall" needs
+                  at least ``stall_patience``; default: forever).
+    ``scale``     "diverge" blow-up factor per fired iteration.
+    """
+
+    kind: str
+    sample: int = 0
+    step: int = 2
+    duration: int = 1_000_000
+    scale: float = 1e6
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"kind must be one of {_KINDS}, got {self.kind!r}")
+
+
+_PLAN: FaultPlan | None = None
+
+
+def current_plan() -> FaultPlan | None:
+    return _PLAN
+
+
+def _perturb(z_new: Array, k: Array, z_prev: Array) -> Array:
+    """The traced hook: corrupt row ``plan.sample`` of the iterate at
+    iterations ``[step, step + duration)``.  Called by the solver loop body
+    with the post-step iterate, the iteration counter, and the pre-step
+    iterate (the "stall" target)."""
+    plan = _PLAN
+    if plan is None:  # pragma: no cover — hook is uninstalled when unarmed
+        return z_new
+    bsz = z_new.shape[0]
+    row = jnp.arange(bsz) == plan.sample
+    fire = (k >= plan.step) & (k < plan.step + plan.duration)
+    mask = (row & fire).reshape((bsz,) + (1,) * (z_new.ndim - 1))
+    if plan.kind == "nonfinite":
+        bad = jnp.full_like(z_new, jnp.nan)
+    elif plan.kind == "stall":
+        bad = z_prev
+    else:  # diverge: finite blow-up, caught by the divergence-ratio guard
+        bad = (z_new.astype(jnp.float32) * plan.scale).astype(z_new.dtype)
+    return jnp.where(mask, bad, z_new)
+
+
+def arm(plan: FaultPlan) -> None:
+    """Install ``plan`` as the active in-solver fault (trace-time gate)."""
+    global _PLAN
+    from repro.core import solvers as _solvers
+    _PLAN = plan
+    _solvers._FAULT_HOOK = _perturb
+
+
+def disarm() -> None:
+    global _PLAN
+    from repro.core import solvers as _solvers
+    _PLAN = None
+    _solvers._FAULT_HOOK = None
+
+
+class inject:
+    """Context manager: arm ``plan`` for the duration of the block."""
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+
+    def __enter__(self) -> FaultPlan:
+        arm(self.plan)
+        return self.plan
+
+    def __exit__(self, *exc) -> None:
+        disarm()
+
+
+# ---------------------------------------------------------------------------
+# Host-state corruption (no traced code; duck-typed mutators)
+# ---------------------------------------------------------------------------
+
+
+def corrupt_carry_ring(carry, rows):
+    """Return ``carry`` with the quasi-Newton U-ring of ``rows`` poisoned
+    with NaNs, a nonzero valid count, and ``warm=True`` — so the next solve
+    consumes the corrupted inverse estimate and must detect + recover."""
+    rows = np.atleast_1d(np.asarray(rows, np.int64))
+    lr = carry.lowrank
+    u = np.array(lr.u)
+    u[:, rows] = np.nan
+    count = np.array(lr.count)
+    count[rows] = np.maximum(count[rows], 1)
+    warm = np.array(carry.warm)
+    warm[rows] = True
+    lr2 = dataclasses.replace(
+        lr, u=jnp.asarray(u), count=jnp.asarray(count))
+    return dataclasses.replace(
+        carry, lowrank=lr2, warm=jnp.asarray(warm))
+
+
+def poison_prefix_entry(index, key=None, value: float = float("nan")):
+    """Poison one host-side ``PrefixCarryIndex`` entry's equilibrium
+    snapshot in place (``key=None`` = every entry).  The next prefill that
+    seeds from it starts its solve at ``value``.  Returns the poisoned keys."""
+    keys = [key] if key is not None else list(index._entries)
+    for k in keys:
+        e = index._entries[k]
+        e.z = np.full_like(np.asarray(e.z, np.float32), value)
+    return keys
+
+
+def poison_prefix_store_slot(store, slot: int, value: float = float("nan")):
+    """Poison one ``DevicePrefixStore`` slot's equilibrium rows in place."""
+    store.z = store.z.at[slot].set(jnp.asarray(value, store.z.dtype))
+    return slot

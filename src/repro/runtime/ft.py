@@ -67,6 +67,7 @@ class StragglerWatchdog:
         self.clock = clock
         self._avg = np.zeros(n_hosts)
         self._initialized = np.zeros(n_hosts, bool)
+        self._flagged: set[int] = set()
 
     def record(self, host: int, step_time: float) -> None:
         if not self._initialized[host]:
@@ -75,19 +76,37 @@ class StragglerWatchdog:
         else:
             self._avg[host] = self.ema * self._avg[host] + (1 - self.ema) * step_time
 
-    def stragglers(self) -> list[StragglerReport]:
+    def _zscores(self) -> dict[int, float]:
+        """Robust (median/MAD) per-host z-score of the step-time EMA."""
         if self._initialized.sum() < 2:
-            return []
+            return {}
         avgs = self._avg[self._initialized]
         med = np.median(avgs)
         mad = np.median(np.abs(avgs - med)) + 1e-9
+        return {h: float(0.6745 * (self._avg[h] - med) / mad)
+                for h in range(self.n_hosts) if self._initialized[h]}
+
+    def stragglers(self) -> list[StragglerReport]:
+        return [StragglerReport(h, float(self._avg[h]), z)
+                for h, z in self._zscores().items() if z > self.threshold]
+
+    def publish_metrics(self) -> list[StragglerReport]:
+        """Mirror the fleet view onto the metrics registry: a per-host
+        ``straggler_zscore`` gauge plus a ``stragglers_flagged_total``
+        counter incremented when a host NEWLY crosses the threshold (a
+        persistently slow host counts once until it recovers)."""
+        from repro.obs import metrics as obs_metrics
+        reg = obs_metrics.default_registry()
         out = []
-        for h in range(self.n_hosts):
-            if not self._initialized[h]:
-                continue
-            z = 0.6745 * (self._avg[h] - med) / mad
+        for h, z in self._zscores().items():
+            reg.gauge("straggler_zscore", {"host": str(h)}).set(z)
             if z > self.threshold:
-                out.append(StragglerReport(h, float(self._avg[h]), float(z)))
+                out.append(StragglerReport(h, float(self._avg[h]), z))
+                if h not in self._flagged:
+                    self._flagged.add(h)
+                    reg.counter("stragglers_flagged_total").inc()
+            else:
+                self._flagged.discard(h)
         return out
 
 

@@ -76,6 +76,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.solvers import STATUS_DIVERGED, STATUS_NAMES
 from repro.implicit import (
     CarryCache,
     DevicePrefixStore,
@@ -103,6 +104,16 @@ class Request:
     t_submit: float = 0.0
     # admission rounds spent queued (reorder fairness accounting)
     wait_rounds: int = 0
+    # numerical-fault containment (ISSUE 10): the solve-health name
+    # ("DIVERGED" / "NONFINITE" / "STALLED") when this request's OWN solve
+    # faulted — co-batched healthy requests are unaffected.  A faulted
+    # prefill is retried ONCE cold (no prefix seed); ``retried`` marks the
+    # retry spent.  ``epoch`` versions the async pipeline's in-flight
+    # programs so pre-retry landings are dropped instead of interleaving
+    # stale tokens into the retried request.
+    error: str | None = None
+    retried: bool = False
+    epoch: int = 0
 
 
 @dataclasses.dataclass
@@ -196,17 +207,24 @@ class ServeLoop:
         self.prefill_iters = 0.0
         self.saved_iters = 0.0
         self._cold_prefill_ref: dict[tuple[int, int], float] = {}
+        # fault containment is live only for guarded DEQ models: the solver
+        # emits per-sample status codes the loop routes on (error status,
+        # one cold retry, poisoned-prefix eviction); unguarded programs are
+        # bit-identical to the pre-guard loop
+        self._guarded = bool(cfg.deq.enabled and cfg.deq.guard)
 
+        gs = self._guarded
         if self.carries is None:
             self._decode = jax.jit(
                 lambda p, c, t, i, a: lm.decode_step(
-                    p, c, t, i, cfg, ctx, active=a, return_steps=record)
+                    p, c, t, i, cfg, ctx, active=a, return_steps=record,
+                    return_status=gs)
             )
         else:
             self._decode = jax.jit(
                 lambda p, c, t, i, a, cy: lm.decode_step(
                     p, c, t, i, cfg, ctx, active=a, carry=cy,
-                    return_steps=record)
+                    return_steps=record, return_status=gs)
             )
         self._prefill_cache = {}
         # The batch axis of each cache leaf, probed once from shapes (batch
@@ -359,8 +377,12 @@ class ServeLoop:
         return matches, snapshots
 
     def _prefix_publish(self, group: list[tuple[int, Request]],
-                        pf_carry, matches: list) -> None:
-        """Publish the wave's converged prefill carries and drop leases."""
+                        pf_carry, matches: list,
+                        skip_rows: set[int] = frozenset()) -> None:
+        """Publish the wave's converged prefill carries and drop leases.
+
+        ``skip_rows``: rows whose solve FAULTED — their (solver-reset)
+        carry must not be published as a reusable prefix entry."""
         lr = pf_carry.lowrank
         self._count_sync("prefix_publish", (pf_carry.z, lr.u, lr.v, lr.count))
         z_np = np.asarray(jax.device_get(pf_carry.z))
@@ -368,6 +390,8 @@ class ServeLoop:
         v_np = np.asarray(jax.device_get(lr.v))
         c_np = np.asarray(jax.device_get(lr.count))
         for row, (_slot, req) in enumerate(group):
+            if row in skip_rows:
+                continue
             self.prefix.publish(req.prompt, z_np[row], u_np[:, row],
                                 v_np[:, row], int(c_np[row]))
         for m in matches:
@@ -386,27 +410,32 @@ class ServeLoop:
                 self._prefill_group_sync(plen, group)
 
     def _prefill_group_sync(self, plen: int,
-                            group: list[tuple[int, Request]]) -> None:
+                            group: list[tuple[int, Request]],
+                            allow_prefix: bool = True) -> None:
         # the prefix-on program takes two extra traced args (the seed
         # carry + per-row match lengths) — a distinct jit cache entry,
-        # but ONE program per (plen, wave) across all match lengths
-        key = (plen, len(group), self.prefix is not None)
+        # but ONE program per (plen, wave) across all match lengths.
+        # ``allow_prefix=False`` is the containment COLD RETRY: the same
+        # request re-prefills with no prefix seed (the no-prefix program).
+        use_prefix = self.prefix is not None and allow_prefix
+        gs = self._guarded
+        key = (plen, len(group), use_prefix)
         if key not in self._prefill_cache:
             if self.carries is None:
                 self._prefill_cache[key] = jax.jit(
                     lambda p, toks: lm.prefill(
                         p, {"tokens": toks}, self.cfg, self.ctx,
-                        self.max_len
+                        self.max_len, return_status=gs
                     )
                 )
-            elif self.prefix is None:
+            elif not use_prefix:
                 # wave-shaped cold carry: prefill seeds it with the last
                 # token's equilibrium (token-to-token reuse from token 0)
                 wave_carry = lm.deq_solve_carry(self.cfg, len(group), 1)
                 self._prefill_cache[key] = jax.jit(
                     lambda p, toks, _c=wave_carry: lm.prefill(
                         p, {"tokens": toks}, self.cfg, self.ctx,
-                        self.max_len, carry=_c
+                        self.max_len, carry=_c, return_status=gs
                     )
                 )
             else:
@@ -415,13 +444,13 @@ class ServeLoop:
                     lambda p, toks, pc, pl, _c=wave_carry: lm.prefill(
                         p, {"tokens": toks}, self.cfg, self.ctx,
                         self.max_len, carry=_c, prefix_carry=pc,
-                        prefix_len=pl
+                        prefix_len=pl, return_status=gs
                     )
                 )
         toks = jnp.asarray([req.prompt for _, req in group], jnp.int32)
         matches = None
         with obs_tracing.span("prefill", plen=plen, wave=len(group)):
-            if self.prefix is None:
+            if not use_prefix:
                 out = self._prefill_cache[key](self.params, toks)
             else:
                 matches, snapshots = self._prefix_lookup(plen, group)
@@ -430,15 +459,26 @@ class ServeLoop:
                 out = self._prefill_cache[key](self.params, toks, pc, pl)
             self._count_sync("prefill_block", out[0])
             logits = jax.block_until_ready(out[0])
-        cache_new = out[1]
-        seeded = out[3] if self.carries is not None else None
+        status = out[-1] if gs else None
+        base = out[:-1] if gs else out
+        cache_new = base[1]
+        seeded = base[3] if self.carries is not None else None
+        # per-row fault detection: the program already ran, so the status
+        # fetch is free — no extra hot-path sync
+        failed: dict[int, int] = {}
+        if status is not None:
+            st = np.asarray(jax.device_get(status))
+            failed = {row: int(st[row]) for row in range(len(group))
+                      if int(st[row]) >= STATUS_DIVERGED}
         steps = None
-        if self.prefix is not None:
-            self._count_sync("steps_fetch", out[5])
-            pf_carry, steps = out[4], float(jax.device_get(out[5]))
+        if use_prefix:
+            self._count_sync("steps_fetch", base[5])
+            pf_carry, steps = base[4], float(jax.device_get(base[5]))
             self.prefill_iters += steps
             ck = (plen, len(group))
-            if any(m is not None for m in matches):
+            if failed:
+                pass  # a faulted wave's step count is not a fair reference
+            elif any(m is not None for m in matches):
                 ref = self._cold_prefill_ref.get(ck)
                 if ref is not None:
                     saved = max(0.0, ref - steps)
@@ -448,7 +488,8 @@ class ServeLoop:
                 # all-miss wave == the cold path bit-for-bit: its step
                 # count is the cold reference for this program shape
                 self._cold_prefill_ref.setdefault(ck, steps)
-            self._prefix_publish(group, pf_carry, matches)
+            self._prefix_publish(group, pf_carry, matches,
+                                 skip_rows=set(failed))
         self.prefill_calls += 1
         self.prefill_requests += len(group)
         self._metrics.counter("serve_prefill_calls").inc()
@@ -462,7 +503,28 @@ class ServeLoop:
             self.carries.update(write_carry_rows(
                 self.carries.carry, seeded,
                 [slot for slot, _ in group], list(range(len(group)))))
+        retry: list[tuple[int, Request]] = []
         for row, (slot, req) in enumerate(group):
+            if row in failed:
+                # containment: this row's solve faulted — do NOT emit its
+                # token or activate the slot; co-batched healthy rows are
+                # untouched (the solver froze the sick sample per-row)
+                name = STATUS_NAMES.get(failed[row], str(failed[row]))
+                self._metrics.counter("serve_request_faults_total",
+                                      {"status": name}).inc()
+                if use_prefix and matches[row] is not None:
+                    # the seed that poisoned this solve must not seed the
+                    # next request
+                    self.prefix.evict_poisoned(req.prompt)
+                if not req.retried:
+                    retry.append((slot, req))
+                else:
+                    req.error = name
+                    req.done = True
+                    self._metrics.counter("serve_requests_completed").inc()
+                    if self.carries is not None:
+                        self.carries.release(slot)
+                continue
             self.caches = jax.tree_util.tree_map(
                 lambda live, new, ax: _slot_write(live, new, slot, row, ax),
                 self.caches, cache_new, self._cache_batch_axis,
@@ -480,19 +542,28 @@ class ServeLoop:
             self.active[slot] = req
             self.lengths = self.lengths.at[slot].set(plen)
             self.cur_tok = self.cur_tok.at[slot].set(nxt)
+        for slot, req in retry:
+            # ONE cold retry: same request, fresh solve, no prefix seed
+            req.retried = True
+            self._metrics.counter("serve_request_retries_total").inc()
+            self._prefill_group_sync(plen, [(slot, req)], allow_prefix=False)
 
     # -- async pipeline ---------------------------------------------------
 
-    def _make_prefill_async(self, nrows: int):
+    def _make_prefill_async(self, nrows: int, use_store: bool):
         """Build the jitted async prefill program for a wave of ``nrows``:
         gather prefix carries from the device store, solve, scatter the
         converged carry back, pick next tokens, AND integrate the wave into
         the live slot state (KV caches, carry rows, lengths/cur_tok/active
         masks) — all in ONE program.  Folding the slot scatters in-jit
         matters: done eagerly they cost ~17 un-jitted dispatches per wave,
-        which dominated the drain's host time."""
+        which dominated the drain's host time.
+
+        ``use_store=False`` with a live prefix store is the containment
+        COLD RETRY program: no store gather/scatter, fresh solve."""
         cfg, ctx, max_len = self.cfg, self.ctx, self.max_len
         record = self._record
+        gs = self._guarded
         cache_axes = self._cache_batch_axis
 
         def integrate(slots_arr, mnt_vec, caches_live, caches_new, state,
@@ -510,15 +581,20 @@ class ServeLoop:
                 max_new.at[slots_arr].set(mnt_vec),
             )
 
-        if self.prefix_store is not None:
+        if use_store and self.prefix_store is not None:
             def fn(params, toks, store, slot_in, plen_vec, pub,
                    slots_arr, mnt_vec, caches_live, carry_live, state):
                 wave_carry = lm.deq_solve_carry(cfg, nrows, 1)
                 pc, pl = lm.prefix_gather_carry(
                     cfg, nrows, toks.shape[1], store, slot_in, plen_vec)
-                logits, caches, _lens, seeded, pf_carry, steps = lm.prefill(
+                res = lm.prefill(
                     params, {"tokens": toks}, cfg, ctx, max_len,
-                    carry=wave_carry, prefix_carry=pc, prefix_len=pl)
+                    carry=wave_carry, prefix_carry=pc, prefix_len=pl,
+                    return_status=gs)
+                status = None
+                if gs:
+                    *res, status = res
+                logits, caches, _lens, seeded, pf_carry, steps = res
                 new_store = prefix_store_scatter(store, pf_carry, pub)
                 nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
                 caches2, state2 = integrate(
@@ -528,6 +604,8 @@ class ServeLoop:
                     carry_live, seeded, slots_arr,
                     jnp.arange(nrows, dtype=jnp.int32))
                 out = {"nxt": nxt, "steps": steps}
+                if gs:
+                    out["status"] = status
                 if record:
                     out["logits"] = logits[:, -1]
                 return caches2, carry2, new_store, state2, out
@@ -541,9 +619,13 @@ class ServeLoop:
             def fn(params, toks, slots_arr, mnt_vec, caches_live,
                    carry_live, state):
                 wave_carry = lm.deq_solve_carry(cfg, nrows, 1)
-                logits, caches, _lens, seeded = lm.prefill(
+                res = lm.prefill(
                     params, {"tokens": toks}, cfg, ctx, max_len,
-                    carry=wave_carry)
+                    carry=wave_carry, return_status=gs)
+                status = None
+                if gs:
+                    *res, status = res
+                logits, caches, _lens, seeded = res
                 nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
                 caches2, state2 = integrate(
                     slots_arr, mnt_vec, caches_live, caches, state,
@@ -552,33 +634,50 @@ class ServeLoop:
                     carry_live, seeded, slots_arr,
                     jnp.arange(nrows, dtype=jnp.int32))
                 out = {"nxt": nxt}
+                if gs:
+                    out["status"] = status
                 if record:
                     out["logits"] = logits[:, -1]
                 return caches2, carry2, state2, out
             return jax.jit(fn, donate_argnums=(4, 5, 6))
 
         def fn(params, toks, slots_arr, mnt_vec, caches_live, state):
-            logits, caches, _lens = lm.prefill(
-                params, {"tokens": toks}, cfg, ctx, max_len)
+            res = lm.prefill(
+                params, {"tokens": toks}, cfg, ctx, max_len,
+                return_status=gs)
+            status = None
+            if gs:
+                *res, status = res
+            logits, caches, _lens = res
             nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
             caches2, state2 = integrate(
                 slots_arr, mnt_vec, caches_live, caches, state,
                 toks.shape[1], nxt)
             out = {"nxt": nxt}
+            if gs:
+                out["status"] = status
             if record:
                 out["logits"] = logits[:, -1]
             return caches2, state2, out
         return jax.jit(fn, donate_argnums=(4, 5))
 
     def _prefill_group_async(self, plen: int,
-                             group: list[tuple[int, Request]]) -> None:
-        key = ("async", plen, len(group), self.prefix_store is not None)
+                             group: list[tuple[int, Request]],
+                             allow_prefix: bool = True) -> None:
+        use_store = self.prefix_store is not None and allow_prefix
+        key = ("async", plen, len(group), use_store)
         if key not in self._prefill_cache:
-            self._prefill_cache[key] = self._make_prefill_async(len(group))
+            self._prefill_cache[key] = self._make_prefill_async(
+                len(group), use_store)
         fn = self._prefill_cache[key]
         toks = jnp.asarray([req.prompt for _, req in group], jnp.int32)
         tag = next(self._tags)
-        meta: dict[str, Any] = {"plen": plen}
+        # epoch snapshot: a landing whose slot's request has since been
+        # retried (epoch bumped) is STALE and must be dropped, not applied
+        meta: dict[str, Any] = {
+            "plen": plen,
+            "epochs": {slot: req.epoch for slot, req in group},
+        }
         slots_arr = jnp.asarray([s for s, _ in group], jnp.int32)
         mnt_vec = jnp.asarray([req.max_new_tokens for _, req in group],
                               jnp.int32)
@@ -586,7 +685,7 @@ class ServeLoop:
                  self._max_new)
         with obs_tracing.span("prefill_dispatch", plen=plen,
                               wave=len(group)):
-            if self.prefix_store is not None:
+            if use_store:
                 # host bookkeeping only (tiny ints): longest-prefix-match
                 # slot ids, then publish planning — the payload stays on
                 # device end to end
@@ -648,6 +747,7 @@ class ServeLoop:
         small outputs dict, later, through the completion queue."""
         cfg, ctx, eos = self.cfg, self.ctx, self.eos
         record = self._record
+        gs = self._guarded
         max_age = self.carries.max_age if self.carries is not None else None
 
         def advance(logits, cur_tok, lengths, active, ntok, max_new):
@@ -661,9 +761,14 @@ class ServeLoop:
         if self.carries is not None:
             def tick(params, caches, cur_tok, lengths, active, ntok,
                      max_new, carry):
-                logits, caches, carry, steps = lm.decode_step(
+                res = lm.decode_step(
                     params, caches, cur_tok, lengths, cfg, ctx,
-                    active=active, carry=carry, return_steps=True)
+                    active=active, carry=carry, return_steps=True,
+                    return_status=gs)
+                status = None
+                if gs:
+                    *res, status = res
+                logits, caches, carry, steps = res
                 nxt, lengths2, active2, ntok2, done_now = advance(
                     logits, cur_tok, lengths, active, ntok, max_new)
                 n_stale = jnp.int32(0)
@@ -673,6 +778,8 @@ class ServeLoop:
                     carry = reset_carry_rows(carry, stale)
                 out = {"nxt": nxt, "emitted": active, "done": done_now,
                        "steps": steps, "n_stale": n_stale}
+                if gs:
+                    out["status"] = status
                 if record:
                     out["logits"] = logits
                 return caches, carry, nxt, lengths2, active2, ntok2, out
@@ -684,13 +791,19 @@ class ServeLoop:
 
         def tick(params, caches, cur_tok, lengths, active, ntok,
                  max_new):
-            logits, caches, steps = lm.decode_step(
+            res = lm.decode_step(
                 params, caches, cur_tok, lengths, cfg, ctx, active=active,
-                return_steps=True)
+                return_steps=True, return_status=gs)
+            status = None
+            if gs:
+                *res, status = res
+            logits, caches, steps = res
             nxt, lengths2, active2, ntok2, done_now = advance(
                 logits, cur_tok, lengths, active, ntok, max_new)
             out = {"nxt": nxt, "emitted": active, "done": done_now,
                    "steps": steps, "n_stale": jnp.int32(0)}
+            if gs:
+                out["status"] = status
             if record:
                 out["logits"] = logits
             return caches, nxt, lengths2, active2, ntok2, out
@@ -725,7 +838,8 @@ class ServeLoop:
                     self.params, self.caches, self.cur_tok, self.lengths,
                     self._dev_active, self._ntok, self._max_new)
         self._watch(tag, out)
-        self._push(_Inflight("tick", tag, group, out, time.perf_counter()))
+        self._push(_Inflight("tick", tag, group, out, time.perf_counter(),
+                             {"epochs": {s: r.epoch for s, r in group}}))
 
     def _push(self, entry: _Inflight) -> None:
         self._inflight.append(entry)
@@ -782,9 +896,44 @@ class ServeLoop:
         self._count_sync(f"{e.kind}_land", e.arrays)
         out = {k: np.asarray(jax.device_get(v)) for k, v in e.arrays.items()}
         t_land = self._pop_stamp(e.tag)
+        epochs = e.meta.get("epochs", {})
+        status = out.get("status")
         if e.kind == "prefill":
             nxt = out["nxt"]
-            for row, (_slot, req) in enumerate(e.group):
+            failed: dict[int, int] = {}
+            retry: list[tuple[int, Request]] = []
+            for row, (slot, req) in enumerate(e.group):
+                if epochs.get(slot, req.epoch) != req.epoch:
+                    continue  # stale landing from before this row's retry
+                code = int(status[row]) if status is not None else 0
+                if code >= STATUS_DIVERGED:
+                    # containment: this row's prefill solve faulted — drop
+                    # its token; co-batched healthy rows land normally
+                    failed[row] = code
+                    name = STATUS_NAMES.get(code, str(code))
+                    self._metrics.counter("serve_request_faults_total",
+                                          {"status": name}).inc()
+                    if self.prefix_store is not None:
+                        # the wave's in-program scatter may have PUBLISHED
+                        # this row's poisoned carry (and a poisoned seed may
+                        # have caused the fault) — evict the whole prefix
+                        # chain of this prompt either way
+                        self.prefix_store.evict_poisoned(req.prompt)
+                    if not req.retried:
+                        retry.append((slot, req))
+                    else:
+                        req.error = name
+                        req.done = True
+                        if self.active[slot] is req:
+                            self.active[slot] = None
+                        self._planned[slot] = 0
+                        self._dev_active = (
+                            self._dev_active.at[slot].set(False))
+                        self._metrics.counter(
+                            "serve_requests_completed").inc()
+                        if self.carries is not None:
+                            self.carries.release(slot)
+                    continue
                 req.out.append(int(nxt[row]))
                 self._metrics.histogram("serve_ttft_ms").observe(
                     (t_land - req.t_submit) * 1e3)
@@ -795,7 +944,9 @@ class ServeLoop:
                 steps = float(out["steps"])
                 self.prefill_iters += steps
                 ck = (e.meta["plen"], len(e.group))
-                if e.meta.get("hit"):
+                if failed:
+                    pass  # a faulted wave's step count is not a fair ref
+                elif e.meta.get("hit"):
                     ref = self._cold_prefill_ref.get(ck)
                     if ref is not None:
                         saved = max(0.0, ref - steps)
@@ -804,9 +955,23 @@ class ServeLoop:
                 else:
                     self._cold_prefill_ref.setdefault(ck, steps)
                 if self._record:
-                    for _slot, req in e.group:
-                        self.recorded_steps.setdefault(req.uid, []).append(
-                            steps)
+                    for row, (_slot, req) in enumerate(e.group):
+                        if row not in failed:
+                            self.recorded_steps.setdefault(
+                                req.uid, []).append(steps)
+            for slot, req in retry:
+                # ONE cold retry: bump the epoch (in-flight ticks for this
+                # slot land stale and are dropped above), clear any partial
+                # output, re-dispatch with no prefix seed.  FIFO device
+                # order means the retry program lands after every stale
+                # tick, overwriting the slot's device state.
+                req.retried = True
+                req.epoch += 1
+                req.out.clear()
+                self._planned[slot] = 0
+                self._metrics.counter("serve_request_retries_total").inc()
+                self._prefill_group_async(e.meta["plen"], [(slot, req)],
+                                          allow_prefix=False)
             return
         # decode tick: append emitted tokens, retire done requests
         nxt, emitted, done = out["nxt"], out["emitted"], out["done"]
@@ -814,6 +979,18 @@ class ServeLoop:
         self._last_tick_stamp = t_land
         tok_ms = (t_land - (prev if prev is not None else e.t_dispatch)) * 1e3
         for slot, req in e.group:
+            if epochs.get(slot, req.epoch) != req.epoch:
+                continue  # stale landing from before this slot's retry
+            if (emitted[slot] and status is not None
+                    and int(status[slot]) >= STATUS_DIVERGED
+                    and req.error is None):
+                # mid-decode fault: contained in-jit (restart from z0);
+                # record the degradation stickily, keep generating
+                name = STATUS_NAMES.get(int(status[slot]),
+                                        str(int(status[slot])))
+                req.error = name
+                self._metrics.counter("serve_request_faults_total",
+                                      {"status": name}).inc()
             if emitted[slot]:
                 req.out.append(int(nxt[slot]))
                 self._metrics.histogram("serve_token_ms").observe(tok_ms)
@@ -882,9 +1059,12 @@ class ServeLoop:
                 if self.carries.max_age is not None:
                     self._count_sync("carry_stale", new_carry.age)
                 self.carries.update(new_carry)
-            steps = float(out[-1]) if self._record else None
+            status = out[-1] if self._guarded else None
+            core = out[:-1] if self._guarded else out
+            steps = float(core[-1]) if self._record else None
             self._count_sync("decode_fetch", logits)
             nxt = np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))
+        st = np.asarray(jax.device_get(status)) if status is not None else None
         tok_ms = (time.perf_counter() - t0) * 1e3
         self.lengths = self.lengths + jnp.asarray(mask, jnp.int32)
         self.cur_tok = jnp.where(jnp.asarray(mask), jnp.asarray(nxt),
@@ -893,6 +1073,16 @@ class ServeLoop:
         for s, req in enumerate(self.active):
             if req is None or req.done:
                 continue
+            if st is not None and int(st[s]) >= STATUS_DIVERGED:
+                # mid-decode fault: the solver already contained it in-jit
+                # (restart from z0 + ring reset), so the request keeps
+                # generating — but the degradation is recorded STICKILY so
+                # the caller can distrust the output
+                name = STATUS_NAMES.get(int(st[s]), str(int(st[s])))
+                if req.error is None:
+                    req.error = name
+                    self._metrics.counter("serve_request_faults_total",
+                                          {"status": name}).inc()
             tok = int(nxt[s])
             req.out.append(tok)
             # the tick's decode wall, once per token generated this tick

@@ -17,12 +17,14 @@ import time
 from typing import Callable, Iterator
 
 import jax
+import jax.numpy as jnp
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.implicit import ESTIMATORS, SOLVERS
 from repro.launch import steps
 from repro.launch.steps import TrainState  # re-export (legacy import path)
+from repro.obs import metrics as obs_metrics
 from repro.obs import tracing as obs_tracing
 from repro.parallel.sharding import ShardCtx
 from repro.runtime.ft import PreemptionGuard, StragglerWatchdog
@@ -96,12 +98,33 @@ class Trainer:
             template = jax.eval_shape(lambda: self.init_state())
             # pre-carry checkpoints lack .carry leaves; zero-fill == the
             # cold carry, so old runs resume with a cold warm-start state
+            # .skips joins .carry as forward-compatible state: pre-guard
+            # checkpoints lack it and zero == "no consecutive skips"
             _, state, _ = self.ckpt.restore(
                 template, shardings=self.state_sharding,
-                fill_missing_prefixes=(".carry",),
+                fill_missing_prefixes=(".carry", ".skips"),
             )
             return state
         return self.init_state()
+
+    def _rollback(self, at_step: int) -> TrainState:
+        """Past the consecutive-skip budget every recent update was rejected
+        (persistently non-finite loss/grads) — the run is wedged.  Restore
+        the last checkpoint (or re-init when none exists), loudly, and zero
+        the skip counter so the resumed run gets a full fresh budget."""
+        obs_metrics.default_registry().counter("train_rollbacks_total").inc()
+        budget = self.tcfg.skip_budget
+        if self.ckpt is not None and self.ckpt.latest_step() is not None:
+            fresh = self.restore_or_init()
+            print(f"step {at_step}: {budget}+ consecutive non-finite updates "
+                  f"— rolled back to checkpoint step {int(fresh.step)}")
+        else:
+            fresh = self.init_state()
+            print(f"step {at_step}: {budget}+ consecutive non-finite updates "
+                  f"and no checkpoint — re-initialized from scratch")
+        if fresh.skips is not None:
+            fresh = fresh._replace(skips=jnp.zeros((), jnp.int32))
+        return fresh
 
     def run(
         self,
@@ -143,6 +166,11 @@ class Trainer:
                     dt = (now - t_sync) / max(n_since, 1)
                     t_sync, n_since = now, 0
                     self.watchdog.record(host, dt)
+                    self.watchdog.publish_metrics()
+                    if (self.tcfg.skip_nonfinite and
+                            metrics.get("consec_skips", 0.0)
+                            >= self.tcfg.skip_budget):
+                        state = self._rollback(i + 1)
                     if on_metrics:
                         on_metrics(i + 1, metrics)
                     else:

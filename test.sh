@@ -23,6 +23,15 @@
 #                          report with its qN bytes-accounting gate
 #                          (benchmarks/roofline.py) + the obs rehearsals
 #                          (./test.sh obs) — no network, no installs
+#   ./test.sh chaos        numerical-fault chaos suite (tests/test_chaos.py):
+#                          all five injected fault classes — non-finite
+#                          iterate, diverging solve, corrupted qN ring,
+#                          poisoned prefix-cache entry, SIGTERM preemption —
+#                          must be detected, contained, and recovered; the
+#                          injected-fault metrics snapshot lands at
+#                          results/chaos/metrics.json (CI uploads it), and
+#                          the guard-overhead gate enforces the <= 5% wall
+#                          budget of the always-on guards
 #   ./test.sh lint         ruff when available, else a dependency-free
 #                          compileall pass (the container has no linter)
 #   ./test.sh tests/x.py   pass any pytest args through (ungated)
@@ -130,6 +139,23 @@ case "${1:-}" in
     python -m benchmarks.roofline
     run_obs
     echo "ci: tier-1 + kernel sweep + bench gates + obs rehearsals all green"
+    ;;
+  chaos)
+    shift
+    mkdir -p results/chaos results/junit
+    CHAOS_METRICS_OUT=results/chaos/metrics.json \
+      python -m pytest -q tests/test_chaos.py \
+      --junitxml=results/junit/chaos.xml "$@"
+    python -m benchmarks.check_regression --guard-overhead
+    python - <<'EOF'
+import json
+snap = json.load(open("results/chaos/metrics.json"))
+assert snap["schema"] == "repro.obs.metrics/v1" and snap["metrics"]
+names = {m["name"] for m in snap["metrics"]}
+assert "solve_failures_total" in names, "no injected solve faults recorded"
+print(f"chaos: all fault classes contained; metrics snapshot at "
+      f"results/chaos/metrics.json ({len(snap['metrics'])} series)")
+EOF
     ;;
   lint)
     shift

@@ -332,7 +332,10 @@ def test_restore_pre_carry_checkpoint_zero_fills_cold_carry(tmp_path):
     template = jax.eval_shape(lambda: steps.init_train_state(cfg, tcfg, CTX))
     with pytest.raises(KeyError):
         mgr.restore(template)  # not opted in -> loud failure
-    _, restored, _ = mgr.restore(template, fill_missing_prefixes=(".carry",))
+    # .skips rides along: like .carry it is forward-compatible state the
+    # legacy writer didn't have (zero == "no consecutive skipped updates")
+    _, restored, _ = mgr.restore(template,
+                                 fill_missing_prefixes=(".carry", ".skips"))
     assert not bool(np.asarray(restored.carry.warm).any())
     assert int(np.asarray(restored.carry.lowrank.count).max()) == 0
     a = jax.tree_util.tree_leaves(state.params)[0]
